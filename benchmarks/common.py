@@ -1,0 +1,45 @@
+"""Shared benchmark scaffolding.
+
+CSV convention (benchmarks/run.py): ``name,us_per_call,derived`` — one
+row per measured configuration, ``derived`` carrying the table-specific
+secondary metric (bits/component, recall, GB, …).
+
+All wall-clock numbers here are single-thread CPU-XLA / numpy: the paper
+measures single-thread Rust+SIMD, so absolute values differ; the
+*relative* codec orderings are what reproduce (EXPERIMENTS.md
+§Paper-fidelity). TPU projections come from the roofline, not timers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["timeit_us", "Row", "emit"]
+
+
+def timeit_us(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+class Row:
+    def __init__(self, name: str, us_per_call: float, derived: str):
+        self.name, self.us, self.derived = name, us_per_call, derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.1f},{self.derived}"
+
+
+def emit(rows: list[Row]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())

@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks + HBM-payload accounting.
+
+Wall-times are CPU (jnp path jit-compiled; the Pallas kernel itself runs
+interpret=True here, so its number measures the *semantics*, not Mosaic
+codegen). The ``derived`` column carries the quantity that transfers to
+TPU: bytes the scoring pass streams from HBM per scan — the memory-
+roofline numerator the §Perf iterations drive down."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.forward_index import pack_forward_index
+from repro.core.scoring import score_packed
+from repro.data.synthetic import generate_collection, splade_config
+from repro.kernels.ops import score_bitpack_bucketed, score_dotvbyte
+
+from .common import Row, timeit_us
+
+
+def run(n_docs: int = 2000) -> list[Row]:
+    col = generate_collection(splade_config(n_docs=n_docs, n_queries=4), value_format="f16")
+    q = col.query_dense(0)
+    rows: list[Row] = []
+
+    for codec in ("uncompressed", "dotvbyte", "bitpack"):
+        packed = pack_forward_index(col.fwd, codec=codec)
+        us = timeit_us(lambda p=packed: score_packed(q, p).block_until_ready())
+        rows.append(
+            Row(f"kernel/jnp_scan/{codec}", us,
+                f"hbm_payload_mb={packed.payload_bytes()/2**20:.2f}")
+        )
+
+    pd = pack_forward_index(col.fwd, codec="dotvbyte")
+    us = timeit_us(lambda: np.asarray(score_dotvbyte(q, pd, interpret=True)), repeats=1)
+    rows.append(Row("kernel/pallas_interpret/dotvbyte", us, "semantic-check-only"))
+
+    pb = pack_forward_index(col.fwd, codec="bitpack")
+    tight = sum(
+        ((pb.block_size * int(w) + 31) // 32) * 4 for w in pb.widths
+    )
+    padded = pb.words.nbytes
+    us = timeit_us(lambda: np.asarray(score_bitpack_bucketed(q, pb, interpret=True)), repeats=1)
+    rows.append(
+        Row("kernel/pallas_interpret/bitpack_bucketed", us,
+            f"tight_words_mb={tight/2**20:.2f};padded_words_mb={padded/2**20:.2f}")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

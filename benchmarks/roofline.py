@@ -1,0 +1,71 @@
+"""§Roofline table builder: reads the dry-run JSON records
+(experiments/dryrun/<mesh>/) and renders the per-(arch × shape) roofline
+terms as markdown for EXPERIMENTS.md.
+
+Run the dry-run first:  PYTHONPATH=src python -m repro.launch.dryrun
+Then:                    PYTHONPATH=src python -m benchmarks.roofline
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Row
+
+__all__ = ["load_records", "markdown_table", "run"]
+
+
+def load_records(base: str = "experiments/dryrun", mesh: str = "pod256") -> list[dict]:
+    d = os.path.join(base, mesh)
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs: list[dict]) -> str:
+    head = (
+        "| arch | shape | kind | compute_s | memory_s | collective_s | dominant "
+        "| mem/dev GiB | MODEL_FLOPs | useful ratio | MFU bound |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in recs:
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {ro['compute_s']:.2e} | {ro['memory_s']:.2e} | {ro['collective_s']:.2e} "
+            f"| **{ro['dominant']}** "
+            f"| {r['memory']['peak_device_bytes']/2**30:.2f} "
+            f"| {ro['model_flops']:.2e} | {ro['useful_flops_ratio']:.3f} "
+            f"| {ro['mfu_upper_bound']:.3f} |"
+        )
+    return head + "\n".join(lines)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for mesh in ("pod256", "pod512x2"):
+        for r in load_records(mesh=mesh):
+            ro = r["roofline"]
+            rows.append(
+                Row(
+                    f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                    ro["step_lower_bound_s"] * 1e6,
+                    f"dominant={ro['dominant']};mfu_bound={ro['mfu_upper_bound']:.3f}",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh in ("pod256", "pod512x2"):
+        recs = load_records(mesh=mesh)
+        if recs:
+            print(f"\n## {mesh}\n")
+            print(markdown_table(recs))

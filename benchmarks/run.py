@@ -1,0 +1,51 @@
+"""Benchmark entry point — one section per paper table + kernel/roofline
+extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --fast     # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --only table1
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced collection sizes")
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "table2", "kernel", "roofline"])
+    args = ap.parse_args()
+
+    rows = []
+    t0 = time.time()
+
+    def section(name, fn):
+        if args.only and args.only != name:
+            return
+        print(f"# running {name}…", file=sys.stderr, flush=True)
+        rows.extend(fn())
+
+    from . import kernel_bench, roofline, table1_codecs, table2_seismic
+
+    if args.fast:
+        section("table1", lambda: table1_codecs.run(n_docs=1500, n_queries=2, rgb_iters=3))
+        section("table2", lambda: table2_seismic.run(n_docs=1200, n_queries=6))
+        section("kernel", lambda: kernel_bench.run(n_docs=800))
+    else:
+        section("table1", lambda: table1_codecs.run())
+        section("table2", lambda: table2_seismic.run())
+        section("kernel", lambda: kernel_bench.run())
+    section("roofline", roofline.run)
+
+    emit(rows)
+    print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

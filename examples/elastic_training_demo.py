@@ -1,0 +1,64 @@
+"""Fault-tolerance demo (deliverable b, extra): train a reduced LM with
+injected failures and show checkpoint/restart recovery producing the
+same final state as a fault-free run — the property that makes the
+framework deployable on preemptible fleets.
+
+Run:  PYTHONPATH=src python examples/elastic_training_demo.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as tf_m
+from repro.train.elastic import FaultInjector, Runner, RunnerConfig
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main() -> None:
+    arch = get_arch("qwen3-8b")
+    cfg = arch.smoke_cfg
+    key = jax.random.PRNGKey(0)
+    params = tf_m.init_params(key, cfg)
+    oinit, oupd = make_optimizer(arch.optimizer)
+    step = jax.jit(make_train_step(
+        lambda p, b: tf_m.lm_loss(p, cfg, b["tokens"], b["labels"]), oupd))
+
+    def batch_fn(i):
+        kk = jax.random.fold_in(key, i)
+        toks = jax.random.randint(kk, (8, 33), 0, cfg.vocab)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def run(faults):
+        with tempfile.TemporaryDirectory() as d:
+            runner = Runner(
+                RunnerConfig(total_steps=60, checkpoint_dir=d, checkpoint_every=10),
+                step, batch_fn, init_train_state(params, oinit),
+                fault_injector=FaultInjector(fail_at=faults),
+            )
+            state, hist = runner.run()
+            return state, hist, runner.restarts
+
+    print("fault-free run…")
+    s0, h0, r0 = run(())
+    print(f"  60 steps, restarts={r0}, final loss={h0[-1]['loss']:.4f}")
+
+    print("run with injected faults at steps 17 and 41…")
+    s1, h1, r1 = run((17, 41))
+    print(f"  {len(h1)} step records (incl. replays), restarts={r1}, "
+          f"final loss={h1[-1]['loss']:.4f}")
+
+    diff = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(s0["params"]), jax.tree.leaves(s1["params"]))
+    )
+    print(f"max |param diff| fault-free vs recovered: {diff:.2e} "
+          f"({'EXACT' if diff == 0 else 'deterministic replay within fp tolerance'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Config registry: ``--arch <id>`` resolution for every launcher.
+
+The 10 assigned architectures (×4 shapes each = 40 dry-run cells) plus
+the paper's own retrieval configs (extra cells)."""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+__all__ = ["ARCH_IDS", "RETRIEVAL_IDS", "get_arch", "all_cells"]
+
+ARCH_IDS = (
+    # LM family
+    "olmoe-1b-7b",
+    "kimi-k2-1t-a32b",
+    "qwen3-8b",
+    "yi-6b",
+    "deepseek-coder-33b",
+    # GNN
+    "gat-cora",
+    # RecSys
+    "deepfm",
+    "sasrec",
+    "dcn-v2",
+    "din",
+)
+
+RETRIEVAL_IDS = ("msmarco-splade", "msmarco-lilsr")
+
+_MODULES = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen3-8b": "qwen3_8b",
+    "yi-6b": "yi_6b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "gat-cora": "gat_cora",
+    "deepfm": "deepfm",
+    "sasrec": "sasrec",
+    "dcn-v2": "dcn_v2",
+    "din": "din",
+    "msmarco-splade": "msmarco_splade",
+    "msmarco-lilsr": "msmarco_lilsr",
+}
+
+
+def get_arch(arch_id: str):
+    """Resolve an arch id. Retrieval configs accept a ``-optN`` suffix
+    selecting the §Perf optimisation level (see configs/retrieval.py)."""
+    opt = 0
+    base = arch_id
+    if "-opt" in arch_id:
+        base, _, lvl = arch_id.rpartition("-opt")
+        opt = int(lvl)
+    if base not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    arch = import_module(f"repro.configs.{_MODULES[base]}").ARCH
+    if opt:
+        import dataclasses
+
+        arch = dataclasses.replace(arch, name=arch_id, opt=opt)
+    return arch
+
+
+def all_cells(include_retrieval: bool = True):
+    """Yield (arch_id, shape_name) for every dry-run cell."""
+    ids = ARCH_IDS + (RETRIEVAL_IDS if include_retrieval else ())
+    for a in ids:
+        arch = get_arch(a)
+        for s in arch.shape_names:
+            yield a, s

@@ -1,0 +1,664 @@
+"""Arch/Cell abstraction: every assigned architecture is a selectable
+config exposing, per input shape, everything the dry-run needs:
+
+    build_cell(shape, mesh) -> Cell(fn, input_structs, in_shardings,
+                                    out_shardings, meta)
+
+``fn`` is the jit-able step (train_step / prefill / decode / serve);
+``input_structs`` are ShapeDtypeStructs (weak-type-correct, never
+allocated); shardings are NamedShardings built from the family rules in
+repro.dist.sharding. ``jax.jit(fn, in_shardings=…).lower(*structs)
+.compile()`` must succeed on the 16×16 and 2×16×16 meshes — that is the
+multi-pod dry-run contract.
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) is reported per cell for
+the §Roofline useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import gnn as gnn_m
+from repro.models import recsys as rec_m
+from repro.models import transformer as tf_m
+from repro.models.moe import MoEConfig
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.train_step import make_train_step
+
+__all__ = ["Cell", "BaseArch", "LMArch", "GNNArch", "RecsysArch", "count_abstract_params"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve
+    fn: Callable
+    input_structs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    model_flops: float  # 6·N·D (per executed step, global)
+    meta: dict
+
+
+def count_abstract_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def _sds(tree_of_abstract):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree_of_abstract
+    )
+
+
+class BaseArch:
+    # NOTE: bare annotations only — assigning defaults here would leak
+    # into subclass dataclass field defaults via getattr().
+    name: str
+    family: str
+    shape_names: tuple[str, ...]
+
+    def build_cell(self, shape: str, mesh: Mesh) -> Cell:
+        raise NotImplementedError
+
+    # smoke-test hook: return (loss_value, metrics) on a tiny CPU config
+    def smoke(self, seed: int = 0) -> dict:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state spec mirroring
+# ---------------------------------------------------------------------------
+
+
+def _adamw_state_specs(param_specs):
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def _adafactor_state_specs(param_specs, abstract_params, opt_cfg: OptimizerConfig):
+    from repro.train.optimizer import _factored
+
+    def one(spec, p):
+        if _factored(p, opt_cfg):
+            return {
+                "vr": P(*spec[: p.ndim - 1]) if len(spec) else P(),
+                "vc": P(*spec[: p.ndim - 2], *spec[p.ndim - 1 : p.ndim]) if len(spec) else P(),
+            }
+        return {"v": spec}
+
+    second = jax.tree.map(
+        one, param_specs, abstract_params, is_leaf=lambda x: isinstance(x, P)
+    )
+    return {"second": second, "step": P()}
+
+
+def _state_specs(param_specs, abstract_params, opt_cfg: OptimizerConfig):
+    if opt_cfg.name == "adamw":
+        opt = _adamw_state_specs(param_specs)
+    else:
+        opt = _adafactor_state_specs(param_specs, abstract_params, opt_cfg)
+    return {"params": param_specs, "opt": opt}
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+@dataclasses.dataclass
+class LMArch(BaseArch):
+    name: str
+    cfg: tf_m.TransformerConfig
+    optimizer: OptimizerConfig
+    family: str = "lm"
+    microbatches: int = 1
+    shape_names: tuple[str, ...] = tuple(LM_SHAPES)
+    smoke_cfg: tf_m.TransformerConfig | None = None
+
+    # -- abstract state ---------------------------------------------------
+    def abstract_params(self):
+        return jax.eval_shape(lambda k: tf_m.init_params(k, self.cfg), jax.random.PRNGKey(0))
+
+    def model_flops(self, shape: str) -> float:
+        """6 · N_active · tokens (train counts fwd+bwd ⇒ 3× fwd pair)."""
+        sh = LM_SHAPES[shape]
+        n = self._active_params()
+        tokens = sh["global_batch"] * (sh["seq_len"] if sh["kind"] != "decode" else 1)
+        per_tok = 6.0 * n if sh["kind"] == "train" else 2.0 * n
+        return per_tok * tokens
+
+    def _active_params(self) -> float:
+        c = self.cfg
+        dh = c.head_dim
+        attn = c.d_model * dh * (2 * c.n_heads + 2 * c.n_kv_heads)
+        if c.moe is None:
+            ffn = 3 * c.d_model * c.d_ff
+        else:
+            ffn = 3 * c.d_model * c.moe.d_ff * (c.moe.top_k + c.moe.n_shared_experts)
+            ffn += c.d_model * c.moe.n_experts  # router
+        body = c.n_layers * (attn + ffn)
+        embed = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+        return float(body + embed)
+
+    # -- cells -------------------------------------------------------------
+    def build_cell(self, shape: str, mesh: Mesh) -> Cell:
+        sh = LM_SHAPES[shape]
+        cfg = self.cfg
+        if shape == "prefill_32k":
+            cfg = dataclasses.replace(cfg, attention_impl="chunked", attention_chunk=2048)
+        if cfg.moe is not None and sh["kind"] == "train":
+            # microbatched training re-gathers per microbatch → ZeRO-3
+            # expert gathering loses there (EXPERIMENTS.md §Perf)
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, jit_weight_gather=False)
+            )
+        pspecs = shd.lm_param_specs(cfg, mesh)
+        da = shd.data_axes(mesh)
+        B, S = sh["global_batch"], sh["seq_len"]
+        abs_params = self.abstract_params()
+
+        if sh["kind"] == "train":
+            oinit, oupd = make_optimizer(self.optimizer)
+            loss_fn = lambda p, b: tf_m.lm_loss(p, cfg, b["tokens"], b["labels"])
+            step = make_train_step(loss_fn, oupd, microbatches=self.microbatches)
+            abs_state = jax.eval_shape(
+                lambda p: {"params": p, "opt": oinit(p)}, abs_params
+            )
+            sspecs = _state_specs(pspecs, abs_params, self.optimizer)
+            bspec = {"tokens": P(da, None), "labels": P(da, None)}
+            structs = (
+                _sds(abs_state),
+                {
+                    "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                },
+            )
+            return Cell(
+                self.name, shape, "train", step, structs,
+                (shd.to_shardings(mesh, sspecs), shd.to_shardings(mesh, bspec)),
+                (shd.to_shardings(mesh, sspecs), None),
+                self.model_flops(shape),
+                {"tokens_per_step": B * S, "params": count_abstract_params(abs_params)},
+            )
+
+        if sh["kind"] == "prefill":
+            def prefill(params, tokens):
+                logits, aux = tf_m.forward(params, cfg, tokens, collect_kv=True)
+                return logits[:, -1, :], aux["kv_cache"]
+
+            cache_spec = shd.kv_cache_spec(mesh, batch=B, seq_shard=False)
+            structs = (
+                _sds(abs_params),
+                jax.ShapeDtypeStruct((B, S), jnp.int32),
+            )
+            out_spec = (P(da, "model"), cache_spec)
+            return Cell(
+                self.name, shape, "prefill", prefill, structs,
+                (shd.to_shardings(mesh, pspecs), shd.to_shardings(mesh, P(da, None))),
+                shd.to_shardings(mesh, out_spec),
+                self.model_flops(shape),
+                {"tokens_per_step": B * S, "params": count_abstract_params(abs_params)},
+            )
+
+        # decode: weights TP-only when they fit (no per-step FSDP weight
+        # traffic); gathering hints off either way (§Perf, decode cells)
+        param_bytes = count_abstract_params(abs_params) * 2  # bf16
+        tp_fits = param_bytes / mesh.shape["model"] <= 8 * 2**30
+        moe_cfg = cfg.moe
+        if moe_cfg is not None:
+            moe_cfg = dataclasses.replace(moe_cfg, jit_weight_gather=False)
+        cfg = dataclasses.replace(cfg, jit_weight_gather=False, moe=moe_cfg)
+        pspecs = shd.lm_param_specs(cfg, mesh, fsdp=not tp_fits)
+        seq_shard = shape == "long_500k"
+        cache_spec = shd.kv_cache_spec(mesh, batch=B, seq_shard=seq_shard)
+        if seq_shard:
+            attn_fn = _flash_attn_factory(mesh, batch_axes=(), seq_axes=(*da, "model"))
+        else:
+            attn_fn = _flash_attn_factory(mesh, batch_axes=da, seq_axes=("model",))
+
+        def decode(params, cache, tokens, lengths):
+            return tf_m.decode_step(params, cfg, cache, tokens, lengths, attn_fn=attn_fn)
+
+        cache_structs = _sds(
+            jax.eval_shape(lambda: tf_m.init_kv_cache(cfg, B, S))
+        )
+        structs = (
+            _sds(abs_params),
+            cache_structs,
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        )
+        tok_spec = P(da, None) if not seq_shard else P(None, None)
+        len_spec = P(da) if not seq_shard else P(None)
+        in_shard = (
+            shd.to_shardings(mesh, pspecs),
+            shd.to_shardings(mesh, cache_spec),
+            shd.to_shardings(mesh, tok_spec),
+            shd.to_shardings(mesh, len_spec),
+        )
+        out_shard = (
+            shd.to_shardings(mesh, P(da, "model") if not seq_shard else P(None, "model")),
+            shd.to_shardings(mesh, cache_spec),
+        )
+        return Cell(
+            self.name, shape, "decode", decode, structs, in_shard, out_shard,
+            self.model_flops(shape),
+            {"tokens_per_step": B, "params": count_abstract_params(abs_params),
+             "kv_bytes": sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                             for l in jax.tree.leaves(cache_structs))},
+        )
+
+    # -- smoke -------------------------------------------------------------
+    def smoke(self, seed: int = 0) -> dict:
+        cfg = self.smoke_cfg
+        assert cfg is not None, f"{self.name}: no smoke config"
+        key = jax.random.PRNGKey(seed)
+        params = tf_m.init_params(key, cfg)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+        opt = OptimizerConfig(name=self.optimizer.name, lr=1e-3, warmup_steps=2, total_steps=10)
+        oinit, oupd = make_optimizer(opt)
+        step = jax.jit(make_train_step(
+            lambda p, b: tf_m.lm_loss(p, cfg, b["tokens"], b["labels"]), oupd))
+        state = {"params": params, "opt": oinit(params)}
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        state, m1 = step(state, batch)
+        state, m2 = step(state, batch)
+        logits, _ = tf_m.forward(params, cfg, toks)
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert np.isfinite(float(m2["loss"]))
+        # decode smoke
+        cache = tf_m.init_kv_cache(cfg, 2, 8)
+        lg, cache = tf_m.decode_step(params, cfg, cache, toks[:, :1], jnp.zeros(2, jnp.int32))
+        assert lg.shape == (2, cfg.vocab) and bool(jnp.isfinite(lg).all())
+        return {"loss0": float(m1["loss"]), "loss1": float(m2["loss"])}
+
+
+def _flash_attn_factory(mesh, batch_axes, seq_axes):
+    from repro.dist.collectives import flash_decode_shardmap
+
+    return flash_decode_shardmap(mesh, batch_axes=batch_axes, seq_axes=seq_axes)
+
+
+# ---------------------------------------------------------------------------
+# GNN family (GAT)
+# ---------------------------------------------------------------------------
+
+# Static budgets are padded to multiples of 512 so node/edge arrays shard
+# over the 512-chip multi-pod mesh (sentinel padding is mathematically
+# neutral — see models/gnn.py). True dataset sizes are kept in `true_*`.
+GNN_SHAPES = {
+    "full_graph_sm": dict(
+        kind="train", n_nodes=3071, n_edges=10752, d_feat=1433, n_classes=7,
+        true_nodes=2708, true_edges=10556,  # Cora
+    ),
+    "minibatch_lg": dict(
+        kind="train", n_nodes=170_495, n_edges=168_960, d_feat=602, n_classes=41,
+        sampled=True, batch_nodes=1024, fanout=(15, 10),
+        true_nodes=232_965, true_edges=114_615_892,  # Reddit (sampled)
+    ),
+    "ogb_products": dict(
+        kind="train", n_nodes=2_449_407, n_edges=61_865_984, d_feat=100, n_classes=47,
+        true_nodes=2_449_029, true_edges=61_859_140,  # ogbn-products
+    ),
+    "molecule": dict(
+        kind="train", n_nodes=4095, n_edges=8192, d_feat=16, n_classes=2,
+        graphs=128, true_nodes=30 * 128, true_edges=64 * 128,
+    ),
+}
+
+
+@dataclasses.dataclass
+class GNNArch(BaseArch):
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    family: str = "gnn"
+    optimizer: OptimizerConfig = dataclasses.field(
+        default_factory=lambda: OptimizerConfig(lr=5e-3, weight_decay=5e-4)
+    )
+    shape_names: tuple[str, ...] = tuple(GNN_SHAPES)
+    # §Perf: 0 = jit auto-sharding baseline; 1 = dst-aligned edge-sharded
+    # shard_map layer (one all-gather per layer, local scatter/softmax)
+    opt: int = 0
+
+    def _cfg(self, shape: str) -> gnn_m.GATConfig:
+        sh = GNN_SHAPES[shape]
+        return gnn_m.GATConfig(
+            name=self.name, n_layers=self.n_layers, d_in=sh["d_feat"],
+            d_hidden=self.d_hidden, n_heads=self.n_heads, n_classes=sh["n_classes"],
+        )
+
+    def model_flops(self, shape: str) -> float:
+        sh = GNN_SHAPES[shape]
+        cfg = self._cfg(shape)
+        H, d = cfg.n_heads, cfg.d_hidden
+        l1 = sh["n_nodes"] * cfg.d_in * H * d * 2 + sh["n_edges"] * H * (4 * d)
+        l2 = sh["n_nodes"] * (H * d) * H * cfg.n_classes * 2 + sh["n_edges"] * H * 4 * cfg.n_classes
+        return 3.0 * (l1 + l2)  # fwd+bwd
+
+    def build_cell(self, shape: str, mesh: Mesh) -> Cell:
+        sh = GNN_SHAPES[shape]
+        cfg = self._cfg(shape)
+        N, E = sh["n_nodes"], sh["n_edges"]
+        abs_params = jax.eval_shape(lambda k: gnn_m.gat_init(k, cfg), jax.random.PRNGKey(0))
+        pspecs = shd.replicate(abs_params)
+        oinit, oupd = make_optimizer(self.optimizer)
+
+        graphs = sh.get("graphs")
+        flat_axes = (*shd.data_axes(mesh), "model")
+        use_sharded = self.opt >= 1 and not graphs and not sh.get("sampled")
+
+        def loss_fn(params, batch):
+            if use_sharded:
+                return gnn_m.gat_loss_edge_sharded(
+                    params, cfg, batch, mesh, flat_axes,
+                    min_side_gather=self.opt >= 2,
+                )
+            if graphs:
+                gid = batch.pop("graph_ids")
+                glab = batch.pop("graph_labels")
+                g = gnn_m.Graph(**batch)
+                return gnn_m.gat_graph_loss(params, cfg, g, gid, glab, graphs)
+            g = gnn_m.Graph(**batch)
+            return gnn_m.gat_loss(params, cfg, g)
+
+        step = make_train_step(loss_fn, oupd)
+        abs_state = jax.eval_shape(lambda p: {"params": p, "opt": oinit(p)}, abs_params)
+        sspecs = _state_specs(pspecs, abs_params, self.optimizer)
+        bspec = shd.gnn_batch_spec(mesh)
+        structs = (
+            _sds(abs_state),
+            {
+                "x": jax.ShapeDtypeStruct((N + 1, sh["d_feat"]), jnp.float32),
+                "edge_src": jax.ShapeDtypeStruct((E,), jnp.int32),
+                "edge_dst": jax.ShapeDtypeStruct((E,), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((N + 1,), jnp.int32),
+                "train_mask": jax.ShapeDtypeStruct((N + 1,), jnp.bool_),
+            },
+        )
+        if graphs:
+            structs[1]["graph_ids"] = jax.ShapeDtypeStruct((N + 1,), jnp.int32)
+            structs[1]["graph_labels"] = jax.ShapeDtypeStruct((graphs,), jnp.int32)
+            bspec = dict(bspec)
+            bspec["graph_ids"] = P(shd.data_axes(mesh))
+            bspec["graph_labels"] = P(None)
+        if use_sharded:
+            # dst-aligned contract: float mask, flat node/edge sharding
+            structs[1]["train_mask"] = jax.ShapeDtypeStruct((N + 1,), jnp.float32)
+            bspec = {
+                "x": P(flat_axes, None),
+                "edge_src": P(flat_axes),
+                "edge_dst": P(flat_axes),
+                "labels": P(flat_axes),
+                "train_mask": P(flat_axes),
+            }
+        return Cell(
+            self.name, shape, "train", step, structs,
+            (shd.to_shardings(mesh, sspecs), shd.to_shardings(mesh, bspec)),
+            (shd.to_shardings(mesh, sspecs), None),
+            self.model_flops(shape),
+            {"params": count_abstract_params(abs_params), "edges": E},
+        )
+
+    def smoke(self, seed: int = 0) -> dict:
+        rng = np.random.default_rng(seed)
+        N, E, F, C = 64, 256, 12, 5
+        cfg = gnn_m.GATConfig(name="smoke", d_in=F, n_classes=C,
+                              d_hidden=self.d_hidden, n_heads=self.n_heads)
+        g = gnn_m.pad_graph(
+            rng.normal(size=(N, F)).astype(np.float32),
+            rng.integers(0, N, size=(2, E)),
+            rng.integers(0, C, size=N),
+            rng.random(N) < 0.5,
+        )
+        params = gnn_m.gat_init(jax.random.PRNGKey(seed), cfg)
+        oinit, oupd = make_optimizer(self.optimizer)
+        step = jax.jit(make_train_step(
+            lambda p, b: gnn_m.gat_loss(p, cfg, gnn_m.Graph(**b)), oupd))
+        state = {"params": params, "opt": oinit(params)}
+        batch = dict(x=g.x, edge_src=g.edge_src, edge_dst=g.edge_dst,
+                     labels=g.labels, train_mask=g.train_mask)
+        losses = []
+        for _ in range(3):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert np.isfinite(losses).all()
+        # sampler smoke
+        smp = gnn_m.NeighborSampler(np.asarray(rng.integers(0, N, size=(2, E))), N)
+        nid, es, ed = smp.sample_padded(np.arange(4), (3, 2), 64, 128)
+        assert len(nid) == 64 and len(es) == 128
+        return {"losses": losses}
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+REC_SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    # candidates padded 1,000,000 → 1,000,448 (divisible by the 512-chip flat mesh)
+    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=1_000_448),
+}
+
+
+@dataclasses.dataclass
+class RecsysArch(BaseArch):
+    name: str
+    cfg: Any = None
+    family: str = "recsys"
+    optimizer: OptimizerConfig = dataclasses.field(
+        default_factory=lambda: OptimizerConfig(lr=1e-3)
+    )
+    shape_names: tuple[str, ...] = tuple(REC_SHAPES)
+    smoke_cfg: Any = None
+
+    # dispatch tables -------------------------------------------------------
+    def _fns(self, cfg):
+        m = cfg.name
+        if m == "deepfm":
+            return rec_m.deepfm_init, rec_m.deepfm_loss, rec_m.deepfm_forward
+        if m == "dcn-v2":
+            return rec_m.dcnv2_init, rec_m.dcnv2_loss, rec_m.dcnv2_forward
+        if m == "sasrec":
+            return rec_m.sasrec_init, rec_m.sasrec_loss, None
+        if m == "din":
+            return rec_m.din_init, rec_m.din_loss, None
+        raise KeyError(m)
+
+    def _batch_structs(self, cfg, B: int) -> dict:
+        m = cfg.name
+        sds = jax.ShapeDtypeStruct
+        if m == "deepfm":
+            return {"sparse": sds((B, cfg.n_fields), jnp.int32), "label": sds((B,), jnp.float32)}
+        if m == "dcn-v2":
+            return {
+                "dense": sds((B, cfg.n_dense), jnp.float32),
+                "sparse": sds((B, cfg.n_fields), jnp.int32),
+                "label": sds((B,), jnp.float32),
+            }
+        if m == "sasrec":
+            return {
+                "seq": sds((B, cfg.seq_len), jnp.int32),
+                "pos_label": sds((B, cfg.seq_len), jnp.int32),
+                "neg_label": sds((B, cfg.seq_len, cfg.n_negatives), jnp.int32),
+            }
+        if m == "din":
+            return {
+                "hist": sds((B, cfg.seq_len), jnp.int32),
+                "target": sds((B,), jnp.int32),
+                "label": sds((B,), jnp.float32),
+            }
+        raise KeyError(m)
+
+    def _smoke_batch(self, cfg, B: int, key) -> dict:
+        structs = self._batch_structs(cfg, B)
+
+        def rnd(s):
+            if s.dtype == jnp.int32:
+                return jax.random.randint(key, s.shape, 0, 32)
+            return jax.random.uniform(key, s.shape)
+
+        return jax.tree.map(rnd, structs)
+
+    def model_flops(self, shape: str) -> float:
+        cfg = self.cfg
+        sh = REC_SHAPES[shape]
+        B = sh.get("n_candidates", sh["batch"]) if shape == "retrieval_cand" else sh["batch"]
+        m = cfg.name
+        if m == "deepfm":
+            per = cfg.n_fields * cfg.embed_dim * (2 + 2 * cfg.mlp[0]) + sum(
+                2 * a * b for a, b in zip(cfg.mlp[:-1], cfg.mlp[1:])
+            )
+        elif m == "dcn-v2":
+            d = cfg.d_interact
+            per = cfg.n_cross_layers * 2 * d * d + 2 * d * cfg.mlp[0] + sum(
+                2 * a * b for a, b in zip(cfg.mlp[:-1], cfg.mlp[1:])
+            )
+        elif m == "sasrec":
+            D, S = cfg.embed_dim, cfg.seq_len
+            per = cfg.n_blocks * (8 * S * D * D + 4 * S * S * D) + S * D * 2 * (
+                1 + cfg.n_negatives
+            )
+        else:  # din
+            D, S = cfg.embed_dim, cfg.seq_len
+            per = S * (2 * 4 * D * cfg.attn_mlp[0] + 2 * cfg.attn_mlp[0] * cfg.attn_mlp[1]) + \
+                2 * 3 * D * cfg.mlp[0] + 2 * cfg.mlp[0] * cfg.mlp[1]
+        mult = 3.0 if sh["kind"] == "train" else 1.0
+        return float(per) * B * mult
+
+    def build_cell(self, shape: str, mesh: Mesh) -> Cell:
+        sh = REC_SHAPES[shape]
+        cfg = self.cfg
+        init_fn, loss_fn_raw, fwd_fn = self._fns(cfg)
+        abs_params = jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+        pspecs = shd.recsys_param_specs(cfg.name, abs_params, mesh)
+        da = shd.data_axes(mesh)
+        B = sh["batch"]
+
+        if sh["kind"] == "train":
+            oinit, oupd = make_optimizer(self.optimizer)
+            step = make_train_step(lambda p, b: loss_fn_raw(p, cfg, b), oupd)
+            abs_state = jax.eval_shape(lambda p: {"params": p, "opt": oinit(p)}, abs_params)
+            sspecs = _state_specs(pspecs, abs_params, self.optimizer)
+            bspec = shd.recsys_batch_spec(cfg.name, mesh)
+            return Cell(
+                self.name, shape, "train", step,
+                (_sds(abs_state), self._batch_structs(cfg, B)),
+                (shd.to_shardings(mesh, sspecs), shd.to_shardings(mesh, bspec)),
+                (shd.to_shardings(mesh, sspecs), None),
+                self.model_flops(shape),
+                {"params": count_abstract_params(abs_params)},
+            )
+
+        if shape == "retrieval_cand":
+            N = sh["n_candidates"]
+            flat = (*da, "model")
+            if cfg.name == "deepfm":
+                fn = lambda p, u, c: rec_m.deepfm_score_candidates(p, cfg, u, c, 3)
+                structs = (
+                    _sds(abs_params),
+                    jax.ShapeDtypeStruct((1, cfg.n_fields), jnp.int32),
+                    jax.ShapeDtypeStruct((N,), jnp.int32),
+                )
+                in_sh = (shd.to_shardings(mesh, pspecs),
+                         shd.to_shardings(mesh, P(None, None)),
+                         shd.to_shardings(mesh, P(flat)))
+                out_sh = shd.to_shardings(mesh, P(flat))
+            elif cfg.name == "dcn-v2":
+                fn = lambda p, ud, us, c: rec_m.dcnv2_score_candidates(p, cfg, ud, us, c, 3)
+                structs = (
+                    _sds(abs_params),
+                    jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32),
+                    jax.ShapeDtypeStruct((1, cfg.n_fields), jnp.int32),
+                    jax.ShapeDtypeStruct((N,), jnp.int32),
+                )
+                in_sh = (shd.to_shardings(mesh, pspecs),
+                         shd.to_shardings(mesh, P(None, None)),
+                         shd.to_shardings(mesh, P(None, None)),
+                         shd.to_shardings(mesh, P(flat)))
+                out_sh = shd.to_shardings(mesh, P(flat))
+            elif cfg.name == "sasrec":
+                fn = lambda p, s, c: rec_m.sasrec_score_candidates(p, cfg, s, c)
+                structs = (
+                    _sds(abs_params),
+                    jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32),
+                    jax.ShapeDtypeStruct((N,), jnp.int32),
+                )
+                in_sh = (shd.to_shardings(mesh, pspecs),
+                         shd.to_shardings(mesh, P(None, None)),
+                         shd.to_shardings(mesh, P(flat)))
+                out_sh = shd.to_shardings(mesh, P(None, flat))
+            else:  # din
+                fn = lambda p, h, c: rec_m.din_score_candidates(p, cfg, h, c)
+                structs = (
+                    _sds(abs_params),
+                    jax.ShapeDtypeStruct((cfg.seq_len,), jnp.int32),
+                    jax.ShapeDtypeStruct((N,), jnp.int32),
+                )
+                in_sh = (shd.to_shardings(mesh, pspecs),
+                         shd.to_shardings(mesh, P(None)),
+                         shd.to_shardings(mesh, P(flat)))
+                out_sh = shd.to_shardings(mesh, P(flat))
+            return Cell(
+                self.name, shape, "serve", fn, structs, in_sh, out_sh,
+                self.model_flops(shape),
+                {"params": count_abstract_params(abs_params), "candidates": N},
+            )
+
+        # serve_p99 / serve_bulk — batched forward
+        if cfg.name == "deepfm":
+            fn = lambda p, b: rec_m.deepfm_forward(p, cfg, b["sparse"])
+        elif cfg.name == "dcn-v2":
+            fn = lambda p, b: rec_m.dcnv2_forward(p, cfg, b["dense"], b["sparse"])
+        elif cfg.name == "sasrec":
+            fn = lambda p, b: rec_m.sasrec_encode(p, cfg, b["seq"])[:, -1]
+        else:
+            fn = lambda p, b: rec_m.din_forward(p, cfg, b["hist"], b["target"])
+        structs = self._batch_structs(cfg, B)
+        structs.pop("label", None)
+        structs.pop("pos_label", None)
+        structs.pop("neg_label", None)
+        bspec = {k: v for k, v in shd.recsys_batch_spec(cfg.name, mesh).items() if k in structs}
+        out_spec = P(da) if cfg.name != "sasrec" else P(da, None)
+        return Cell(
+            self.name, shape, "serve", fn,
+            (_sds(abs_params), structs),
+            (shd.to_shardings(mesh, pspecs), shd.to_shardings(mesh, bspec)),
+            shd.to_shardings(mesh, out_spec),
+            self.model_flops(shape),
+            {"params": count_abstract_params(abs_params)},
+        )
+
+    def smoke(self, seed: int = 0) -> dict:
+        cfg = self.smoke_cfg
+        assert cfg is not None
+        key = jax.random.PRNGKey(seed)
+        init_fn, loss_fn_raw, _ = self._fns(cfg)
+        params = init_fn(key, cfg)
+        batch = self._smoke_batch(cfg, 8, key)
+        oinit, oupd = make_optimizer(self.optimizer)
+        step = jax.jit(make_train_step(lambda p, b: loss_fn_raw(p, cfg, b), oupd))
+        state = {"params": params, "opt": oinit(params)}
+        state, m = step(state, batch)
+        assert np.isfinite(float(m["loss"]))
+        return {"loss": float(m["loss"])}

@@ -1,0 +1,242 @@
+"""RetrievalArch — the paper's own workload as first-class configs.
+
+Two cells per config (extra rows beyond the assigned 40):
+
+* ``scan_100q``  — Table 1's hot loop: decode+dot of EVERY document
+  against a query batch through the DotVByte packed-block path (the
+  jnp lowering of the fused kernel semantics; the Pallas kernel is the
+  Mosaic-targeted version of exactly this graph).
+* ``serve_4096q`` — the production two-phase batched Seismic search,
+  index sharded over ``model`` (16 self-contained sub-indexes), queries
+  sharded over ``data``, O(k) all-gather merge.
+
+Array sizes derive from MsMarco statistics (8.84M passages; SPLADE
+119 nnz/doc, LILSR 387 nnz/doc — §3 of the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.scoring import (
+    block_products,
+    combine_block_scores,
+    components_from_gaps,
+    decode_gaps_dotvbyte,
+    dequantise_values,
+)
+from repro.dist import sharding as shd
+from repro.serve.engine import EngineConfig, engine_array_specs, make_sharded_search
+
+from .base import BaseArch, Cell
+
+__all__ = ["RetrievalArch", "RETRIEVAL_SHAPES"]
+
+RETRIEVAL_SHAPES = {
+    "scan_100q": dict(kind="serve", n_queries=100),
+    "serve_4096q": dict(kind="serve", n_queries=4096),
+}
+
+
+@dataclasses.dataclass
+class RetrievalArch(BaseArch):
+    name: str
+    dim: int = 30522
+    n_docs: int = 8_841_823
+    doc_nnz: int = 119
+    query_nnz: int = 43
+    block_size: int = 512
+    docs_per_block: int = 64
+    l_max: int = 384  # per-doc row capacity (p100 nnz, 8-aligned)
+    value_scale: float = 1.0
+    family: str = "retrieval"
+    shape_names: tuple[str, ...] = tuple(RETRIEVAL_SHAPES)
+    # §Perf opt levels for scan_100q (EXPERIMENTS.md):
+    #   0 = paper-faithful baseline (jit auto-sharding, global segment-sum)
+    #   1 = + doc-aligned shard_map (scatter stays device-local, no
+    #       collectives on the scan path)
+    #   2 = + i8 seg metadata (4× smaller dominant stream)
+    #   3 = + decode-once/score-many (hoist the DotVByte decode out of
+    #       the query vmap — amortises decode traffic over the batch)
+    opt: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        # ~5% fragmentation overhead from per-document block boundaries,
+        # rounded up to the 512-chip flat mesh for even sharding
+        raw = int(self.n_docs * self.doc_nnz / self.block_size * 1.05) + 1
+        return (raw + 511) // 512 * 512
+
+    def packed_structs(self) -> dict:
+        """ShapeDtypeStructs of the DotVByte packed-block index."""
+        sds = jax.ShapeDtypeStruct
+        B, T, D = self.n_blocks, self.block_size, self.docs_per_block
+        DP = ((T + T // 2) // 128 + 1) * 128  # ~1.5 B/component + over-read
+        seg_dt = jnp.int8 if self.opt >= 2 else jnp.int32
+        return {
+            "ctrl": sds((B, T // 8), jnp.uint8),
+            "data": sds((B, DP), jnp.uint8),
+            "seg": sds((B, T), seg_dt),
+            "start_pos": sds((B, D), jnp.int32),
+            "start_abs": sds((B, D), jnp.int32),
+            "vals": sds((B, T), jnp.float16),
+            "doc_ids": sds((B, D), jnp.int32),
+        }
+
+    def model_flops(self, shape: str) -> float:
+        if shape == "scan_100q":
+            # useful work: 2 flops per (query × nonzero)
+            return 2.0 * self.n_docs * self.doc_nnz * RETRIEVAL_SHAPES[shape]["n_queries"]
+        cfg = self._engine_cfg()
+        nq = RETRIEVAL_SHAPES[shape]["n_queries"]
+        per_q = cfg.block_budget * 64 * 2 + cfg.n_probe * 64 * self.l_max * 2
+        return float(per_q) * nq
+
+    def _engine_cfg(self) -> EngineConfig:
+        return EngineConfig(cut=8, block_budget=512, n_probe=64, k=10, codec="dotvbyte")
+
+    # ------------------------------------------------------------------
+    def build_cell(self, shape: str, mesh: Mesh) -> Cell:
+        da = shd.data_axes(mesh)
+        flat = (*da, "model")
+        nq = RETRIEVAL_SHAPES[shape]["n_queries"]
+        dim_pad = ((self.dim + 127) // 128) * 128
+
+        if shape == "scan_100q":
+            n_docs, T, scale = self.n_docs, self.block_size, self.value_scale
+
+            if self.opt == 0:
+                # paper-faithful baseline: jit auto-sharding; the global
+                # segment-sum scatters block partials across shards
+                def scan_fn(arrays, Q):
+                    def one(q):
+                        gaps = decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
+                        comps = components_from_gaps(
+                            gaps, arrays["seg"], arrays["start_pos"], arrays["start_abs"]
+                        )
+                        prod = block_products(
+                            q, comps, dequantise_values(arrays["vals"], scale), arrays["seg"]
+                        )
+                        return combine_block_scores(prod, arrays["seg"], arrays["doc_ids"], n_docs)
+
+                    return jax.vmap(one)(Q)
+
+                fn = scan_fn
+            else:
+                # §Perf opt≥1: doc-aligned shard_map — each device owns a
+                # contiguous doc range AND exactly the blocks packing those
+                # docs, so the scatter is device-local and the scan path
+                # has ZERO collectives (queries replicated). Arrays carry
+                # an explicit leading shard dim (pack_forward_index_sharded
+                # builds them; scoring.make_doc_aligned_scan consumes; see
+                # tests/test_dist.py for the real-data exactness check).
+                # Note opt3's decode-once hoist is subsumed: XLA LICM
+                # already hoists the query-invariant decode (§Perf log).
+                from repro.core.scoring import make_doc_aligned_scan
+
+                n_shards = 1
+                for a in flat:
+                    n_shards *= mesh.shape[a]
+                docs_local = self.n_docs // n_shards
+                fn = make_doc_aligned_scan(mesh, flat, docs_local, scale)
+
+            base_structs = self.packed_structs()
+            if self.opt >= 1:
+                n_shards = 1
+                for a in flat:
+                    n_shards *= mesh.shape[a]
+                structs_idx = {
+                    k: jax.ShapeDtypeStruct(
+                        (n_shards, v.shape[0] // n_shards, *v.shape[1:]), v.dtype
+                    )
+                    for k, v in base_structs.items()
+                }
+                arr_specs = {k: P(flat, *([None] * v.ndim))
+                             for k, v in base_structs.items()}
+            else:
+                structs_idx = base_structs
+                arr_specs = {k: P(flat, *([None] * (v.ndim - 1)))
+                             for k, v in base_structs.items()}
+            structs = (
+                structs_idx,
+                jax.ShapeDtypeStruct((nq, dim_pad), jnp.float32),
+            )
+            return Cell(
+                self.name, shape, "serve", fn, structs,
+                (shd.to_shardings(mesh, arr_specs), shd.to_shardings(mesh, P(None, None))),
+                shd.to_shardings(mesh, P(None, flat)),
+                self.model_flops(shape),
+                {"n_docs": self.n_docs, "payload_bytes": self._payload_bytes(),
+                 "opt": self.opt},
+            )
+
+        # serve_4096q — sharded two-phase search
+        ecfg = self._engine_cfg()
+        n_shards = mesh.shape["model"]
+        n_docs_local = self.n_docs // n_shards + 1
+        n_blocks_inv = int(min(self.dim * 4000, self.n_docs * self.doc_nnz) / 64) + 1
+        arr = engine_array_specs(
+            ecfg,
+            dim=self.dim,
+            n_docs=n_docs_local,
+            n_blocks=n_blocks_inv // n_shards + 1,
+            s_max=64,
+            bs_max=64,
+            l_max=self.l_max,
+            d_max=((self.l_max + self.l_max // 2) // 128 + 1) * 128,
+        )
+        arr_stacked = {
+            k: jax.ShapeDtypeStruct((n_shards, *v.shape), v.dtype) for k, v in arr.items()
+        }
+        idmap = jax.ShapeDtypeStruct((n_shards, n_docs_local + 1), jnp.int32)
+        fn = make_sharded_search(
+            mesh, ecfg, n_docs_local, self.n_docs, self.value_scale,
+            index_axis="model", query_axes=da,
+        )
+        structs = (arr_stacked, idmap, jax.ShapeDtypeStruct((nq, self.dim), jnp.float32))
+        in_sh = (
+            shd.to_shardings(mesh, {k: P("model") for k in arr_stacked}),
+            shd.to_shardings(mesh, P("model")),
+            shd.to_shardings(mesh, P(da, None)),
+        )
+        out_sh = shd.to_shardings(mesh, (P(da, None), P(da, None)))
+        return Cell(
+            self.name, shape, "serve", fn, structs, in_sh, out_sh,
+            self.model_flops(shape),
+            {"n_docs": self.n_docs, "n_shards": n_shards},
+        )
+
+    def _payload_bytes(self) -> int:
+        s = self.packed_structs()
+        return sum(int(jnp.dtype(v.dtype).itemsize) * int(jnp.prod(jnp.array(v.shape)))
+                   for v in s.values())
+
+    # ------------------------------------------------------------------
+    def smoke(self, seed: int = 0) -> dict:
+        """End-to-end mini pipeline: synth collection → pack → score."""
+        import numpy as np
+
+        from repro.core.forward_index import ForwardIndex, pack_forward_index
+        from repro.core.scoring import score_packed
+        from repro.data.synthetic import SyntheticConfig, generate_collection
+
+        cfg = SyntheticConfig(
+            name="smoke", dim=2048, n_docs=200, n_queries=4,
+            doc_nnz_mean=min(float(self.doc_nnz), 60.0),
+            query_nnz_mean=float(min(self.query_nnz, 16)), seed=seed,
+        )
+        col = generate_collection(cfg, value_format="f16")
+        packed = pack_forward_index(col.fwd, codec="dotvbyte", block_size=128)
+        q = col.query_dense(0)
+        got = np.asarray(score_packed(q, packed))
+        want = col.fwd.exact_scores(q)
+        err = float(np.abs(got - want).max())
+        assert err < 2e-3, err
+        return {"max_err": err}

@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — forward-index compression for
+learned sparse retrieval, plus the Seismic ANNS engine it plugs into."""
+
+from .forward_index import (
+    VALUE_FORMATS,
+    ForwardIndex,
+    PackedBlocks,
+    pack_forward_index,
+)
+
+__all__ = [
+    "VALUE_FORMATS",
+    "ForwardIndex",
+    "PackedBlocks",
+    "pack_forward_index",
+]

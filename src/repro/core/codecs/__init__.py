@@ -1,0 +1,70 @@
+"""Forward-index components codecs (paper §2).
+
+Registry of integer codecs applied to d-gap-encoded component sequences:
+
+* ``uncompressed`` — raw u16, the paper's baseline (16 bits/component)
+* ``vbyte``        — Thiel & Heaps byte-aligned varint
+* ``elias_gamma`` / ``elias_delta`` — Elias universal codes
+* ``zeta``         — Boldi-Vigna zeta_k (k=3 default)
+* ``streamvbyte``  — Lemire et al., 2-bit controls, 4 values/control
+* ``dotvbyte``     — the paper's contribution: 1-bit controls, 8
+                     values/control, per-document alignment, decode fused
+                     with the inner product
+* ``dotnibble``    — the paper's FUTURE WORK, implemented: sub-byte
+                     {4,8,12,16}-bit codes, 2-bit controls (§4)
+* ``bitpack``      — beyond-paper TPU-native fixed-width block packing
+"""
+
+from .base import (
+    Codec,
+    available_codecs,
+    components_from_gaps,
+    gaps_from_components,
+    get_codec,
+    register,
+)
+from .bitpack import BitpackCodec
+from .dotnibble import DotNibbleCodec
+from .dotvbyte import DotVByteCodec
+from .elias import EliasDeltaCodec, EliasGammaCodec
+from .streamvbyte import StreamVByteCodec
+from .vbyte import VByteCodec
+from .zeta import ZetaCodec
+
+import numpy as np
+
+
+@register("uncompressed")
+class UncompressedCodec(Codec):
+    """Raw u16 components — the paper's 16-bits-per-component baseline."""
+
+    name = "uncompressed"
+    supports_zero = True
+
+    def encode_doc(self, components: np.ndarray) -> bytes:
+        c = np.asarray(components, dtype=np.uint32)
+        if np.any(c > 0xFFFF):
+            raise ValueError("uncompressed codec stores 16-bit components")
+        return c.astype("<u2").tobytes()
+
+    def decode_doc(self, buf: bytes, n: int) -> np.ndarray:
+        return np.frombuffer(buf, dtype="<u2", count=n).astype(np.uint32)
+
+
+__all__ = [
+    "Codec",
+    "available_codecs",
+    "components_from_gaps",
+    "gaps_from_components",
+    "get_codec",
+    "register",
+    "UncompressedCodec",
+    "VByteCodec",
+    "EliasGammaCodec",
+    "EliasDeltaCodec",
+    "ZetaCodec",
+    "StreamVByteCodec",
+    "DotVByteCodec",
+    "DotNibbleCodec",
+    "BitpackCodec",
+]

@@ -1,0 +1,101 @@
+"""Codec protocol + d-gap transforms shared by every forward-index codec.
+
+A codec encodes ONE document's sorted ``components`` (strictly increasing
+uint16/uint32 coordinate ids) into a byte string, and decodes it back.
+Documents are d-gap transformed first, per §2 of the paper: the gap
+sequence is ``g[0] = c[0]`` and ``g[i] = c[i] - c[i-1]`` (strictly
+positive for i > 0; g[0] may be zero when component 0 is present).
+
+Bit-oriented universal codes (Elias gamma/delta, Zeta) cannot encode 0,
+so those codecs encode ``g + 1``; byte-oriented codecs (VByte,
+StreamVByte, DotVByte, bitpack) encode gaps verbatim.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+__all__ = [
+    "gaps_from_components",
+    "components_from_gaps",
+    "Codec",
+    "register",
+    "get_codec",
+    "available_codecs",
+]
+
+
+def gaps_from_components(components: np.ndarray) -> np.ndarray:
+    """d-gap transform; components must be sorted strictly increasing."""
+    c = np.asarray(components, dtype=np.int64)
+    if c.ndim != 1:
+        raise ValueError("components must be 1-D")
+    if len(c) == 0:
+        return c.astype(np.uint32)
+    if np.any(np.diff(c) <= 0):
+        raise ValueError("components must be strictly increasing")
+    gaps = np.empty_like(c)
+    gaps[0] = c[0]
+    gaps[1:] = np.diff(c)
+    return gaps.astype(np.uint32)
+
+
+def components_from_gaps(gaps: np.ndarray) -> np.ndarray:
+    return np.cumsum(np.asarray(gaps, dtype=np.int64)).astype(np.uint32)
+
+
+class Codec:
+    """Interface implemented by every forward-index components codec."""
+
+    #: registry key, e.g. "dotvbyte"
+    name: str = "abstract"
+    #: True when the codec encodes raw gaps (can represent 0), False when
+    #: it encodes gaps+1 (bit-oriented universal codes).
+    supports_zero: bool = True
+
+    # --- per-document API (host-side build / reference decode) ---------
+    def encode_doc(self, components: np.ndarray) -> bytes:
+        raise NotImplementedError
+
+    def decode_doc(self, buf: bytes, n: int) -> np.ndarray:
+        """Decode ``n`` components from ``buf`` (absolute ids, uint32)."""
+        raise NotImplementedError
+
+    # --- accounting -----------------------------------------------------
+    def encoded_size_bytes(self, components: np.ndarray) -> int:
+        return len(self.encode_doc(components))
+
+    def bits_per_component(self, docs: list[np.ndarray]) -> float:
+        total_bits = 0
+        total_comps = 0
+        for c in docs:
+            if len(c) == 0:
+                continue
+            total_bits += 8 * self.encoded_size_bytes(c)
+            total_comps += len(c)
+        return total_bits / max(total_comps, 1)
+
+
+_REGISTRY: Dict[str, Callable[[], Codec]] = {}
+
+
+def register(name: str) -> Callable:
+    def deco(factory: Callable[[], Codec]):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def get_codec(name: str, **kwargs) -> Codec:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; have {sorted(_REGISTRY)}") from None
+    return factory(**kwargs)
+
+
+def available_codecs() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,106 @@
+"""bitpack — beyond-paper TPU-native codec (Frame-of-Reference packing).
+
+Byte-granular codes (VByte/StreamVByte/DotVByte) are a CPU sweet spot:
+shuffles + scrolls. The TPU sweet spot is *lane-parallel fixed-width*
+arithmetic, so this codec packs each block of ``block`` gaps at the
+block's max bit-width b (NewPFor-style, without exceptions): decode is a
+pure shift+mask with no data-dependent offsets at all — no prefix sum,
+no gather for the decode itself. This realises the paper's future-work
+direction ("sub-byte capability ... for small, frequent dgaps") in the
+form the hardware wants.
+
+Per-document layout (encode_doc)::
+
+    [ widths: u8 per block ][ words: u32 LE, ceil(block*b/32) per block ]
+
+Padding gaps inside the final block are 0 (decode to repeated component,
+value-0-neutral in the fused dot — same trick as DotVByte alignment).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Codec, components_from_gaps, gaps_from_components, register
+
+__all__ = ["BitpackCodec", "pack_block", "unpack_block"]
+
+
+def _width(gaps: np.ndarray) -> int:
+    m = int(gaps.max(initial=0))
+    return max(int(m).bit_length(), 1)
+
+
+def pack_block(gaps: np.ndarray, width: int) -> np.ndarray:
+    """Pack len(gaps) values at ``width`` bits into u32 words (LSB-first)."""
+    g = np.asarray(gaps, dtype=np.uint64)
+    n = len(g)
+    total_bits = n * width
+    n_words = (total_bits + 31) // 32
+    bitpos = np.arange(n, dtype=np.int64) * width
+    words = np.zeros(n_words, dtype=np.uint64)
+    wi = bitpos // 32
+    off = (bitpos % 32).astype(np.uint64)
+    lo = (g << off) & 0xFFFFFFFF
+    # values can straddle a word boundary (width <= 32 → at most two words)
+    np.add.at(words, wi, lo)
+    straddle = (off + width) > 32
+    np.add.at(words, wi[straddle] + 1, (g[straddle] >> (np.uint64(32) - off[straddle])))
+    return words.astype(np.uint32)
+
+
+def unpack_block(words: np.ndarray, width: int, n: int) -> np.ndarray:
+    w = np.concatenate([words.astype(np.uint64), np.zeros(1, dtype=np.uint64)])
+    bitpos = np.arange(n, dtype=np.int64) * width
+    wi = bitpos // 32
+    off = (bitpos % 32).astype(np.uint64)
+    mask = np.uint64((1 << width) - 1)
+    lo = w[wi] >> off
+    hi = np.where(off > 0, w[wi + 1] << (np.uint64(32) - off), 0)
+    return ((lo | hi) & mask).astype(np.uint32)
+
+
+@register("bitpack")
+class BitpackCodec(Codec):
+    name = "bitpack"
+    supports_zero = True
+
+    def __init__(self, block: int = 32) -> None:
+        # 32-gap blocks: fine enough that one outlier gap doesn't inflate
+        # the whole block's width (classic FoR weakness; PFor exceptions
+        # would go further — see EXPERIMENTS.md §Perf for the trade-off)
+        if block % 32:
+            raise ValueError("block must be a multiple of 32 for aligned words")
+        self.block = block
+
+    def encode_doc(self, components: np.ndarray) -> bytes:
+        gaps = gaps_from_components(components)
+        n = len(gaps)
+        n_blocks = (n + self.block - 1) // self.block
+        widths = bytearray()
+        words = []
+        for b in range(n_blocks):
+            blk = gaps[b * self.block : (b + 1) * self.block]
+            pad = self.block - len(blk)
+            if pad:
+                blk = np.concatenate([blk, np.zeros(pad, dtype=blk.dtype)])
+            w = _width(blk)
+            widths.append(w)
+            words.append(pack_block(blk, w))
+        body = np.concatenate(words).astype("<u4").tobytes() if words else b""
+        return bytes(widths) + body
+
+    def decode_doc(self, buf: bytes, n: int) -> np.ndarray:
+        n_blocks = (n + self.block - 1) // self.block
+        widths = np.frombuffer(buf[:n_blocks], dtype=np.uint8)
+        words = np.frombuffer(buf[n_blocks:], dtype="<u4")
+        gaps = np.zeros(n_blocks * self.block, dtype=np.uint32)
+        pos = 0
+        for b in range(n_blocks):
+            w = int(widths[b])
+            n_words = (self.block * w + 31) // 32
+            gaps[b * self.block : (b + 1) * self.block] = unpack_block(
+                words[pos : pos + n_words], w, self.block
+            )
+            pos += n_words
+        return components_from_gaps(gaps[:n])

@@ -1,0 +1,108 @@
+"""DotVByte — the paper's contribution (§2.2).
+
+A StreamVByte specialisation exploiting that forward-index components are
+16-bit: a single control *bit* per value (0 → 1 byte, 1 → 2 bytes) lets
+one control byte govern EIGHT values, and on x86 one
+``_mm_shuffle_epi8`` decode 8 components into a 128-bit register, with
+the scroll amount free via ``popcnt(control)``. Decode is fused with the
+inner product (decode → gather query → FMA) and never materialises a
+decoded buffer.
+
+Per-document alignment (faithful to §2.2): only ``n8 = (nnz // 8) * 8``
+components are compressed; the ≤7 remaining components are stored
+uncompressed (u16 LE) after the data stream, so a control byte is never
+shared between documents.
+
+Layout of ``encode_doc`` output::
+
+    [ controls: n8/8 bytes ][ data: n8 + popcount(controls) bytes ]
+    [ remainder: 2 * (nnz - n8) bytes, raw u16 components (absolute) ]
+
+This module is the host-side build + numpy reference; the TPU-adapted
+fused decode+dot kernel lives in ``repro/kernels/dotvbyte_dot.py`` and
+the batched jnp decode in ``repro/core/scoring.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Codec, components_from_gaps, gaps_from_components, register
+
+__all__ = [
+    "DotVByteCodec",
+    "encode_doc_arrays",
+    "decode_doc_arrays",
+    "control_bits",
+]
+
+
+def control_bits(gaps: np.ndarray) -> np.ndarray:
+    """1 iff the gap needs two bytes. Gaps must fit 16 bits."""
+    g = np.asarray(gaps, dtype=np.uint64)
+    if np.any(g > 0xFFFF):
+        raise ValueError("DotVByte requires 16-bit gaps (d <= 65536)")
+    return (g > 0xFF).astype(np.uint8)
+
+
+def encode_doc_arrays(components: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """-> (controls u8[n8/8], data u8[n8+popcnt], remainder u16[<8]).
+
+    ``remainder`` holds ABSOLUTE component ids (they are read directly,
+    no gap decode, exactly as "processed normally" in the paper).
+    """
+    c = np.asarray(components, dtype=np.uint32)
+    n = len(c)
+    n8 = (n // 8) * 8
+    gaps = gaps_from_components(c)[:n8]
+    bits = control_bits(gaps)
+    ctrl = np.packbits(bits.reshape(-1, 8), axis=1, bitorder="little").reshape(-1)
+    # data stream: 1 or 2 LE bytes per gap
+    lens = bits.astype(np.int64) + 1
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]]) if n8 else np.zeros(0, np.int64)
+    data = np.zeros(int(lens.sum()) if n8 else 0, dtype=np.uint8)
+    g64 = gaps.astype(np.uint64)
+    if n8:
+        data[starts] = (g64 & 0xFF).astype(np.uint8)
+        two = bits.astype(bool)
+        data[starts[two] + 1] = ((g64[two] >> 8) & 0xFF).astype(np.uint8)
+    rem = c[n8:].astype(np.uint16)
+    return ctrl, data, rem
+
+
+def decode_doc_arrays(
+    ctrl: np.ndarray, data: np.ndarray, rem: np.ndarray
+) -> np.ndarray:
+    """Vectorised reference decode: controls+data -> absolute components."""
+    n8 = len(ctrl) * 8
+    if n8:
+        bits = np.unpackbits(ctrl, bitorder="little").astype(np.int64)
+        lens = bits + 1
+        starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        dpad = np.concatenate([data, np.zeros(1, dtype=np.uint8)]).astype(np.uint32)
+        gaps = dpad[starts] + (dpad[starts + 1] << 8) * bits.astype(np.uint32)
+        comps = components_from_gaps(gaps)
+    else:
+        comps = np.zeros(0, dtype=np.uint32)
+    return np.concatenate([comps, np.asarray(rem, dtype=np.uint32)])
+
+
+@register("dotvbyte")
+class DotVByteCodec(Codec):
+    name = "dotvbyte"
+    supports_zero = True
+
+    def encode_doc(self, components: np.ndarray) -> bytes:
+        ctrl, data, rem = encode_doc_arrays(components)
+        return ctrl.tobytes() + data.tobytes() + rem.astype("<u2").tobytes()
+
+    def decode_doc(self, buf: bytes, n: int) -> np.ndarray:
+        n8 = (n // 8) * 8
+        n_ctrl = n8 // 8
+        raw = np.frombuffer(buf, dtype=np.uint8)
+        ctrl = raw[:n_ctrl]
+        popcnt = int(np.unpackbits(ctrl).sum()) if n_ctrl else 0
+        n_data = n8 + popcnt
+        data = raw[n_ctrl : n_ctrl + n_data]
+        rem = raw[n_ctrl + n_data :].view("<u2")[: n - n8]
+        return decode_doc_arrays(ctrl, data, rem)

@@ -1,0 +1,81 @@
+"""StreamVByte (Lemire, Kurz & Rupp, 2018).
+
+General-purpose 32-bit variant, faithful to the original: a 2-bit control
+per value records its byte length minus one (1..4 bytes, little-endian);
+controls for four values share one control byte (value i of a quad uses
+bits 2i..2i+1); the control stream is stored contiguously ahead of the
+data stream so decodes are branch-free table lookups — on x86, a
+``_mm_shuffle_epi8``; here, a vectorised prefix-sum + gather (see
+``kernels/`` for the TPU treatment and DESIGN.md §3 for the adaptation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Codec, components_from_gaps, gaps_from_components, register
+
+__all__ = ["StreamVByteCodec", "encode_gaps", "decode_gaps", "split_streams"]
+
+
+def _byte_lengths(gaps: np.ndarray) -> np.ndarray:
+    g = np.asarray(gaps, dtype=np.uint64)
+    n = np.ones(len(g), dtype=np.uint8)
+    n[g > 0xFF] = 2
+    n[g > 0xFFFF] = 3
+    n[g > 0xFFFFFF] = 4
+    return n
+
+
+def encode_gaps(gaps: np.ndarray) -> bytes:
+    """-> control stream ++ data stream (lengths derivable from n)."""
+    g = np.asarray(gaps, dtype=np.uint64)
+    n = len(g)
+    lens = _byte_lengths(g)
+    n_ctrl = (n + 3) // 4
+    ctrl = np.zeros(n_ctrl, dtype=np.uint8)
+    codes = (lens - 1).astype(np.uint8)
+    for i in range(n):
+        ctrl[i // 4] |= codes[i] << (2 * (i % 4))
+    # data: little-endian bytes, lens[i] bytes per value
+    le = g.astype("<u8").view(np.uint8).reshape(n, 8)
+    data = bytearray()
+    for i in range(n):
+        data.extend(le[i, : lens[i]].tobytes())
+    return ctrl.tobytes() + bytes(data)
+
+
+def split_streams(buf: bytes, n: int) -> tuple[np.ndarray, np.ndarray]:
+    n_ctrl = (n + 3) // 4
+    raw = np.frombuffer(buf, dtype=np.uint8)
+    return raw[:n_ctrl].copy(), raw[n_ctrl:].copy()
+
+
+def decode_gaps(buf: bytes, n: int) -> np.ndarray:
+    """Vectorised numpy decode (the scalar spec is the oracle in tests)."""
+    if n == 0:
+        return np.zeros(0, dtype=np.uint32)
+    ctrl, data = split_streams(buf, n)
+    # per-value 2-bit codes
+    quads = np.arange(n)
+    codes = (ctrl[quads // 4] >> (2 * (quads % 4))) & 0x3
+    lens = codes.astype(np.int64) + 1
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    data_pad = np.concatenate([data, np.zeros(4, dtype=np.uint8)]).astype(np.uint64)
+    vals = np.zeros(n, dtype=np.uint64)
+    for b in range(4):
+        take = lens > b
+        vals[take] += data_pad[starts[take] + b] << (8 * b)
+    return vals.astype(np.uint32)
+
+
+@register("streamvbyte")
+class StreamVByteCodec(Codec):
+    name = "streamvbyte"
+    supports_zero = True
+
+    def encode_doc(self, components: np.ndarray) -> bytes:
+        return encode_gaps(gaps_from_components(components))
+
+    def decode_doc(self, buf: bytes, n: int) -> np.ndarray:
+        return components_from_gaps(decode_gaps(buf, n))

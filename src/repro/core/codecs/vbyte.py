@@ -1,0 +1,68 @@
+"""VByte (Thiel & Heaps, 1972) — classic byte-aligned varint.
+
+Each integer x is stored in L+1 bytes b_0..b_L; the MSB of b_i is a
+continuation flag (1 = more bytes follow). Decoding:
+``x = sum_i (b_i mod 128) * 128**i`` (little-endian 7-bit groups).
+
+Encoding is host-side numpy; ``decode_doc`` is the numpy reference and
+``decode_gaps_np`` exposes the flat gap decode used by benchmarks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Codec, components_from_gaps, gaps_from_components, register
+
+__all__ = ["VByteCodec", "encode_gaps", "decode_gaps"]
+
+
+def encode_gaps(gaps: np.ndarray) -> bytes:
+    out = bytearray()
+    for g in np.asarray(gaps, dtype=np.uint64):
+        g = int(g)
+        while True:
+            byte = g & 0x7F
+            g >>= 7
+            if g:
+                out.append(byte | 0x80)
+            else:
+                out.append(byte)
+                break
+    return bytes(out)
+
+
+def decode_gaps(buf: bytes, n: int) -> np.ndarray:
+    """Vectorised numpy decode of n varints from buf."""
+    raw = np.frombuffer(buf, dtype=np.uint8)
+    cont = (raw & 0x80) != 0
+    payload = (raw & 0x7F).astype(np.uint64)
+    # terminator positions = bytes whose continuation bit is clear
+    ends = np.flatnonzero(~cont)
+    if len(ends) < n:
+        raise ValueError("buffer truncated")
+    ends = ends[:n]
+    starts = np.concatenate([[0], ends[:-1] + 1])
+    values = np.zeros(n, dtype=np.uint64)
+    # byte position within its varint = index - start_of_its_varint
+    owner = np.zeros(len(raw), dtype=np.int64)
+    owner[starts] = 1
+    owner = np.cumsum(owner) - 1  # varint id per byte
+    valid = owner < n
+    idx = np.arange(len(raw), dtype=np.int64)
+    within = idx - starts[np.clip(owner, 0, n - 1)]
+    contrib = payload << (7 * within.astype(np.uint64))
+    np.add.at(values, owner[valid], contrib[valid])
+    return values.astype(np.uint32)
+
+
+@register("vbyte")
+class VByteCodec(Codec):
+    name = "vbyte"
+    supports_zero = True
+
+    def encode_doc(self, components: np.ndarray) -> bytes:
+        return encode_gaps(gaps_from_components(components))
+
+    def decode_doc(self, buf: bytes, n: int) -> np.ndarray:
+        return components_from_gaps(decode_gaps(buf, n))

@@ -1,0 +1,430 @@
+"""The forward index (paper §1-§2): doc_id → sparse vector, CSR layout.
+
+Three arrays, exactly as the paper describes: ``components`` (nonzero
+coordinate ids), ``values`` (their values), ``offsets`` (row pointers).
+Values may be stored as f32, f16 or fixedU8 (8-bit fixed point; the
+paper's "fixedU8" column in Table 2) — quantisation is applied at build
+time and dequantisation fused into the scoring path.
+
+Also defines the TPU *packed block layout* used by the jnp scorers and
+the Pallas kernels: documents are split into self-contained blocks of
+``block_size`` components. Each document fragment opens with its
+absolute first component stored out-of-band (``start_abs``), so every
+block decodes independently — the TPU analogue of DotVByte's
+per-document alignment (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .codecs import get_codec
+from .codecs.base import gaps_from_components
+from .codecs.bitpack import pack_block
+from .codecs.dotvbyte import control_bits
+
+__all__ = [
+    "ValueFormat",
+    "ForwardIndex",
+    "PackedBlocks",
+    "pack_forward_index",
+    "VALUE_FORMATS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueFormat:
+    """Storage format for the values array."""
+
+    name: str
+    dtype: np.dtype
+    scale: float  # dequantised value = stored * scale
+
+    def quantise(self, v: np.ndarray) -> np.ndarray:
+        if self.name == "fixedu8":
+            q = np.clip(np.round(v / self.scale), 0, 255)
+            return q.astype(np.uint8)
+        return v.astype(self.dtype)
+
+    def dequantise(self, q: np.ndarray) -> np.ndarray:
+        return q.astype(np.float32) * np.float32(self.scale)
+
+
+VALUE_FORMATS = {
+    "f32": ValueFormat("f32", np.dtype(np.float32), 1.0),
+    "f16": ValueFormat("f16", np.dtype(np.float16), 1.0),
+    # U3F5-style fixed point: range [0, 8), resolution 1/32 — covers
+    # SPLADE/LILSR activation ranges (positive, < 8).
+    "fixedu8": ValueFormat("fixedu8", np.dtype(np.uint8), 1.0 / 32.0),
+}
+
+
+@dataclasses.dataclass
+class ForwardIndex:
+    """Uncompressed CSR forward index (the paper's baseline layout)."""
+
+    components: np.ndarray  # u32 [total_nnz], sorted per doc
+    values: np.ndarray  # stored dtype [total_nnz]
+    offsets: np.ndarray  # i64 [n_docs + 1]
+    dim: int
+    value_format: ValueFormat = VALUE_FORMATS["f32"]
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def from_docs(
+        docs: Iterable[tuple[np.ndarray, np.ndarray]],
+        dim: int,
+        value_format: str = "f32",
+    ) -> "ForwardIndex":
+        vf = VALUE_FORMATS[value_format]
+        comps, vals, offs = [], [], [0]
+        for c, v in docs:
+            c = np.asarray(c, dtype=np.uint32)
+            v = np.asarray(v, dtype=np.float32)
+            order = np.argsort(c, kind="stable")
+            comps.append(c[order])
+            vals.append(vf.quantise(v[order]))
+            offs.append(offs[-1] + len(c))
+        return ForwardIndex(
+            components=np.concatenate(comps) if comps else np.zeros(0, np.uint32),
+            values=np.concatenate(vals) if vals else np.zeros(0, vf.dtype),
+            offsets=np.asarray(offs, dtype=np.int64),
+            dim=dim,
+            value_format=vf,
+        )
+
+    # -- accessors ---------------------------------------------------------
+    @property
+    def n_docs(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def total_nnz(self) -> int:
+        return int(self.offsets[-1])
+
+    def nnz(self, i: int) -> int:
+        return int(self.offsets[i + 1] - self.offsets[i])
+
+    def doc(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        s, e = int(self.offsets[i]), int(self.offsets[i + 1])
+        return self.components[s:e], self.value_format.dequantise(self.values[s:e])
+
+    def doc_raw_values(self, i: int) -> np.ndarray:
+        s, e = int(self.offsets[i]), int(self.offsets[i + 1])
+        return self.values[s:e]
+
+    def iter_docs(self) -> Iterable[tuple[np.ndarray, np.ndarray]]:
+        for i in range(self.n_docs):
+            yield self.doc(i)
+
+    def densify(self, i: int) -> np.ndarray:
+        c, v = self.doc(i)
+        out = np.zeros(self.dim, dtype=np.float32)
+        out[c] = v
+        return out
+
+    # -- exact scoring (numpy oracle for everything downstream) ------------
+    def exact_scores(self, q_dense: np.ndarray) -> np.ndarray:
+        """⟨q, x⟩ for every doc — the numpy ground truth."""
+        q = np.asarray(q_dense, dtype=np.float32)
+        contrib = q[self.components] * self.value_format.dequantise(self.values)
+        out = np.zeros(self.n_docs, dtype=np.float32)
+        np.add.at(out, np.repeat(np.arange(self.n_docs), np.diff(self.offsets)), contrib)
+        return out
+
+    # -- component re-ordering (RGB, §2) ------------------------------------
+    def apply_component_permutation(self, pi: np.ndarray) -> "ForwardIndex":
+        """Relabel component c as pi[c] and re-sort each doc.
+
+        The same permutation must be applied to query vectors; see
+        ``repro.core.rgb``.
+        """
+        pi = np.asarray(pi, dtype=np.uint32)
+        if len(pi) != self.dim:
+            raise ValueError("permutation length must equal dim")
+        new_comp = pi[self.components]
+        comps = np.empty_like(new_comp)
+        vals = np.empty_like(self.values)
+        for i in range(self.n_docs):
+            s, e = int(self.offsets[i]), int(self.offsets[i + 1])
+            order = np.argsort(new_comp[s:e], kind="stable")
+            comps[s:e] = new_comp[s:e][order]
+            vals[s:e] = self.values[s:e][order]
+        return ForwardIndex(comps, vals, self.offsets.copy(), self.dim, self.value_format)
+
+    # -- size accounting -----------------------------------------------------
+    def storage_bytes(self, codec_name: str = "uncompressed") -> dict[str, int]:
+        codec = get_codec(codec_name)
+        comp_bytes = sum(
+            len(codec.encode_doc(self.components[int(s):int(e)]))
+            for s, e in zip(self.offsets[:-1], self.offsets[1:])
+            if e > s
+        )
+        return {
+            "components": comp_bytes,
+            "values": int(self.values.nbytes),
+            "offsets": int(self.offsets.nbytes),
+        }
+
+
+# ---------------------------------------------------------------------------
+# TPU packed block layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedBlocks:
+    """Self-contained fixed-size blocks for lane-parallel scoring.
+
+    Shapes (B = n_blocks, T = block_size, D = max docs/block):
+
+    ============  =========  ==================================================
+    field         shape      meaning
+    ============  =========  ==================================================
+    seg           i32 [B,T]  local doc-slot id per element, -1 for padding
+    start_pos     i32 [B,D]  element index of each slot's first element
+    start_abs     i32 [B,D]  absolute first component of each fragment
+    vals          [B,T]      stored-dtype values (0 for padding)
+    doc_ids       i32 [B,D]  global doc id per slot, -1 for unused slots
+    ctrl          u8 [B,T/8] DotVByte control bits (codec="dotvbyte")
+    data          u8 [B,DP]  DotVByte byte stream, padded (codec="dotvbyte")
+    words         u32[B,W]   bitpack words (codec="bitpack")
+    widths        i32 [B]    bitpack bit-width per block (codec="bitpack")
+    comps         i32 [B,T]  raw components (codec="uncompressed")
+    ============  =========  ==================================================
+
+    Gap streams encode the *within-fragment* gaps with the fragment-first
+    gap forced to 0; absolutes live in ``start_abs`` (DESIGN.md §3).
+    """
+
+    codec: str
+    block_size: int
+    n_docs: int
+    dim: int
+    value_format: ValueFormat
+    seg: np.ndarray
+    start_pos: np.ndarray
+    start_abs: np.ndarray
+    vals: np.ndarray
+    doc_ids: np.ndarray
+    ctrl: np.ndarray | None = None
+    data: np.ndarray | None = None
+    words: np.ndarray | None = None
+    widths: np.ndarray | None = None
+    comps: np.ndarray | None = None
+
+    @property
+    def n_blocks(self) -> int:
+        return self.seg.shape[0]
+
+    @property
+    def max_docs_per_block(self) -> int:
+        return self.doc_ids.shape[1]
+
+    def payload_bytes(self) -> int:
+        """Bytes the scoring path actually streams from HBM (roofline)."""
+        total = self.seg.nbytes + self.start_pos.nbytes + self.start_abs.nbytes
+        total += self.vals.nbytes + self.doc_ids.nbytes
+        for a in (self.ctrl, self.data, self.words, self.widths, self.comps):
+            if a is not None:
+                total += a.nbytes
+        return total
+
+
+def _fragments(
+    fwd: ForwardIndex, block_size: int, max_docs: int
+) -> list[list[tuple[int, int, int]]]:
+    """Greedy first-fit packing of doc fragments into blocks.
+
+    Returns per-block lists of (doc_id, start_nnz, end_nnz) fragments.
+    A block closes when T components or D doc slots are used.
+    """
+    blocks: list[list[tuple[int, int, int]]] = []
+    cur: list[tuple[int, int, int]] = []
+    used = 0
+    for d in range(fwd.n_docs):
+        n = fwd.nnz(d)
+        pos = 0
+        while pos < n:
+            if used == block_size or len(cur) == max_docs:
+                blocks.append(cur)
+                cur, used = [], 0
+            take = min(n - pos, block_size - used)
+            cur.append((d, pos, pos + take))
+            used += take
+            pos += take
+    if cur:
+        blocks.append(cur)
+    return blocks
+
+
+def pack_forward_index(
+    fwd: ForwardIndex,
+    codec: str = "dotvbyte",
+    block_size: int = 512,
+    max_docs_per_block: int | None = None,
+    seg_dtype=np.int32,
+) -> PackedBlocks:
+    """Build the TPU packed block layout from a CSR forward index.
+
+    ``seg_dtype=np.int8`` is the §Perf "metadata slimming" layout: the
+    per-element doc-slot id fits i8 whenever max_docs_per_block ≤ 127,
+    cutting the dominant metadata stream 4×."""
+    if codec not in ("dotvbyte", "bitpack", "uncompressed"):
+        raise ValueError(f"no packed layout for codec {codec!r}")
+    if block_size % 128:
+        raise ValueError("block_size must be a multiple of 128 (TPU lanes)")
+    T = block_size
+    D = max_docs_per_block or T // 8
+    if np.dtype(seg_dtype) == np.int8 and D > 127:
+        raise ValueError("int8 seg needs max_docs_per_block <= 127")
+    frags = _fragments(fwd, T, D)
+    B = len(frags)
+
+    seg = np.full((B, T), -1, dtype=seg_dtype)
+    start_pos = np.zeros((B, D), dtype=np.int32)
+    start_abs = np.zeros((B, D), dtype=np.int32)
+    vals = np.zeros((B, T), dtype=fwd.values.dtype)
+    doc_ids = np.full((B, D), -1, dtype=np.int32)
+    gaps_all = np.zeros((B, T), dtype=np.uint32)
+
+    for b, frag_list in enumerate(frags):
+        pos = 0
+        for s_idx, (d, lo, hi) in enumerate(frag_list):
+            off = int(fwd.offsets[d])
+            comps = fwd.components[off + lo : off + hi].astype(np.int64)
+            n = len(comps)
+            g = np.empty(n, dtype=np.uint32)
+            g[0] = 0  # fragment-first gap forced to 0; absolute out-of-band
+            g[1:] = np.diff(comps).astype(np.uint32)
+            gaps_all[b, pos : pos + n] = g
+            seg[b, pos : pos + n] = s_idx
+            vals[b, pos : pos + n] = fwd.values[off + lo : off + hi]
+            start_pos[b, s_idx] = pos
+            start_abs[b, s_idx] = comps[0]
+            doc_ids[b, s_idx] = d
+            pos += n
+
+    out = PackedBlocks(
+        codec=codec,
+        block_size=T,
+        n_docs=fwd.n_docs,
+        dim=fwd.dim,
+        value_format=fwd.value_format,
+        seg=seg,
+        start_pos=start_pos,
+        start_abs=start_abs,
+        vals=vals,
+        doc_ids=doc_ids,
+    )
+
+    if codec == "uncompressed":
+        # decode-free path: reconstruct absolute components directly
+        t = np.cumsum(gaps_all.astype(np.int64), axis=1)
+        tp = np.take_along_axis(t, start_pos.astype(np.int64), axis=1)
+        segc = np.clip(seg, 0, D - 1)
+        base = np.take_along_axis(start_abs.astype(np.int64), segc, axis=1)
+        tseg = np.take_along_axis(tp, segc, axis=1)
+        comps = np.where(seg >= 0, base + t - tseg, 0)
+        out.comps = comps.astype(np.int32)
+        return out
+
+    if codec == "dotvbyte":
+        bits = control_bits(gaps_all.reshape(-1)).reshape(B, T)
+        out.ctrl = np.packbits(
+            bits.reshape(B, T // 8, 8), axis=2, bitorder="little"
+        ).reshape(B, T // 8)
+        lens = bits.astype(np.int64) + 1
+        data_len = lens.sum(axis=1)
+        DP = int(data_len.max(initial=1)) + 1  # +1: safe hi-byte over-read
+        data = np.zeros((B, DP), dtype=np.uint8)
+        for b in range(B):
+            starts = np.concatenate([[0], np.cumsum(lens[b])[:-1]])
+            g64 = gaps_all[b].astype(np.uint64)
+            data[b, starts] = (g64 & 0xFF).astype(np.uint8)
+            two = bits[b].astype(bool)
+            data[b, starts[two] + 1] = ((g64[two] >> 8) & 0xFF).astype(np.uint8)
+        out.data = data
+        return out
+
+    return _bitpack_tail(out, gaps_all, T, B)
+
+
+def pack_forward_index_sharded(
+    fwd: ForwardIndex,
+    n_shards: int,
+    codec: str = "dotvbyte",
+    block_size: int = 512,
+    seg_dtype=np.int32,
+) -> tuple[dict, int]:
+    """Doc-aligned sharded packing (§Perf opt1, EXPERIMENTS.md).
+
+    Splits documents into ``n_shards`` contiguous equal ranges, packs
+    each range independently with range-LOCAL doc ids, pads per-shard
+    block counts/data widths to a common size, and stacks every array
+    with a leading shard dim. Feed to ``scoring.make_doc_aligned_scan``
+    with the arrays sharded over the mesh. Returns (arrays, docs_local)."""
+    n = fwd.n_docs
+    docs_local = (n + n_shards - 1) // n_shards
+    packs = []
+    for s in range(n_shards):
+        lo, hi = s * docs_local, min((s + 1) * docs_local, n)
+        sub_docs = []
+        for d in range(lo, hi):
+            c, v = fwd.doc(d)
+            sub_docs.append((c, v))
+        while len(sub_docs) < docs_local:  # tail padding: empty doc
+            sub_docs.append((np.array([0], np.uint32), np.array([0.0], np.float32)))
+        sub = ForwardIndex.from_docs(sub_docs, fwd.dim, value_format=fwd.value_format.name)
+        packs.append(pack_forward_index(sub, codec=codec, block_size=block_size,
+                                        seg_dtype=seg_dtype))
+    B = max(p.n_blocks for p in packs)
+    DP = max(p.data.shape[1] for p in packs) if codec == "dotvbyte" else 0
+    out: dict[str, np.ndarray] = {}
+
+    def stack(field, pad_value=0):
+        arrs = []
+        for p in packs:
+            a = getattr(p, field)
+            buf = np.full((B, *a.shape[1:]), pad_value, dtype=a.dtype)
+            buf[: a.shape[0]] = a
+            arrs.append(buf)
+        return np.stack(arrs)
+
+    T = block_size
+    for field, pad in (("seg", -1), ("start_pos", 0), ("start_abs", 0),
+                       ("vals", 0), ("doc_ids", -1)):
+        out[field] = stack(field, pad)
+    if codec == "dotvbyte":
+        # pad data width to the common max (+over-read byte preserved)
+        datas = []
+        ctrls = []
+        for p in packs:
+            d = np.zeros((B, DP), np.uint8)
+            d[: p.data.shape[0], : p.data.shape[1]] = p.data
+            datas.append(d)
+            c = np.zeros((B, T // 8), np.uint8)
+            c[: p.ctrl.shape[0]] = p.ctrl
+            ctrls.append(c)
+        out["data"] = np.stack(datas)
+        out["ctrl"] = np.stack(ctrls)
+    return out, docs_local
+
+
+def _bitpack_tail(out, gaps_all, T, B):
+    # bitpack: one width per block, bucket-friendly (DESIGN.md §3)
+    widths = np.maximum(
+        [int(g.max(initial=0)).bit_length() for g in gaps_all], 1
+    ).astype(np.int32)
+    Wmax = int(widths.max(initial=1))
+    n_words = (T * Wmax + 31) // 32
+    words = np.zeros((B, n_words), dtype=np.uint32)
+    for b in range(B):
+        wb = pack_block(gaps_all[b], int(widths[b]))
+        words[b, : len(wb)] = wb
+    out.words = words
+    out.widths = widths
+    return out

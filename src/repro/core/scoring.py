@@ -1,0 +1,277 @@
+"""Batched inner-product scoring over packed forward-index blocks.
+
+Pure-jnp reference implementations of the decode+dot paths. These are
+(a) the scorers used by the Seismic query processor on CPU, and (b) the
+oracles the Pallas kernels in ``repro/kernels`` are validated against.
+
+All functions are jit-friendly: they take plain arrays (from
+``PackedBlocks``) plus static ints. The decode semantics mirror
+DESIGN.md §3: gaps → prefix sum → per-fragment rebase via out-of-band
+absolutes → gather query → FMA → segment reduction.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .forward_index import PackedBlocks
+
+__all__ = [
+    "dequantise_values",
+    "decode_gaps_dotvbyte",
+    "decode_gaps_bitpack",
+    "components_from_gaps",
+    "block_products",
+    "combine_block_scores",
+    "score_packed",
+    "score_packed_batch",
+]
+
+
+def dequantise_values(vals: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return vals.astype(jnp.float32) * jnp.float32(scale)
+
+
+def decode_gaps_dotvbyte(ctrl: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """DotVByte decode, vectorised (DESIGN.md §3).
+
+    ctrl u8 [B, T/8], data u8 [B, DP] (DP ≥ T + popcount + 1).
+    Returns gaps i32 [B, T].
+
+    The x86 byte-scroll is replaced by an exclusive prefix sum of the
+    control bits; the ``_mm_shuffle_epi8`` by two byte gathers.
+    """
+    B, nc = ctrl.shape
+    bits = (ctrl[:, :, None].astype(jnp.int32) >> jnp.arange(8, dtype=jnp.int32)) & 1
+    bits = bits.reshape(B, nc * 8)  # LSB-first within each control byte
+    lens = bits + 1
+    ends = jnp.cumsum(lens, axis=1)
+    starts = ends - lens
+    d = data.astype(jnp.int32)
+    lo = jnp.take_along_axis(d, starts, axis=1)
+    hi = jnp.take_along_axis(d, starts + 1, axis=1) * bits
+    return lo + (hi << 8)
+
+
+def decode_gaps_bitpack(
+    words: jnp.ndarray, widths: jnp.ndarray, block_size: int
+) -> jnp.ndarray:
+    """Fixed-width unpack: pure shift+mask, no data-dependent offsets.
+
+    words u32 [B, W], widths i32 [B] → gaps i32 [B, T].
+    """
+    B = words.shape[0]
+    T = block_size
+    w32 = jnp.concatenate(
+        [words.astype(jnp.uint32), jnp.zeros((B, 1), dtype=jnp.uint32)], axis=1
+    )
+    width = widths[:, None].astype(jnp.uint32)  # [B,1]
+    bitpos = jnp.arange(T, dtype=jnp.uint32)[None, :] * width  # [B,T]
+    wi = (bitpos // 32).astype(jnp.int32)
+    off = bitpos % 32
+    lo = jnp.take_along_axis(w32, wi, axis=1) >> off
+    hi_shift = jnp.where(off > 0, jnp.uint32(32) - off, jnp.uint32(0))
+    hi_raw = jnp.take_along_axis(w32, wi + 1, axis=1)
+    hi = jnp.where(off > 0, hi_raw << hi_shift, jnp.uint32(0))
+    mask = (jnp.uint32(1) << width) - jnp.uint32(1)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def components_from_gaps(
+    gaps: jnp.ndarray,
+    seg: jnp.ndarray,
+    start_pos: jnp.ndarray,
+    start_abs: jnp.ndarray,
+) -> jnp.ndarray:
+    """Segmented prefix-sum rebase: gaps → absolute component ids.
+
+    comp[i] = start_abs[seg[i]] + t[i] - t[start_pos[seg[i]]] with
+    t = inclusive cumsum of gaps; padding (seg = -1) maps to component 0
+    (value 0 ⇒ contribution 0, the DotVByte alignment trick).
+    """
+    seg = seg.astype(jnp.int32)  # i8 in the slim metadata layout
+    D = start_pos.shape[1]
+    t = jnp.cumsum(gaps, axis=1)
+    tp = jnp.take_along_axis(t, start_pos, axis=1)  # [B,D]
+    segc = jnp.clip(seg, 0, D - 1)
+    base = jnp.take_along_axis(start_abs, segc, axis=1)
+    tseg = jnp.take_along_axis(tp, segc, axis=1)
+    return jnp.where(seg >= 0, base + t - tseg, 0)
+
+
+def block_products(
+    q: jnp.ndarray, comps: jnp.ndarray, vals_f: jnp.ndarray, seg: jnp.ndarray
+) -> jnp.ndarray:
+    """q-gather · values, zeroed on padding. [B,T] f32."""
+    qv = jnp.take(q, comps, axis=0)
+    return qv * vals_f * (seg >= 0)
+
+
+def combine_block_scores(
+    prod_or_scores: jnp.ndarray,
+    seg: jnp.ndarray,
+    doc_ids: jnp.ndarray,
+    n_docs: int,
+) -> jnp.ndarray:
+    """Reduce per-element products to per-document scores.
+
+    prod [B,T] + seg [B,T] + doc_ids [B,D] → scores [n_docs] via a
+    single global segment-sum (the Pallas kernels instead do a per-block
+    one-hot MXU matmul; results identical).
+    """
+    seg = seg.astype(jnp.int32)
+    D = doc_ids.shape[1]
+    segc = jnp.clip(seg, 0, D - 1)
+    gdoc = jnp.take_along_axis(doc_ids, segc, axis=1)  # [B,T]
+    gdoc = jnp.where(seg >= 0, gdoc, n_docs)  # padding → overflow bucket
+    flat = jax.ops.segment_sum(
+        prod_or_scores.reshape(-1), gdoc.reshape(-1), num_segments=n_docs + 1
+    )
+    return flat[:n_docs]
+
+
+def scatter_block_scores(
+    block_scores: jnp.ndarray, doc_ids: jnp.ndarray, n_docs: int
+) -> jnp.ndarray:
+    """[B,D] per-block scores + [B,D] doc ids → [n_docs] global scores."""
+    ids = jnp.where(doc_ids >= 0, doc_ids, n_docs)
+    out = jax.ops.segment_sum(
+        block_scores.reshape(-1), ids.reshape(-1), num_segments=n_docs + 1
+    )
+    return out[:n_docs]
+
+
+@partial(jax.jit, static_argnames=("codec", "block_size", "n_docs", "scale"))
+def _score_packed(
+    q,
+    seg,
+    start_pos,
+    start_abs,
+    vals,
+    doc_ids,
+    ctrl,
+    data,
+    words,
+    widths,
+    comps,
+    *,
+    codec: str,
+    block_size: int,
+    n_docs: int,
+    scale: float,
+):
+    if codec == "dotvbyte":
+        gaps = decode_gaps_dotvbyte(ctrl, data)
+        c = components_from_gaps(gaps, seg, start_pos, start_abs)
+    elif codec == "bitpack":
+        gaps = decode_gaps_bitpack(words, widths, block_size)
+        c = components_from_gaps(gaps, seg, start_pos, start_abs)
+    else:  # uncompressed
+        c = comps
+    vals_f = dequantise_values(vals, scale)
+    prod = block_products(q, c, vals_f, seg)
+    return combine_block_scores(prod, seg, doc_ids, n_docs)
+
+
+def score_packed(q_dense, packed: PackedBlocks) -> jnp.ndarray:
+    """Scores of every document for one dense query. [n_docs] f32."""
+    zero_u8 = np.zeros((packed.n_blocks, 1), dtype=np.uint8)
+    zero_u32 = np.zeros((packed.n_blocks, 1), dtype=np.uint32)
+    zero_i32 = np.zeros((packed.n_blocks,), dtype=np.int32)
+    return _score_packed(
+        jnp.asarray(q_dense, dtype=jnp.float32),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+        jnp.asarray(packed.doc_ids),
+        jnp.asarray(packed.ctrl if packed.ctrl is not None else zero_u8),
+        jnp.asarray(packed.data if packed.data is not None else zero_u8),
+        jnp.asarray(packed.words if packed.words is not None else zero_u32),
+        jnp.asarray(packed.widths if packed.widths is not None else zero_i32),
+        jnp.asarray(
+            packed.comps
+            if packed.comps is not None
+            else np.zeros(packed.seg.shape, dtype=np.int32)
+        ),
+        codec=packed.codec,
+        block_size=packed.block_size,
+        n_docs=packed.n_docs,
+        scale=float(packed.value_format.scale),
+    )
+
+
+def score_packed_batch(Q, packed: PackedBlocks) -> jnp.ndarray:
+    """Scores for a batch of dense queries. [n_queries, n_docs]."""
+    return jnp.stack([score_packed(q, packed) for q in Q])
+
+
+def make_doc_aligned_scan(mesh, axes: tuple[str, ...], docs_local: int, scale: float):
+    """§Perf opt1: doc-aligned sharded scan (EXPERIMENTS.md).
+
+    Each device owns a contiguous range of ``docs_local`` documents AND
+    exactly the packed blocks containing them (arrays carry an explicit
+    leading shard dim sharded over ``axes``; doc_ids are range-LOCAL),
+    so the score scatter is device-local and the scan path carries ZERO
+    collectives. Queries replicate. fn(arrays, Q [nq, dim_pad]) →
+    [nq, n_shards·docs_local]."""
+    from jax.sharding import PartitionSpec as P
+
+    def local_scan(arrays, Q):
+        arrays = jax.tree.map(lambda a: a[0], arrays)  # drop shard dim
+        gaps = decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
+        comps = components_from_gaps(
+            gaps, arrays["seg"], arrays["start_pos"], arrays["start_abs"]
+        )
+        vals_f = dequantise_values(arrays["vals"], scale)
+
+        def one(q):
+            prod = block_products(q, comps, vals_f, arrays["seg"])
+            return combine_block_scores(prod, arrays["seg"], arrays["doc_ids"], docs_local)
+
+        return jax.vmap(one)(Q)
+
+    return jax.shard_map(
+        local_scan,
+        mesh=mesh,
+        in_specs=(P(axes), P(None, None)),
+        out_specs=P(None, axes),
+        check_vma=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-document row layout (serve-engine rescoring path)
+# ---------------------------------------------------------------------------
+# Candidate re-scoring in the batched Seismic engine gathers a fixed-
+# capacity row per candidate document. Rows are either raw components
+# (uncompressed) or a DotVByte (ctrl,data) pair decoded on the fly — the
+# decode is identical to the block path but per-row.
+
+
+def decode_doc_rows_dotvbyte(ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> jnp.ndarray:
+    """ctrl u8 [N, L/8], data u8 [N, DP] → absolute components i32 [N, L].
+
+    Row gaps are encoded with the first gap absolute (per-doc alignment);
+    padding gaps are 0 with value 0, the usual neutral trick."""
+    gaps = decode_gaps_dotvbyte(ctrl_rows, data_rows)
+    return jnp.cumsum(gaps, axis=1)
+
+
+def score_doc_rows(
+    q: jnp.ndarray,
+    comps_rows: jnp.ndarray,  # i32 [N, L]
+    vals_rows: jnp.ndarray,  # [N, L] storage dtype
+    nnz: jnp.ndarray,  # i32 [N]
+    scale: float,
+) -> jnp.ndarray:
+    """Exact ⟨q, doc⟩ for N gathered candidate rows → [N] f32."""
+    L = comps_rows.shape[1]
+    mask = jnp.arange(L)[None, :] < nnz[:, None]
+    qv = jnp.take(q, comps_rows, axis=0)
+    vals = dequantise_values(vals_rows, scale)
+    return (qv * vals * mask).sum(axis=1)

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the forward-index scoring hot path.
+
+``dotvbyte_dot``  — the paper's DotVByte, TPU-adapted (DESIGN.md §3)
+``bitpack_dot``   — beyond-paper fixed-width codec, runtime + bucketed
+``ops``           — jit wrappers (padding, interpret-mode, combine)
+``ref``           — pure-jnp oracles each kernel is asserted against
+"""
+
+from .bitpack_dot import bitpack_block_scores, bitpack_block_scores_w
+from .dotvbyte_dot import dotvbyte_block_scores
+from .ops import (
+    default_interpret,
+    score_bitpack,
+    score_bitpack_bucketed,
+    score_dotvbyte,
+)
+from .ref import bitpack_block_scores_ref, dotvbyte_block_scores_ref
+
+__all__ = [
+    "bitpack_block_scores",
+    "bitpack_block_scores_w",
+    "dotvbyte_block_scores",
+    "default_interpret",
+    "score_bitpack",
+    "score_bitpack_bucketed",
+    "score_dotvbyte",
+    "bitpack_block_scores_ref",
+    "dotvbyte_block_scores_ref",
+]

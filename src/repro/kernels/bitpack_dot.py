@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fixed-width (bitpack) decode + fused inner product.
+
+The beyond-paper TPU-native codec (DESIGN.md §3): each block of T gaps is
+packed at one bit-width, so the decode is a pure shift+mask with *no*
+data-dependent offsets — every lane knows statically which word and bit
+it reads. Two variants:
+
+* ``bitpack_block_scores``      — runtime per-block width (one kernel for
+  the whole index; widths arrive as a (1,1) scalar block).
+* ``bitpack_block_scores_w``    — compile-time width (one kernel per
+  width bucket; tight word arrays, no over-read — the §Perf layout).
+
+Fusion (decode → q gather → FMA → one-hot MXU reduce) matches
+``dotvbyte_dot``; only the gap decode differs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitpack_block_scores", "bitpack_block_scores_w"]
+
+
+def _decode_fixed(words: jnp.ndarray, width: jnp.ndarray, T: int) -> jnp.ndarray:
+    """Unpack T values of ``width`` bits from u32 words (LSB-first)."""
+    w32 = words.astype(jnp.uint32)
+    wu = width.astype(jnp.uint32)
+    bitpos = jax.lax.iota(jnp.uint32, T) * wu
+    wi = (bitpos >> 5).astype(jnp.int32)
+    off = bitpos & 31
+    lo = jnp.take(w32, wi, axis=0) >> off
+    hi_raw = jnp.take(w32, wi + 1, axis=0)
+    hi = jnp.where(off > 0, hi_raw << (jnp.uint32(32) - off), jnp.uint32(0))
+    mask = (jnp.uint32(1) << wu) - jnp.uint32(1)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def _body(q, words, width, seg, sp, sa, vals, scale, T, D):
+    seg = seg.astype(jnp.int32)  # i8 in the slim metadata layout
+    gaps = _decode_fixed(words, width, T)
+    t = jnp.cumsum(gaps)
+    segc = jnp.clip(seg, 0, D - 1)
+    tp = jnp.take(t, sp, axis=0)
+    comp = jnp.where(seg >= 0, jnp.take(sa, segc) + t - jnp.take(tp, segc), 0)
+    qv = jnp.take(q, comp, axis=0)
+    prod = qv * vals.astype(jnp.float32) * jnp.float32(scale)
+    prod = prod * (seg >= 0).astype(jnp.float32)
+    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
+        jnp.float32
+    )
+    return jnp.dot(prod[None, :], onehot, preferred_element_type=jnp.float32)[0]
+
+
+def _kernel_dyn(q_ref, words_ref, width_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale):
+    T = seg_ref.shape[1]
+    D = sp_ref.shape[1]
+    # pad one word for the straddle read
+    words = jnp.concatenate([words_ref[0, :], jnp.zeros((1,), jnp.uint32)])
+    out_ref[0, :] = _body(
+        q_ref[0, :], words, width_ref[0, 0], seg_ref[0, :], sp_ref[0, :],
+        sa_ref[0, :], vals_ref[0, :], scale, T, D,
+    )
+
+
+def _kernel_static(q_ref, words_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale, width):
+    T = seg_ref.shape[1]
+    D = sp_ref.shape[1]
+    words = jnp.concatenate([words_ref[0, :], jnp.zeros((1,), jnp.uint32)])
+    out_ref[0, :] = _body(
+        q_ref[0, :], words, jnp.uint32(width), seg_ref[0, :], sp_ref[0, :],
+        sa_ref[0, :], vals_ref[0, :], scale, T, D,
+    )
+
+
+def _row(width):
+    return pl.BlockSpec((1, width), lambda b: (b, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def bitpack_block_scores(
+    q, words, widths, seg, start_pos, start_abs, vals, *, scale=1.0, interpret=True
+):
+    """Runtime-width variant. widths i32 [B]. Returns [B, D] f32."""
+    B, W = words.shape
+    T = seg.shape[1]
+    D = start_pos.shape[1]
+    V = q.shape[0]
+    return pl.pallas_call(
+        functools.partial(_kernel_dyn, scale=scale),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, V), lambda b: (0, 0)),
+            _row(W),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            _row(T),
+            _row(D),
+            _row(D),
+            _row(T),
+        ],
+        out_specs=_row(D),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(q[None, :], words, widths[:, None], seg, start_pos, start_abs, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "width", "interpret"))
+def bitpack_block_scores_w(
+    q, words, seg, start_pos, start_abs, vals, *, width: int, scale=1.0, interpret=True
+):
+    """Compile-time-width variant for width-bucketed indexes. [B, D] f32."""
+    B, W = words.shape
+    T = seg.shape[1]
+    D = start_pos.shape[1]
+    V = q.shape[0]
+    return pl.pallas_call(
+        functools.partial(_kernel_static, scale=scale, width=width),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, V), lambda b: (0, 0)),
+            _row(W),
+            _row(T),
+            _row(D),
+            _row(D),
+            _row(T),
+        ],
+        out_specs=_row(D),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(q[None, :], words, seg, start_pos, start_abs, vals)

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: fused DotVByte decode + gather + inner product.
+
+The paper's DotVByte (§2.2) decodes 8 components per ``_mm_shuffle_epi8``
+and keeps the whole decode→gather→FMA chain in SIMD registers. The TPU
+adaptation (DESIGN.md §3) keeps the fusion but restructures the decode:
+
+  control bits ──unpack──► per-value byte counts ──prefix-sum──► offsets
+  offsets ──dual byte-gather──► gaps ──segmented cumsum──► components
+  components ──gather q (VMEM-resident)──► qv ──FMA vals──► products
+  products ──one-hot MXU matmul──► per-block document scores
+
+Everything happens on one VMEM-resident block per grid step; decoded
+components never touch HBM (the paper's "no intermediate buffer"
+property). The query is densified once and stays in VMEM across the
+whole grid (vocab ≤ 2¹⁶ ⇒ ≤ 256 KB f32 ≪ 16 MB VMEM).
+
+Grid: one step per packed block. Block shapes are (1, X) rows of the
+packed arrays — lane-aligned because T % 128 == 0, T/8 % 8 == 0.
+
+Validated against ``repro.kernels.ref`` in interpret mode (this container
+is CPU-only); the data-dependent byte gather is the op to watch when
+lowering on real Mosaic (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dotvbyte_block_scores", "dotvbyte_block_scores_batch"]
+
+
+def _kernel(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
+    T8 = ctrl_ref.shape[1]
+    T = T8 * 8
+    D = sp_ref.shape[1]
+
+    # --- decode: control bits → byte offsets → gaps ---------------------
+    ctrl = ctrl_ref[0, :].astype(jnp.int32)  # [T/8]
+    bits = (ctrl[:, None] >> jax.lax.broadcasted_iota(jnp.int32, (1, 8), 1)) & 1
+    bits = bits.reshape(T)  # LSB-first, one bit per value
+    lens = bits + 1
+    ends = jnp.cumsum(lens)
+    starts = ends - lens  # exclusive prefix sum = the "scroll" amounts
+    data = data_ref[0, :].astype(jnp.int32)  # [DP]
+    lo = jnp.take(data, starts, axis=0)
+    hi = jnp.take(data, starts + 1, axis=0) * bits
+    gaps = lo + (hi << 8)
+
+    # --- segmented rebase: gaps → absolute components --------------------
+    seg = seg_ref[0, :].astype(jnp.int32)  # [T] (i8 in the slim layout)
+    t = jnp.cumsum(gaps)
+    segc = jnp.clip(seg, 0, D - 1)
+    tp = jnp.take(t, sp_ref[0, :], axis=0)  # [D] cumsum at fragment starts
+    comp = jnp.where(seg >= 0, jnp.take(sa_ref[0, :], segc) + t - jnp.take(tp, segc), 0)
+
+    # --- fused dot: gather query, FMA, one-hot reduce on the MXU ---------
+    q = q_ref[0, :]
+    qv = jnp.take(q, comp, axis=0)
+    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
+    prod = qv * vals * (seg >= 0).astype(jnp.float32)  # [T]
+    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
+        jnp.float32
+    )
+    out_ref[0, :] = jnp.dot(prod[None, :], onehot, preferred_element_type=jnp.float32)[0]
+
+
+def _kernel_batch(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
+    """Batched-query variant: decode ONCE per block, score every query
+    against it in VMEM (§Perf opt4 — the scan's decode and intermediates
+    never touch HBM; per-step HBM traffic = index payload + Q + scores)."""
+    T8 = ctrl_ref.shape[1]
+    T = T8 * 8
+    D = sp_ref.shape[1]
+    ctrl = ctrl_ref[0, :].astype(jnp.int32)
+    bits = (ctrl[:, None] >> jax.lax.broadcasted_iota(jnp.int32, (1, 8), 1)) & 1
+    bits = bits.reshape(T)
+    lens = bits + 1
+    ends = jnp.cumsum(lens)
+    starts = ends - lens
+    data = data_ref[0, :].astype(jnp.int32)
+    gaps = jnp.take(data, starts, axis=0) + (jnp.take(data, starts + 1, axis=0) * bits << 8)
+    seg = seg_ref[0, :].astype(jnp.int32)
+    t = jnp.cumsum(gaps)
+    segc = jnp.clip(seg, 0, D - 1)
+    tp = jnp.take(t, sp_ref[0, :], axis=0)
+    comp = jnp.where(seg >= 0, jnp.take(sa_ref[0, :], segc) + t - jnp.take(tp, segc), 0)
+
+    Q = q_ref[...]  # [nq, V] resident in VMEM across the whole grid
+    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
+    w = vals * (seg >= 0).astype(jnp.float32)
+    qv = jnp.take(Q, comp, axis=1)  # [nq, T]
+    prod = qv * w[None, :]
+    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
+        jnp.float32
+    )
+    out_ref[0] = jnp.dot(prod, onehot, preferred_element_type=jnp.float32)  # [nq, D]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def dotvbyte_block_scores_batch(
+    Q: jnp.ndarray,  # [nq, vocab_pad] f32
+    ctrl: jnp.ndarray,
+    data: jnp.ndarray,
+    seg: jnp.ndarray,
+    start_pos: jnp.ndarray,
+    start_abs: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """[B, nq, D] per-block scores for a query batch."""
+    B, T8 = ctrl.shape
+    T = T8 * 8
+    D = start_pos.shape[1]
+    DP = data.shape[1]
+    nq, V = Q.shape
+    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel_batch, scale=scale),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((nq, V), lambda b: (0, 0)),
+            row(T8),
+            row(DP),
+            row(T),
+            row(D),
+            row(D),
+            row(T),
+        ],
+        out_specs=pl.BlockSpec((1, nq, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nq, D), jnp.float32),
+        interpret=interpret,
+    )(Q, ctrl, data, seg, start_pos, start_abs, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def dotvbyte_block_scores(
+    q: jnp.ndarray,  # [vocab_pad] f32, vocab_pad % 128 == 0
+    ctrl: jnp.ndarray,  # [B, T/8] u8
+    data: jnp.ndarray,  # [B, DP] u8, DP % 128 == 0, ≥ 1 over-read byte
+    seg: jnp.ndarray,  # [B, T] i32
+    start_pos: jnp.ndarray,  # [B, D] i32
+    start_abs: jnp.ndarray,  # [B, D] i32
+    vals: jnp.ndarray,  # [B, T] storage dtype
+    *,
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-block document scores [B, D] (combine with scatter_block_scores)."""
+    B, T8 = ctrl.shape
+    T = T8 * 8
+    D = start_pos.shape[1]
+    DP = data.shape[1]
+    V = q.shape[0]
+
+    grid = (B,)
+    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, V), lambda b: (0, 0)),  # q resident across grid
+            row(T8),
+            row(DP),
+            row(T),
+            row(D),
+            row(D),
+            row(T),
+        ],
+        out_specs=row(D),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(q[None, :], ctrl, data, seg, start_pos, start_abs, vals)

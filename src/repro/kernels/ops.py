@@ -1,0 +1,121 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle the lane-alignment plumbing (pad query / data streams to
+128-multiples), pick interpret mode on CPU automatically, and combine
+per-block scores into global document scores.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forward_index import PackedBlocks
+from repro.core.scoring import scatter_block_scores
+
+from .bitpack_dot import bitpack_block_scores, bitpack_block_scores_w
+from .dotvbyte_dot import dotvbyte_block_scores
+
+__all__ = [
+    "default_interpret",
+    "pad_to",
+    "score_dotvbyte",
+    "score_bitpack",
+    "score_bitpack_bucketed",
+]
+
+
+def default_interpret() -> bool:
+    """interpret=True unless running on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: np.ndarray, multiple: int, axis: int = -1) -> np.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def _padded_query(q_dense, dim: int) -> jnp.ndarray:
+    q = np.zeros(((dim + 127) // 128) * 128, dtype=np.float32)
+    q[:dim] = np.asarray(q_dense, dtype=np.float32)[:dim]
+    return jnp.asarray(q)
+
+
+def score_dotvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+    """Full fused-kernel scoring path: [n_docs] f32."""
+    assert packed.codec == "dotvbyte"
+    interp = default_interpret() if interpret is None else interpret
+    q = _padded_query(q_dense, packed.dim)
+    data = pad_to(packed.data, 128, axis=1)
+    block = dotvbyte_block_scores(
+        q,
+        jnp.asarray(packed.ctrl),
+        jnp.asarray(data),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+        scale=float(packed.value_format.scale),
+        interpret=interp,
+    )
+    return scatter_block_scores(block, jnp.asarray(packed.doc_ids), packed.n_docs)
+
+
+def score_bitpack(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+    """Runtime-width bitpack kernel path: [n_docs] f32."""
+    assert packed.codec == "bitpack"
+    interp = default_interpret() if interpret is None else interpret
+    q = _padded_query(q_dense, packed.dim)
+    words = pad_to(packed.words, 128, axis=1)
+    block = bitpack_block_scores(
+        q,
+        jnp.asarray(words),
+        jnp.asarray(packed.widths),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+        scale=float(packed.value_format.scale),
+        interpret=interp,
+    )
+    return scatter_block_scores(block, jnp.asarray(packed.doc_ids), packed.n_docs)
+
+
+def score_bitpack_bucketed(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+    """Width-bucketed path: one static-width kernel per distinct width.
+
+    Word arrays are sliced tight per bucket (ceil(T·w/32) words, padded to
+    the 128 lane multiple) so HBM traffic tracks the true compressed
+    size — the §Perf layout.
+    """
+    assert packed.codec == "bitpack"
+    interp = default_interpret() if interpret is None else interpret
+    q = _padded_query(q_dense, packed.dim)
+    T = packed.block_size
+    n_docs = packed.n_docs
+    total = jnp.zeros((n_docs,), dtype=jnp.float32)
+    for w in sorted(set(int(x) for x in packed.widths)):
+        sel = np.flatnonzero(packed.widths == w)
+        tight = (T * w + 31) // 32
+        words = pad_to(packed.words[sel, :tight], 128, axis=1)
+        block = bitpack_block_scores_w(
+            q,
+            jnp.asarray(words),
+            jnp.asarray(packed.seg[sel]),
+            jnp.asarray(packed.start_pos[sel]),
+            jnp.asarray(packed.start_abs[sel]),
+            jnp.asarray(packed.vals[sel]),
+            width=w,
+            scale=float(packed.value_format.scale),
+            interpret=interp,
+        )
+        total = total + scatter_block_scores(
+            block, jnp.asarray(packed.doc_ids[sel]), n_docs
+        )
+    return total

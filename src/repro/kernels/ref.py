@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose targets).
+
+Each ``*_block_scores_ref`` mirrors the corresponding kernel's contract
+exactly — same inputs, same [B, D] output — built from the shared
+decode/score primitives in ``repro.core.scoring`` plus the same one-hot
+reduction the kernels run on the MXU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import (
+    block_products,
+    components_from_gaps,
+    decode_gaps_bitpack,
+    decode_gaps_dotvbyte,
+    dequantise_values,
+)
+
+__all__ = ["dotvbyte_block_scores_ref", "bitpack_block_scores_ref"]
+
+
+def _onehot_reduce(prod: jnp.ndarray, seg: jnp.ndarray, D: int) -> jnp.ndarray:
+    onehot = (seg[:, :, None] == jnp.arange(D)[None, None, :]).astype(jnp.float32)
+    return jnp.einsum("bt,btd->bd", prod, onehot)
+
+
+@jax.jit
+def dotvbyte_block_scores_ref(q, ctrl, data, seg, start_pos, start_abs, vals, scale=1.0):
+    gaps = decode_gaps_dotvbyte(ctrl, data)
+    comps = components_from_gaps(gaps, seg, start_pos, start_abs)
+    prod = block_products(q, comps, dequantise_values(vals, scale), seg)
+    return _onehot_reduce(prod, seg, start_pos.shape[1])
+
+
+@jax.jit
+def bitpack_block_scores_ref(q, words, widths, seg, start_pos, start_abs, vals, scale=1.0):
+    gaps = decode_gaps_bitpack(words, widths, seg.shape[1])
+    comps = components_from_gaps(gaps, seg, start_pos, start_abs)
+    prod = block_products(q, comps, dequantise_values(vals, scale), seg)
+    return _onehot_reduce(prod, seg, start_pos.shape[1])

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks the device count on first
+#   backend init). Smoke tests / benches never import this module, so
+#   they keep seeing 1 CPU device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell — 40 assigned cells + the
+paper's retrieval cells — lower and compile the step on the production
+meshes:
+
+    single-pod : (16, 16)      ("data", "model")        = 256 chips
+    multi-pod  : (2, 16, 16)   ("pod", "data", "model") = 512 chips
+
+Inputs are ShapeDtypeStructs (no allocation). Success proves the
+sharding rules are coherent (no mismatched collectives, layouts or
+specs); the printed ``memory_analysis()`` proves per-device fit and
+``cost_analysis()`` feeds §Roofline. Results land in
+``experiments/dryrun/<mesh>/<arch>__<shape>.json``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --skip-retrieval
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, RETRIEVAL_IDS, get_arch
+from repro.launch.hlo_stats import HW, count_hlo_costs, parse_collectives, roofline_terms
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch_id: str, shape: str, mesh, *, save_dir: str | None, mesh_tag: str,
+             keep_hlo: bool = False) -> dict:
+    arch = get_arch(arch_id)
+    t0 = time.time()
+    cell = arch.build_cell(shape, mesh)
+    n_chips = mesh.devices.size
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+        )
+        lowered = jitted.lower(*cell.input_structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()  # NOTE: counts while bodies once
+    hlo = compiled.as_text()
+    hc = count_hlo_costs(hlo)  # trip-count-aware (hlo_stats.py)
+
+    device_flops = float(hc["flops"])
+    device_bytes = float(hc["bytes"])
+    coll_bytes = float(hc["collective_bytes"])
+    rec = {
+        "arch": arch_id,
+        "shape": shape,
+        "kind": cell.kind,
+        "mesh": mesh_tag,
+        "n_chips": int(n_chips),
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_device_bytes": int(
+                mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes
+            ),
+        },
+        "cost": {
+            "device_flops": device_flops,
+            "device_bytes": device_bytes,
+            "xla_cost_analysis_flops_unscaled": float(cost.get("flops", 0.0)),
+            "xla_cost_analysis_bytes_unscaled": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": {
+            "by_op": hc["collectives_by_op"],
+            "total_bytes_per_device": coll_bytes,
+        },
+        "roofline": roofline_terms(
+            global_flops=device_flops * n_chips,
+            device_flops=device_flops,
+            device_bytes=device_bytes,
+            collective_bytes=coll_bytes,
+            n_chips=n_chips,
+            model_flops=cell.model_flops,
+        ),
+        "meta": cell.meta,
+    }
+    if save_dir:
+        d = os.path.join(save_dir, mesh_tag)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{arch_id}__{shape}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if keep_hlo:
+            with open(os.path.join(d, f"{arch_id}__{shape}.hlo.txt"), "w") as f:
+                f.write(hlo)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-retrieval", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod256", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pod512x2", make_production_mesh(multi_pod=True)))
+
+    arch_ids = [args.arch] if args.arch else list(
+        ARCH_IDS + (() if args.skip_retrieval else RETRIEVAL_IDS)
+    )
+
+    n_ok = n_fail = 0
+    for mesh_tag, mesh in meshes:
+        for arch_id in arch_ids:
+            arch = get_arch(arch_id)
+            shapes = [args.shape] if args.shape else list(arch.shape_names)
+            for shape in shapes:
+                tag = f"[{mesh_tag}] {arch_id} × {shape}"
+                try:
+                    rec = run_cell(
+                        arch_id, shape, mesh,
+                        save_dir=args.out, mesh_tag=mesh_tag, keep_hlo=args.keep_hlo,
+                    )
+                    r = rec["roofline"]
+                    print(
+                        f"OK  {tag:60s} compile={rec['compile_s']:6.1f}s "
+                        f"mem/dev={rec['memory']['peak_device_bytes']/2**30:6.2f}GiB "
+                        f"terms(c/m/n)=({r['compute_s']:.2e},{r['memory_s']:.2e},"
+                        f"{r['collective_s']:.2e})s dominant={r['dominant']}"
+                    , flush=True)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    n_fail += 1
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+                    if args.fail_fast:
+                        raise
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

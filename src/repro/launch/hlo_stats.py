@@ -1,0 +1,337 @@
+"""Post-SPMD HLO statistics: collective bytes + roofline terms.
+
+``collective_bytes`` is not part of ``compiled.cost_analysis()`` — per
+the brief it is recovered by parsing the optimized (partitioned) HLO
+text and summing the result-shape bytes of every collective op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute
+
+Conventions (documented in EXPERIMENTS.md §Roofline):
+
+* shapes in the partitioned module are PER-DEVICE, so summed bytes are
+  per-device wire traffic — exactly what the collective roofline term
+  wants (bytes / link_bw per chip);
+* all-reduce counts 2× its result bytes (ring reduce-scatter +
+  all-gather decomposition); others count 1× their shape bytes;
+* tuple-shaped collectives sum their component shapes.
+
+Hardware constants are TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3D-torus, per the brief).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s / chip
+    ici_bw: float = 50e9  # bytes/s / link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware HLO cost model
+# ---------------------------------------------------------------------------
+# XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, which
+# under-counts scanned models (layers × microbatches) by orders of
+# magnitude. This counter walks the optimized HLO text recursively:
+# ``while`` costs multiply by the trip count recovered from the loop
+# condition's comparison constant (jax scans lower to ``i < N``);
+# ``fusion``/``call`` recurse into their computations. FLOPs count dot /
+# convolution ops (they dominate these models; elementwise adds 1 flop
+# per output element). Bytes follow XLA's convention: per instruction,
+# operand bytes + result bytes.
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\])\S*)\s+([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALL_TARGET_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "log", "rsqrt", "sqrt", "tanh", "power", "negate", "compare", "select",
+}
+
+
+def _dims(shape_txt: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_txt)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elems(shape_txt: str) -> int:
+    n = 1
+    for d in _dims(shape_txt):
+        n *= d
+    return n
+
+
+def count_hlo_costs(hlo_text: str) -> dict:
+    """→ {"flops": device_flops, "bytes": device_bytes} with while-loop
+    trip counts applied. Shapes in the partitioned module are per-device."""
+    # --- split into computations -------------------------------------
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip()) if line and not line.startswith(" ") else None
+        if hdr is not None and "->" in line and line.rstrip().endswith("{"):
+            cur = hdr.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # --- shape table for operand lookup --------------------------------
+    shapes: dict[str, str] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+
+    def trip_count(cond_name: str) -> int:
+        """Largest integer constant in the loop condition ≈ trip count
+        (jax scans lower to ``i < N``)."""
+        best = 1
+        for ln in comps.get(cond_name, []):
+            for c in _CONST_RE.findall(ln):
+                best = max(best, int(c))
+        return best
+
+    _COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                 "collective-permute")
+    memo: dict[str, tuple[float, float, dict]] = {}
+    sliced_memo: dict[int, dict] = {}
+
+    def _sliced_params(comp_lines: list[str]) -> dict[int, int]:
+        """Map fusion-parameter index → slice bytes, for parameters that
+        are only read through dynamic-slice / gather inside the fusion."""
+        key = id(comp_lines)
+        if key in sliced_memo:
+            return sliced_memo[key]
+        param_idx: dict[str, int] = {}
+        uses: dict[str, list[tuple[str, int]]] = {}
+        for ln2 in comp_lines:
+            m2 = _INSTR_RE.match(ln2)
+            if not m2:
+                continue
+            res2, shape2, op2, rest2 = m2.groups()
+            if op2 == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", ln2)
+                if pm:
+                    param_idx[res2] = int(pm.group(1))
+            ops2 = _OPERAND_RE.findall(rest2.split(")", 1)[0])
+            for o2 in ops2:
+                uses.setdefault(o2, []).append((op2, _shape_bytes(shape2)))
+        out: dict[int, int] = {}
+        for pname, idx in param_idx.items():
+            us = uses.get(pname, [])
+            if us and all(u[0] in ("dynamic-slice", "gather") for u in us):
+                out[idx] = sum(u[1] for u in us)
+        sliced_memo[key] = out
+        return out
+
+    def comp_cost(name: str) -> tuple[float, float, dict]:
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        flops = bytes_ = 0.0
+        coll: dict[str, float] = {}
+        for ln in comps.get(name, []):
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            _res, shape_txt, op, rest = m.groups()
+            out_elems = _elems(shape_txt)
+            out_bytes = _shape_bytes(shape_txt)
+            paren = rest.split(")", 1)[0]
+            operands = _OPERAND_RE.findall(paren)
+            op_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in operands)
+
+            base = op.replace("-start", "") if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue  # async pair: cost attributed at -start
+            if base in _COLL_OPS:
+                b = out_bytes * (2 if base == "all-reduce" else 1)
+                coll[base] = coll.get(base, 0.0) + b
+                bytes_ += op_bytes + out_bytes
+                continue
+            if op == "dot":
+                contract = 1
+                cm = _CONTRACT_RE.search(ln)
+                if cm and operands:
+                    lhs_dims = _dims(shapes.get(operands[0], ""))
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+                flops += 2.0 * out_elems * contract
+                bytes_ += op_bytes + out_bytes
+            elif op == "convolution":
+                flops += 2.0 * out_elems
+                bytes_ += op_bytes + out_bytes
+            elif op == "while":
+                body = cond = None
+                for kind, tgt in re.findall(r"(body|condition)=%?([\w\.\-]+)", ln):
+                    body, cond = (tgt, cond) if kind == "body" else (body, tgt)
+                trips = trip_count(cond) if cond else 1
+                bf, bb, bc = comp_cost(body) if body else (0.0, 0.0, {})
+                cf, cb, _cc = comp_cost(cond) if cond else (0.0, 0.0, {})
+                flops += trips * (bf + cf)
+                bytes_ += trips * (bb + cb)
+                for k, v in bc.items():
+                    coll[k] = coll.get(k, 0.0) + trips * v
+            elif op in ("dynamic-slice", "gather"):
+                # traffic = the slice actually moved, not the full operand
+                # (scan bodies read per-layer weights by dynamic-slice from
+                # the [L, …] stack — counting the stack would overcount L×)
+                bytes_ += 2 * out_bytes
+            elif op == "dynamic-update-slice":
+                upd = _shape_bytes(shapes.get(operands[1], "")) if len(operands) > 1 else 0
+                bytes_ += 2 * upd  # read+write the updated region only
+            elif op in ("fusion", "call", "custom-call", "map", "reduce",
+                        "reduce-window", "sort", "scatter", "select-and-scatter",
+                        "conditional"):
+                for t in _CALL_TARGET_RE.findall(ln):
+                    tf_, _tb, tc = comp_cost(t)
+                    flops += tf_  # fused inner traffic stays in VMEM
+                    for k, v in tc.items():
+                        coll[k] = coll.get(k, 0.0) + v
+                flops += out_elems  # ~1 flop per produced element
+                # per-operand bytes, slice-aware: a fusion parameter only
+                # consumed via dynamic-slice/gather inside contributes its
+                # slice size, not its full (possibly [L, …]-stacked) size
+                tgt = _CALL_TARGET_RE.findall(ln)
+                sliced = _sliced_params(comps.get(tgt[0], [])) if tgt else {}
+                op_bytes2 = 0
+                for i, o in enumerate(operands):
+                    if i in sliced:
+                        op_bytes2 += sliced[i]
+                    else:
+                        op_bytes2 += _shape_bytes(shapes.get(o, ""))
+                bytes_ += op_bytes2 + out_bytes
+            elif op in _ELEMENTWISE_FLOP_OPS:
+                flops += out_elems
+                bytes_ += op_bytes + out_bytes
+            elif op in ("parameter", "constant", "get-tuple-element", "tuple",
+                        "bitcast", "copy-start", "copy-done"):
+                continue  # no HBM traffic attributed
+            else:
+                bytes_ += op_bytes + out_bytes
+        memo[name] = (flops, bytes_, coll)
+        return memo[name]
+
+    entry = None
+    for ln in hlo_text.splitlines():
+        if ln.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(ln.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else ""
+    f, b, c = comp_cost(entry)
+    return {
+        "flops": f,
+        "bytes": b,
+        "collective_bytes": sum(c.values()),
+        "collectives_by_op": c,
+    }
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    total_bytes: float
+
+    def __str__(self) -> str:
+        parts = ", ".join(f"{k}={v/1e6:.1f}MB" for k, v in sorted(self.bytes_by_op.items()))
+        return f"collectives: {parts} (total {self.total_bytes/1e6:.1f}MB/device)"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_op: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: count the -start only
+        b = _shape_bytes(shape_txt)
+        if op == "all-reduce":
+            b *= 2  # ring = reduce-scatter + all-gather
+        by_op[op] = by_op.get(op, 0.0) + b
+    return CollectiveStats(by_op, sum(by_op.values()))
+
+
+def roofline_terms(
+    *,
+    global_flops: float,
+    device_flops: float,
+    device_bytes: float,
+    collective_bytes: float,
+    n_chips: int,
+    model_flops: float,
+    hw: HW = HW(),
+) -> dict:
+    """The three §Roofline terms (seconds) + derived quantities."""
+    compute_s = device_flops / hw.peak_flops
+    memory_s = device_bytes / hw.hbm_bw
+    collective_s = collective_bytes / hw.ici_bw
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(compute_s, memory_s, collective_s)
+    useful = model_flops / max(global_flops, 1.0)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "model_flops": model_flops,
+        "hlo_flops_global": global_flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": compute_s / bound if bound > 0 else 0.0,
+        "mfu_upper_bound": (model_flops / n_chips / hw.peak_flops) / bound if bound > 0 else 0.0,
+    }

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+``make_production_mesh()`` is a FUNCTION (never a module constant) so
+importing this module never touches jax device state — critical because
+smoke tests must see 1 CPU device while the dry-run forces 512
+placeholder devices via XLA_FLAGS before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_debug_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod ("data", "model"); ×2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-device CPU tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

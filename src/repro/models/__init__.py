@@ -1,0 +1,9 @@
+"""Model zoo: the 10 assigned architectures + the sparse encoder.
+
+LM family  : transformer.py (dense + MoE via moe.py)
+GNN        : gnn.py (GAT, segment-op message passing, neighbour sampler)
+RecSys     : recsys.py (DeepFM, DCN-v2, SASRec, DIN; EmbeddingBag substrate)
+Retrieval  : sparse_encoder.py (SPLADE-style producer of sparse embeddings)
+"""
+
+from . import common, gnn, moe, recsys, sparse_encoder, transformer  # noqa: F401

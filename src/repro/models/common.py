@@ -1,0 +1,130 @@
+"""Shared neural building blocks (plain-pytree params, no flax).
+
+Every init function takes a jax PRNG key and returns a dict pytree; every
+apply function is pure. Initialisation follows the conventions of the
+respective papers (truncated-normal embeddings, scaled Xavier for
+projections, zero-init output layers where standard).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "embed_init",
+    "rms_norm",
+    "layer_norm",
+    "mlp_init",
+    "mlp_apply",
+    "rope_freqs",
+    "apply_rope",
+    "count_params",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dt)
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32):
+    """Plain MLP: weights + biases for len(sizes)-1 layers."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        "w": [dense_init(k, a, b, dtype) for k, a, b in zip(keys, sizes[:-1], sizes[1:])],
+        "b": [jnp.zeros((b,), dtype) for b in sizes[1:]],
+    }
+
+
+def mlp_apply(params, x, activation=jax.nn.relu, final_activation=None):
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = x @ w + b
+        if i < n - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for rotary embeddings. [d_head // 2] f32."""
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freq: jnp.ndarray):
+    """x [..., S, H, Dh]; positions [..., S] → rotated x (paired halves)."""
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def shard_hint(x: jnp.ndarray, *logical: str | None) -> jnp.ndarray:
+    """Logical activation-sharding constraint, no-op off-mesh.
+
+    Entries per dim: "batch" → the data-parallel axes present on the
+    current mesh (("pod","data") / ("data",)), "model" → the model axis,
+    None → replicated. Silently skips when the axis is absent or the dim
+    is not divisible — so model code stays mesh-agnostic and smoke tests
+    on 1 CPU device are untouched."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        axis_names = tuple(mesh.axis_names) if mesh is not None else ()
+    except Exception:  # noqa: BLE001 — no mesh context
+        return x
+    if not axis_names:
+        return x
+
+    spec = []
+    for dim, name in enumerate(logical):
+        if name == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in axis_names)
+        elif name == "model":
+            axes = ("model",) if "model" in axis_names else ()
+        else:
+            axes = ()
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and x.shape[dim] % size == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+TPU-native static-shape formulation (GShard/Switch lineage adapted to
+gather/scatter rather than one-hot einsum, so it scales to 384-expert
+configs like Kimi-K2):
+
+1. router logits → top-k experts per token + softmax weights;
+2. tokens grouped by expert via a stable argsort; each expert keeps at
+   most ``capacity = ceil(T·k/E · capacity_factor)`` tokens, the rest are
+   dropped (contribute only through other experts they route to);
+3. gathered [E, C, D] batch runs the expert SwiGLU in one batched einsum
+   — sharded over the ``model`` mesh axis this IS expert parallelism,
+   and the gather/scatter lower to all-to-alls;
+4. outputs scatter-add back weighted by the router probabilities.
+
+Optionally adds shared experts (DeepSeek/Kimi style) that process every
+token densely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard_hint
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int  # per-expert hidden size
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    # ZeRO-3 just-in-time expert-weight gathering. Wins when tokens/step
+    # outweigh expert params/layer (prefill, bulk serve); loses under
+    # microbatched training where the scan re-gathers per microbatch —
+    # LMArch flips it per cell kind (EXPERIMENTS.md §Perf, kimi-k2).
+    jit_weight_gather: bool = True
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": dense_init(kr, D, E, jnp.float32),  # router kept f32
+        "w_gate": (jax.random.normal(k1, (E, D, F)) * (2.0 / (D + F)) ** 0.5).astype(dtype),
+        "w_up": (jax.random.normal(k2, (E, D, F)) * (2.0 / (D + F)) ** 0.5).astype(dtype),
+        "w_down": (jax.random.normal(k3, (E, F, D)) * (2.0 / (D + F)) ** 0.5).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        S = cfg.n_shared_experts
+        p["shared_gate"] = (jax.random.normal(ks, (D, S * F)) * (2.0 / (D + F)) ** 0.5).astype(dtype)
+        p["shared_up"] = (jax.random.normal(jax.random.fold_in(ks, 1), (D, S * F)) * (2.0 / (D + F)) ** 0.5).astype(dtype)
+        p["shared_down"] = (jax.random.normal(jax.random.fold_in(ks, 2), (S * F, D)) * (2.0 / (D + F)) ** 0.5).astype(dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max((c + 7) // 8 * 8, 8)  # lane-align
+
+
+def moe_apply(params, cfg: MoEConfig, x: jnp.ndarray):
+    """x [T, D] → (y [T, D], aux) with aux = load-balancing loss terms."""
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(T, cfg)
+
+    logits = (x.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_idx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- group tokens by expert (stable sort ⇒ deterministic drops) ----
+    flat_e = expert_idx.reshape(-1)  # [T*K]
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))  # [E]
+    rank = jnp.arange(T * K, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = rank < C
+    slot = jnp.where(keep, se.astype(jnp.int32) * C + rank, E * C)  # drop → sentinel
+
+    dispatch_tok = jnp.full((E * C + 1,), T, dtype=jnp.int32).at[slot].set(st, mode="drop")
+    dispatch_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(sw, mode="drop")
+    dispatch_tok = dispatch_tok[: E * C]
+    dispatch_w = dispatch_w[: E * C]
+
+    # ---- expert compute: batched SwiGLU over [E, C, D] -----------------
+    # expert weights are FSDP-sharded on D for storage; optionally gather
+    # them just-in-time (ZeRO-3) so the einsums never partial-sum the
+    # [E,C,*] activations over the data axis (§Perf, kimi-k2 iteration)
+    if cfg.jit_weight_gather:
+        wg = shard_hint(params["w_gate"], "model", None, None)
+        wu = shard_hint(params["w_up"], "model", None, None)
+        wd = shard_hint(params["w_down"], "model", None, None)
+    else:
+        wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    x_pad = jnp.concatenate([x, jnp.zeros((1, D), x.dtype)], axis=0)
+    xe = x_pad[dispatch_tok].reshape(E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wu
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wd)  # [E, C, D]
+
+    # ---- combine: weighted scatter-add back to tokens -------------------
+    y = (
+        jnp.zeros((T + 1, D), ye.dtype)
+        .at[dispatch_tok]
+        .add(ye.reshape(E * C, D) * dispatch_w[:, None].astype(ye.dtype))
+    )[:T]
+
+    if cfg.n_shared_experts:
+        hs = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        y = y + hs @ params["shared_down"]
+
+    # GShard aux load-balance loss: E * Σ_e (fraction routed)·(mean prob)
+    me = probs.mean(axis=0)  # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+    return y, {"load_balance_loss": aux}

@@ -1,0 +1,368 @@
+"""RecSys archs: DeepFM, DCN-v2, SASRec, DIN (+ EmbeddingBag substrate).
+
+JAX has no native ``nn.EmbeddingBag`` — per the brief it is built here
+from ``jnp.take`` + ``jax.ops.segment_sum``. All four models share one
+*combined* embedding table per config ([Σ field vocab, dim], per-field
+offsets), the standard layout for row-sharding huge tables over the
+``model`` mesh axis (DESIGN.md §4).
+
+Batch conventions (all static shapes):
+
+* CTR models (DeepFM, DCN-v2): ``{"sparse": i32 [B, F], "dense": f32
+  [B, 13] (DCN only), "label": f32 [B]}`` — ids are *field-local*;
+  the combined-table offset is added inside the model.
+* SASRec: ``{"seq": i32 [B, S], "pos_label": i32 [B, S], "neg_label":
+  i32 [B, S, K]}`` (0 = padding item).
+* DIN: ``{"hist": i32 [B, S], "target": i32 [B], "label": f32 [B]}``.
+
+``serve`` returns scores/logits; ``score_candidates`` implements the
+``retrieval_cand`` shape (1 user × 10⁶ candidates) as a batched matmul /
+batched forward, never a loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, embed_init, layer_norm, mlp_apply, mlp_init
+
+__all__ = [
+    "embedding_bag",
+    "RecsysConfig",
+    "DeepFMConfig",
+    "DCNv2Config",
+    "SASRecConfig",
+    "DINConfig",
+]
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    *,
+    mode: str = "sum",
+    valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """EmbeddingBag(sum|mean) over the last axis of ``ids``.
+
+    ids [..., L] → [..., dim]. Built from gather + segment-sum as the
+    taxonomy prescribes: rows are gathered with ``jnp.take`` and reduced
+    by bag via ``jax.ops.segment_sum`` over a flattened bag index.
+    """
+    shape = ids.shape
+    L = shape[-1]
+    flat = ids.reshape(-1)  # [n_bags * L]
+    n_bags = flat.shape[0] // L
+    rows = jnp.take(table, flat, axis=0)  # [n_bags*L, dim]
+    if valid is not None:
+        rows = rows * valid.reshape(-1, 1).astype(rows.dtype)
+    bag = jnp.repeat(jnp.arange(n_bags, dtype=jnp.int32), L)
+    out = jax.ops.segment_sum(rows, bag, num_segments=n_bags)
+    if mode == "mean":
+        counts = (
+            jax.ops.segment_sum(
+                valid.reshape(-1).astype(rows.dtype), bag, num_segments=n_bags
+            )
+            if valid is not None
+            else jnp.full((n_bags,), float(L), rows.dtype)
+        )
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out.reshape(*shape[:-1], table.shape[1])
+
+
+def _field_offsets(vocab_sizes: Sequence[int]) -> jnp.ndarray:
+    off = [0]
+    for v in vocab_sizes[:-1]:
+        off.append(off[-1] + v)
+    return jnp.asarray(off, dtype=jnp.int32)
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray):
+    logits = logits.astype(jnp.float32)
+    nll = jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    auc_proxy = ((logits > 0) == (labels > 0.5)).mean()
+    return nll.mean(), {"accuracy": auc_proxy}
+
+
+class RecsysConfig:
+    """Marker base for recsys configs."""
+
+
+# ---------------------------------------------------------------------------
+# DeepFM  [arXiv:1703.04247]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig(RecsysConfig):
+    name: str = "deepfm"
+    vocab_sizes: tuple[int, ...] = (100_000,) * 39  # 39 sparse fields
+    embed_dim: int = 10
+    mlp: tuple[int, ...] = (400, 400, 400)
+    dtype: object = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return sum(self.vocab_sizes)
+
+
+def deepfm_init(key, cfg: DeepFMConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    F, D = cfg.n_fields, cfg.embed_dim
+    return {
+        "embed": embed_init(k1, cfg.total_vocab, D, cfg.dtype),
+        "linear": (jax.random.normal(k2, (cfg.total_vocab,)) * 0.01).astype(cfg.dtype),
+        "mlp": mlp_init(k3, (F * D, *cfg.mlp, 1), cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def deepfm_forward(params, cfg: DeepFMConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """sparse_ids i32 [B, F] (field-local) → logits [B]."""
+    ids = sparse_ids + _field_offsets(cfg.vocab_sizes)[None, :]
+    e = jnp.take(params["embed"], ids, axis=0)  # [B, F, D]
+    first = jnp.take(params["linear"], ids, axis=0).sum(-1)  # [B]
+    s = e.sum(axis=1)
+    fm = 0.5 * ((s * s).sum(-1) - (e * e).sum(axis=(1, 2)))  # [B]
+    deep = mlp_apply(params["mlp"], e.reshape(e.shape[0], -1))[:, 0]
+    return first + fm + deep + params["bias"]
+
+
+def deepfm_loss(params, cfg: DeepFMConfig, batch):
+    return bce_loss(deepfm_forward(params, cfg, batch["sparse"]), batch["label"])
+
+
+def deepfm_score_candidates(params, cfg: DeepFMConfig, user_sparse, cand_ids, cand_field: int):
+    """retrieval_cand: one user row [1, F] × candidate values of one field.
+
+    cand_ids i32 [N] are field-local ids for field ``cand_field``;
+    scoring broadcasts the fixed user features — a batched forward, not
+    a loop (the 1M-candidate offline-scoring shape)."""
+    N = cand_ids.shape[0]
+    rows = jnp.broadcast_to(user_sparse, (N, cfg.n_fields))
+    rows = rows.at[:, cand_field].set(cand_ids)
+    return deepfm_forward(params, cfg, rows)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2  [arXiv:2008.13535]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNv2Config(RecsysConfig):
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    vocab_sizes: tuple[int, ...] = (100_000,) * 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp: tuple[int, ...] = (1024, 1024, 512)
+    dtype: object = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return sum(self.vocab_sizes)
+
+    @property
+    def d_interact(self) -> int:
+        return self.n_dense + self.n_fields * self.embed_dim
+
+
+def dcnv2_init(key, cfg: DCNv2Config):
+    keys = jax.random.split(key, cfg.n_cross_layers + 3)
+    d = cfg.d_interact
+    return {
+        "embed": embed_init(keys[0], cfg.total_vocab, cfg.embed_dim, cfg.dtype),
+        "cross_w": [dense_init(keys[1 + i], d, d, cfg.dtype) for i in range(cfg.n_cross_layers)],
+        "cross_b": [jnp.zeros((d,), cfg.dtype) for _ in range(cfg.n_cross_layers)],
+        "mlp": mlp_init(keys[-2], (d, *cfg.mlp), cfg.dtype),
+        "head": dense_init(keys[-1], cfg.mlp[-1], 1, cfg.dtype),
+    }
+
+
+def dcnv2_forward(params, cfg: DCNv2Config, dense, sparse_ids):
+    ids = sparse_ids + _field_offsets(cfg.vocab_sizes)[None, :]
+    e = jnp.take(params["embed"], ids, axis=0).reshape(sparse_ids.shape[0], -1)
+    x0 = jnp.concatenate([dense.astype(cfg.dtype), e], axis=-1)  # [B, d]
+    x = x0
+    for w, b in zip(params["cross_w"], params["cross_b"]):
+        x = x0 * (x @ w + b) + x  # DCN-v2 full-matrix cross
+    h = mlp_apply(params["mlp"], x, final_activation=jax.nn.relu)
+    return (h @ params["head"])[:, 0]
+
+
+def dcnv2_loss(params, cfg: DCNv2Config, batch):
+    return bce_loss(
+        dcnv2_forward(params, cfg, batch["dense"], batch["sparse"]), batch["label"]
+    )
+
+
+def dcnv2_score_candidates(params, cfg: DCNv2Config, user_dense, user_sparse, cand_ids, cand_field: int):
+    N = cand_ids.shape[0]
+    dense = jnp.broadcast_to(user_dense, (N, cfg.n_dense))
+    rows = jnp.broadcast_to(user_sparse, (N, cfg.n_fields))
+    rows = rows.at[:, cand_field].set(cand_ids)
+    return dcnv2_forward(params, cfg, dense, rows)
+
+
+# ---------------------------------------------------------------------------
+# SASRec  [arXiv:1808.09781]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig(RecsysConfig):
+    name: str = "sasrec"
+    n_items: int = 1_000_000  # item 0 = padding
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_negatives: int = 128
+    dtype: object = jnp.float32
+
+
+def sasrec_init(key, cfg: SASRecConfig):
+    keys = jax.random.split(key, 2 + cfg.n_blocks)
+    D = cfg.embed_dim
+    blocks = []
+    for k in keys[2:]:
+        ks = jax.random.split(k, 4)
+        blocks.append(
+            {
+                "ln1_w": jnp.ones((D,), cfg.dtype),
+                "ln1_b": jnp.zeros((D,), cfg.dtype),
+                "wqkv": dense_init(ks[0], D, 3 * D, cfg.dtype),
+                "wo": dense_init(ks[1], D, D, cfg.dtype),
+                "ln2_w": jnp.ones((D,), cfg.dtype),
+                "ln2_b": jnp.zeros((D,), cfg.dtype),
+                "ff1": dense_init(ks[2], D, D, cfg.dtype),
+                "ff2": dense_init(ks[3], D, D, cfg.dtype),
+            }
+        )
+    return {
+        "item_embed": embed_init(keys[0], cfg.n_items, D, cfg.dtype),
+        "pos_embed": embed_init(keys[1], cfg.seq_len, D, cfg.dtype),
+        "final_ln_w": jnp.ones((D,), cfg.dtype),
+        "final_ln_b": jnp.zeros((D,), cfg.dtype),
+        "blocks": blocks,
+    }
+
+
+def sasrec_encode(params, cfg: SASRecConfig, seq: jnp.ndarray) -> jnp.ndarray:
+    """seq i32 [B, S] (0 = pad) → user states [B, S, D]."""
+    B, S = seq.shape
+    H = cfg.n_heads
+    D = cfg.embed_dim
+    dh = D // H
+    x = jnp.take(params["item_embed"], seq, axis=0) + params["pos_embed"][None, :S]
+    pad = (seq == 0)[..., None]
+    x = jnp.where(pad, 0.0, x)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    for blk in params["blocks"]:
+        h = layer_norm(x, blk["ln1_w"], blk["ln1_b"])
+        qkv = (h @ blk["wqkv"]).reshape(B, S, 3, H, dh)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+        s = jnp.where(causal[None, None], s.astype(jnp.float32), -1e30)
+        a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, D)
+        x = x + o @ blk["wo"]
+        h = layer_norm(x, blk["ln2_w"], blk["ln2_b"])
+        x = x + jax.nn.relu(h @ blk["ff1"]) @ blk["ff2"]
+        x = jnp.where(pad, 0.0, x)
+    return layer_norm(x, params["final_ln_w"], params["final_ln_b"])
+
+
+def sasrec_loss(params, cfg: SASRecConfig, batch):
+    """Sampled-softmax next-item loss (pos + K sampled negatives)."""
+    states = sasrec_encode(params, cfg, batch["seq"])  # [B, S, D]
+    pos = jnp.take(params["item_embed"], batch["pos_label"], axis=0)  # [B,S,D]
+    neg = jnp.take(params["item_embed"], batch["neg_label"], axis=0)  # [B,S,K,D]
+    pos_logit = (states * pos).sum(-1)  # [B,S]
+    neg_logit = jnp.einsum("bsd,bskd->bsk", states, neg)
+    mask = (batch["pos_label"] > 0).astype(jnp.float32)
+    logits = jnp.concatenate([pos_logit[..., None], neg_logit], axis=-1).astype(jnp.float32)
+    nll = jax.nn.logsumexp(logits, axis=-1) - pos_logit.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    hit = ((pos_logit[..., None] > neg_logit).all(-1) * mask).sum() / denom
+    return loss, {"hit_rate": hit}
+
+
+def sasrec_score_candidates(params, cfg: SASRecConfig, seq, cand_ids):
+    """retrieval_cand: dense MIPS — user state × 10⁶ item embeddings."""
+    states = sasrec_encode(params, cfg, seq)  # [B, S, D]
+    user = states[:, -1]  # [B, D]
+    cand = jnp.take(params["item_embed"], cand_ids, axis=0)  # [N, D]
+    return user @ cand.T  # [B, N]
+
+
+# ---------------------------------------------------------------------------
+# DIN  [arXiv:1706.06978]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig(RecsysConfig):
+    name: str = "din"
+    n_items: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple[int, ...] = (80, 40)
+    mlp: tuple[int, ...] = (200, 80)
+    dtype: object = jnp.float32
+
+
+def din_init(key, cfg: DINConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    D = cfg.embed_dim
+    return {
+        "item_embed": embed_init(k1, cfg.n_items, D, cfg.dtype),
+        "attn_mlp": mlp_init(k2, (4 * D, *cfg.attn_mlp, 1), cfg.dtype),
+        # input: [attended interest, mean-pooled history, target]
+        "mlp": mlp_init(k3, (3 * D, *cfg.mlp, 1), cfg.dtype),
+    }
+
+
+def din_forward(params, cfg: DINConfig, hist, target):
+    """hist i32 [B, S] (0 = pad), target i32 [B] → logits [B]."""
+    h = jnp.take(params["item_embed"], hist, axis=0)  # [B, S, D]
+    t = jnp.take(params["item_embed"], target, axis=0)  # [B, D]
+    tb = jnp.broadcast_to(t[:, None], h.shape)
+    feats = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)  # [B,S,4D]
+    w = mlp_apply(params["attn_mlp"], feats, activation=jax.nn.sigmoid)[..., 0]
+    w = jnp.where(hist > 0, w.astype(jnp.float32), -1e30)
+    # DIN uses un-normalised weights; we use masked softmax (stable variant)
+    a = jax.nn.softmax(w, axis=-1).astype(h.dtype)
+    interest = (a[..., None] * h).sum(axis=1)  # weighted-sum pooling [B, D]
+    # mean-pooled history through the EmbeddingBag substrate as a second
+    # interest feature (gather + segment-sum, per the taxonomy)
+    hist_mean = embedding_bag(
+        params["item_embed"], hist, mode="mean", valid=(hist > 0)
+    )
+    z = jnp.concatenate([interest, hist_mean, t], axis=-1)
+    return mlp_apply(params["mlp"], z)[:, 0]
+
+
+def din_loss(params, cfg: DINConfig, batch):
+    return bce_loss(din_forward(params, cfg, batch["hist"], batch["target"]), batch["label"])
+
+
+def din_score_candidates(params, cfg: DINConfig, hist, cand_ids):
+    """retrieval_cand: one user history × N candidate targets (batched)."""
+    N = cand_ids.shape[0]
+    histb = jnp.broadcast_to(hist, (N, cfg.seq_len))
+    return din_forward(params, cfg, histb, cand_ids)

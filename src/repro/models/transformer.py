@@ -1,0 +1,381 @@
+"""Decoder-only LM family: dense (Qwen3/Yi/DeepSeek-Coder) and MoE
+(OLMoE, Kimi-K2) in one implementation.
+
+Design points (see DESIGN.md §4):
+
+* **Stacked-layer params + ``lax.scan``** — compile time is constant in
+  depth (the 61-layer/1T-param Kimi config lowers in seconds on one CPU
+  core), and remat policy applies per scan step.
+* **GQA attention** with RoPE and optional per-head QK-RMSNorm (Qwen3).
+* **Attention impls**: ``full`` (XLA-fused, fine ≤ 4k) and ``chunked``
+  (flash-style online-softmax scan over KV chunks — O(chunk²) memory,
+  used for 32k prefill).
+* **Decode path** (``decode_step``) consumes a static-shape KV cache and
+  one new token; sequence-sharded flash-decoding lives in
+  ``repro.dist.collectives`` and is wired in by the serve step.
+* **MoE** layers replace the dense FFN when ``cfg.moe`` is set
+  (capacity-based dispatch, expert-parallel over the ``model`` axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, embed_init, rms_norm, rope_freqs, shard_hint
+from .moe import MoEConfig, moe_apply, moe_init
+
+__all__ = ["TransformerConfig", "init_params", "forward", "lm_loss", "decode_step", "init_kv_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: MoEConfig | None = None
+    attention_impl: str = "full"  # "full" | "chunked"
+    attention_chunk: int = 1024
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    z_loss: float = 1e-4
+    # ZeRO-3 just-in-time weight gathering (DESIGN.md §4 / §Perf): wins
+    # for token-heavy steps (train, prefill); LMArch turns it OFF for
+    # decode cells, where per-step weight traffic would dwarf the tiny
+    # activations (weights go TP-only there when they fit).
+    jit_weight_gather: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: TransformerConfig):
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 8)
+    dt = cfg.dtype
+    layers = {
+        "attn_norm": jnp.ones((L, D), dt),
+        "ffn_norm": jnp.ones((L, D), dt),
+        "wq": _stacked_dense(keys[1], L, D, H * dh, dt),
+        "wk": _stacked_dense(keys[2], L, D, Hk * dh, dt),
+        "wv": _stacked_dense(keys[3], L, D, Hk * dh, dt),
+        "wo": _stacked_dense(keys[4], L, H * dh, D, dt),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.ones((L, dh), dt)
+        layers["k_norm"] = jnp.ones((L, dh), dt)
+    if cfg.moe is None:
+        layers["w_gate"] = _stacked_dense(keys[5], L, D, cfg.d_ff, dt)
+        layers["w_up"] = _stacked_dense(keys[6], L, D, cfg.d_ff, dt)
+        layers["w_down"] = _stacked_dense(keys[7], L, cfg.d_ff, D, dt)
+    else:
+        moe_keys = jax.random.split(keys[5], L)
+        moe_stacked = [moe_init(k, cfg.moe, dt) for k in moe_keys]
+        layers["moe"] = jax.tree.map(lambda *xs: jnp.stack(xs), *moe_stacked)
+
+    params = {
+        "embed": embed_init(jax.random.fold_in(key, 101), V, D, dt),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(jax.random.fold_in(key, 102), D, V, dt)
+    return params
+
+
+def _stacked_dense(key, L, d_in, d_out, dtype):
+    s = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (L, d_in, d_out)) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores_full(q, k, v, causal: bool, q_offset):
+    """q [B,Sq,H,dh], k/v [B,Sk,Hk,dh] → [B,Sq,H,dh]. Full materialised.
+
+    KV heads are broadcast to the full H so every activation keeps a
+    TP-shardable head dim (H % mesh.model == 0 even when Hk < mesh.model
+    — the Megatron recipe for GQA with tp > kv_heads: replicate KV
+    inside each group). shard_hint pins scores to (batch, model) so the
+    [B,H,Sq,Sk] transient never replicates across TP (DESIGN.md §4)."""
+    B, Sq, H, dh = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    k = jnp.repeat(k, G, axis=2)  # [B,Sk,H,dh]
+    v = jnp.repeat(v, G, axis=2)
+    q = shard_hint(q, "batch", None, "model", None)
+    k = shard_hint(k, "batch", None, "model", None)
+    v = shard_hint(v, "batch", None, "model", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = shard_hint(scores, "batch", "model", None, None)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", attn, v)
+    return out
+
+
+def _gqa_scores_chunked(q, k, v, causal: bool, q_offset, chunk: int):
+    """Flash-style online softmax over KV chunks (pure JAX, O(chunk²) mem).
+
+    Same flat-head layout + TP sharding hints as the full impl."""
+    B, Sq, H, dh = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q = shard_hint(q, "batch", None, "model", None)
+    kc = k.reshape(B, n_chunks, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    kc = shard_hint(kc, None, "batch", None, "model", None)
+    vc = shard_hint(vc, None, "batch", None, "model", None)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry  # running max, denom, numerator
+        kb, vb, c_idx = xs
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32)
+        s = shard_hint(s, "batch", "model", None, None)
+        s = s / jnp.sqrt(jnp.float32(dh))
+        valid = kpos[None, :] < Sk
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        scale = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    a0 = shard_hint(a0, "batch", "model", None, None)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool, q_offset=0, impl: str = "full", chunk: int = 1024):
+    if impl == "chunked":
+        return _gqa_scores_chunked(q, k, v, causal, q_offset, chunk)
+    return _gqa_scores_full(q, k, v, causal, q_offset)
+
+
+# ---------------------------------------------------------------------------
+# layer + forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(lp, cfg: TransformerConfig, x, positions, inv_freq, kv=None):
+    """One attention block. kv=None → self-attn over x (training/prefill);
+    kv=(k_cache, v_cache, length) → decode against the cache.
+
+    Weights are FSDP-sharded on d_model for STORAGE; ``shard_hint(w,
+    None, "model")`` gathers them just-in-time (ZeRO-3) so matmuls never
+    partial-sum activations over the data axis — per-layer all-gather of
+    ~MBs of weights instead of all-reduce of ~GBs of activations
+    (EXPERIMENTS.md §Perf, kimi-k2 iteration)."""
+    B, S, D = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    gather = (lambda w, *s_: shard_hint(w, *s_)) if cfg.jit_weight_gather else (lambda w, *s_: w)
+    h = rms_norm(x, lp["attn_norm"])
+    q = (h @ gather(lp["wq"], None, "model")).reshape(B, S, H, dh)
+    k = (h @ gather(lp["wk"], None, "model")).reshape(B, S, Hk, dh)
+    v = (h @ gather(lp["wv"], None, "model")).reshape(B, S, Hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    if kv is None:
+        out = attention(
+            q, k, v, causal=True, q_offset=0, impl=cfg.attention_impl,
+            chunk=cfg.attention_chunk,
+        )
+        new_kv = (k, v)
+    else:
+        out, new_kv = kv(q, k, v)
+    return out.reshape(B, S, H * dh) @ gather(lp["wo"], "model", None), new_kv
+
+
+def _ffn_block(lp, cfg: TransformerConfig, x):
+    gather = (lambda w, *s_: shard_hint(w, *s_)) if cfg.jit_weight_gather else (lambda w, *s_: w)
+    h = rms_norm(x, lp["ffn_norm"])
+    if cfg.moe is None:
+        y = jax.nn.silu(h @ gather(lp["w_gate"], None, "model")) * (
+            h @ gather(lp["w_up"], None, "model")
+        )
+        return y @ gather(lp["w_down"], "model", None), jnp.float32(0.0)
+    B, S, D = h.shape
+    y, aux = moe_apply(lp["moe"], cfg.moe, h.reshape(B * S, D))
+    return y.reshape(B, S, D), aux["load_balance_loss"]
+
+
+def forward(params, cfg: TransformerConfig, tokens: jnp.ndarray, *, collect_kv: bool = False):
+    """tokens [B, S] → (logits [B, S, V], aux dict). Training/prefill path.
+
+    collect_kv=True additionally returns the per-layer K/V stacks —
+    the prefill path's KV-cache product ([L, B, S, Hk, dh])."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
+
+    def layer(x, lp):
+        a, kv = _attn_block(lp, cfg, x, positions, inv_freq)
+        x = x + a
+        f, aux = _ffn_block(lp, cfg, x)
+        out = (aux, kv) if collect_kv else aux
+        return x + f, out
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)  # noqa: E731 — remat per scan step
+
+    x, ys = jax.lax.scan(layer, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    gather = (lambda w, *s_: shard_hint(w, *s_)) if cfg.jit_weight_gather else (lambda w, *s_: w)
+    if head is not None:
+        logits = x @ gather(head, None, "model")
+    else:
+        logits = x @ gather(params["embed"], "model", None).T
+    if collect_kv:
+        aux, (ks, vs) = ys
+        return logits, {"load_balance_loss": aux.mean(), "kv_cache": {"k": ks, "v": vs}}
+    return logits, {"load_balance_loss": ys.mean()}
+
+
+def lm_loss(params, cfg: TransformerConfig, tokens, labels):
+    """Next-token cross entropy with z-loss; labels -100 are masked."""
+    logits, aux = forward(params, cfg, tokens)
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    z = cfg.z_loss * (logz**2) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = (nll.sum() + z.sum()) / denom
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux["load_balance_loss"]
+    return loss, {"nll": nll.sum() / denom, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens, lengths, attn_fn=None):
+    """One decode step.
+
+    tokens [B, 1] new token ids; lengths [B] current cache fill (the new
+    token is written at position ``lengths``). Returns (logits [B, V],
+    new_cache). ``attn_fn(q, k_cache, v_cache, lengths)`` may be injected
+    by the serve step to run sequence-sharded flash decoding
+    (repro.dist.collectives.flash_decode_shardmap); default is the local
+    masked-softmax reference.
+    """
+    B = tokens.shape[0]
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = params["embed"][tokens]  # [B, 1, D]
+    inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
+    positions = lengths[:, None]
+    attn_impl = attn_fn or _decode_attention_ref
+
+    def layer(x, xs):
+        lp, kc, vc = xs
+        h = rms_norm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(B, 1, H, dh)
+        k = (h @ lp["wk"]).reshape(B, 1, Hk, dh)
+        v = (h @ lp["wv"]).reshape(B, 1, Hk, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+        # write new kv at position `lengths` (per-batch dynamic index)
+        kc = _cache_write(kc, k, lengths)
+        vc = _cache_write(vc, v, lengths)
+        a = attn_impl(q, kc, vc, lengths + 1)
+        x = x + a.reshape(B, 1, H * dh) @ lp["wo"]
+        f, _ = _ffn_block(lp, cfg, x)
+        return x + f, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(layer, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    logits = x[:, 0, :] @ head if head is not None else x[:, 0, :] @ params["embed"].T
+    return logits, {"k": new_k, "v": new_v}
+
+
+def _cache_write(cache, kv_new, lengths):
+    """cache [B,S,Hk,dh]; kv_new [B,1,Hk,dh]; write at per-batch position.
+
+    dynamic_update_slice (not one-hot blending) so the cache write is
+    O(1) positions of HBM traffic per step, not O(S)."""
+
+    def one(c, kn, l):
+        return jax.lax.dynamic_update_slice(c, kn.astype(c.dtype), (l, 0, 0))
+
+    return jax.vmap(one)(cache, kv_new, lengths)
+
+
+def _decode_attention_ref(q, k_cache, v_cache, valid_len):
+    """Reference masked decode attention. q [B,1,H,dh], caches [B,S,Hk,dh]."""
+    B, _, H, dh = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.arange(S)[None, :] < valid_len[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache)
+    return out.reshape(B, 1, H, dh)

@@ -1,0 +1,340 @@
+"""Batched, static-shape Seismic serving engine (TPU adaptation).
+
+The host-side reference (repro.core.seismic) has faithful heap-and-
+early-exit semantics but data-dependent control flow. TPUs want static
+shapes and batches, so serving uses the standard two-phase static
+relaxation of the same algorithm:
+
+  phase 1  for each query: gather the blocks of its top-``cut``
+           components (≤ ``block_budget``), score every summary
+           (gather + FMA), take the top-``n_probe`` blocks — this
+           replaces the heap_factor pruning test with a fixed probe
+           budget (the Seismic papers' own batching trick);
+  phase 2  gather the ≤ n_probe·block_size candidate documents, dedupe
+           (sort by id, mask repeats), re-score *exactly* against the
+           forward index rows — uncompressed or DotVByte-decoded, the
+           paper's hot path — and take the global top-k.
+
+``search_one_fn`` is a *pure* function of (arrays, query) so the same
+code serves the jit'd production path, the multi-pod dry-run
+(ShapeDtypeStruct arrays), and the tests. Distribution (DESIGN.md §4):
+index arrays row-shard over the flat mesh; queries shard over ``data``;
+per-shard top-k merges with an O(k) all-gather.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scoring import decode_doc_rows_dotvbyte, score_doc_rows
+from repro.core.seismic import SeismicIndex
+
+__all__ = ["BatchedSeismic", "EngineConfig", "search_one_fn", "engine_array_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    cut: int = 8  # query components probed
+    block_budget: int = 512  # max candidate blocks per query (phase 1)
+    n_probe: int = 64  # blocks exactly re-scored (phase 2)
+    k: int = 10
+    codec: str = "uncompressed"  # "uncompressed" | "dotvbyte"
+
+
+def search_one_fn(cfg: EngineConfig, n_docs: int, value_scale: float, arrays: dict, q):
+    """One dense query → (ids [k], scores [k]). Pure and static-shape.
+
+    arrays: cbs/cbl [dim], sum_comps/sum_vals [n_blocks, s_max],
+    block_docs [n_blocks, bs_max], vals_rows [N+1, l_max],
+    nnz_rows [N+1], and comps_rows | (ctrl_rows, data_rows)."""
+    # top-cut query components
+    qv, qc = jax.lax.top_k(jnp.abs(q), cfg.cut)
+    live = qv > 0
+    # candidate blocks: fixed budget round-robin over the cut comps
+    starts = arrays["cbs"][qc]  # [cut]
+    lens = jnp.where(live, arrays["cbl"][qc], 0)
+    per = cfg.block_budget // cfg.cut
+    offs = jnp.arange(per)[None, :]  # [1, per]
+    cand = starts[:, None] + offs  # [cut, per]
+    valid = offs < lens[:, None]
+    cand = jnp.where(valid, cand, -1).reshape(-1)  # [budget]
+
+    # phase 1: summary upper bounds
+    sc = jnp.take(arrays["sum_comps"], jnp.maximum(cand, 0), axis=0)
+    sv = jnp.take(arrays["sum_vals"], jnp.maximum(cand, 0), axis=0)
+    est = (jnp.take(q, sc, axis=0) * sv).sum(-1)
+    est = jnp.where(cand >= 0, est, -jnp.inf)
+    _, probe = jax.lax.top_k(est, cfg.n_probe)
+    probe_blocks = jnp.take(cand, probe)
+
+    # phase 2: gather candidate docs, dedupe, exact re-score
+    docs = jnp.take(arrays["block_docs"], jnp.maximum(probe_blocks, 0), axis=0)
+    docs = jnp.where((probe_blocks >= 0)[:, None], docs, n_docs).reshape(-1)
+    docs = jnp.sort(docs)
+    dup = jnp.concatenate([jnp.zeros(1, bool), docs[1:] == docs[:-1]])
+    docs = jnp.where(dup, n_docs, docs)
+
+    vals = jnp.take(arrays["vals_rows"], docs, axis=0)
+    nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
+    if cfg.codec == "dotvbyte":
+        ctrl = jnp.take(arrays["ctrl_rows"], docs, axis=0)
+        data = jnp.take(arrays["data_rows"], docs, axis=0)
+        comps = decode_doc_rows_dotvbyte(ctrl, data)
+    else:
+        comps = jnp.take(arrays["comps_rows"], docs, axis=0)
+    scores = score_doc_rows(q, comps, vals, nnz, value_scale)
+    scores = jnp.where(docs < n_docs, scores, -jnp.inf)
+    top_s, idx = jax.lax.top_k(scores, cfg.k)
+    return jnp.take(docs, idx), top_s
+
+
+def engine_array_specs(
+    cfg: EngineConfig,
+    *,
+    dim: int,
+    n_docs: int,
+    n_blocks: int,
+    s_max: int,
+    bs_max: int,
+    l_max: int,
+    d_max: int,
+    value_dtype=jnp.float16,
+) -> dict:
+    """ShapeDtypeStruct stand-ins for the engine arrays (dry-run)."""
+    sds = jax.ShapeDtypeStruct
+    arrays = {
+        "cbs": sds((dim,), jnp.int32),
+        "cbl": sds((dim,), jnp.int32),
+        "sum_comps": sds((n_blocks, s_max), jnp.int32),
+        "sum_vals": sds((n_blocks, s_max), jnp.float32),
+        "block_docs": sds((n_blocks, bs_max), jnp.int32),
+        "vals_rows": sds((n_docs + 1, l_max), value_dtype),
+        "nnz_rows": sds((n_docs + 1,), jnp.int32),
+    }
+    if cfg.codec == "dotvbyte":
+        arrays["ctrl_rows"] = sds((n_docs + 1, l_max // 8), jnp.uint8)
+        arrays["data_rows"] = sds((n_docs + 1, d_max), jnp.uint8)
+    else:
+        arrays["comps_rows"] = sds((n_docs + 1, l_max), jnp.int32)
+    return arrays
+
+
+class BatchedSeismic:
+    """Static-array view of a SeismicIndex + jit'd batched search."""
+
+    def __init__(self, index: SeismicIndex, cfg: EngineConfig):
+        self.cfg = cfg
+        self.dim = index.dim
+        self.n_docs = index.fwd.n_docs
+        self.value_scale = float(index.fwd.value_format.scale)
+        self.arrays = self._build_arrays(index)
+        self._search = jax.jit(
+            jax.vmap(
+                partial(search_one_fn, cfg, self.n_docs, self.value_scale, self.arrays)
+            )
+        )
+
+    # ------------------------------------------------------------------
+    def _build_arrays(self, index: SeismicIndex) -> dict:
+        cfg = self.cfg
+        fwd = index.fwd
+        n_blocks = index.n_blocks
+
+        s_len = np.diff(index.summary_indptr)
+        s_max = int(max(s_len.max(initial=1), 1))
+        sum_comps = np.zeros((n_blocks, s_max), dtype=np.int32)
+        sum_vals = np.zeros((n_blocks, s_max), dtype=np.float32)
+        for b in range(n_blocks):
+            s, e = int(index.summary_indptr[b]), int(index.summary_indptr[b + 1])
+            sum_comps[b, : e - s] = index.summary_comps[s:e]
+            sum_vals[b, : e - s] = (
+                index.summary_vals[s:e].astype(np.float32) * index.params.summary_scale
+            )
+
+        b_len = np.diff(index.block_doc_indptr)
+        bs_max = int(max(b_len.max(initial=1), 1))
+        block_docs = np.full((n_blocks, bs_max), self.n_docs, dtype=np.int32)
+        for b in range(n_blocks):
+            s, e = int(index.block_doc_indptr[b]), int(index.block_doc_indptr[b + 1])
+            block_docs[b, : e - s] = index.block_docs[s:e]
+
+        nnz = np.diff(fwd.offsets).astype(np.int32)
+        l_max = int(((nnz.max(initial=1) + 7) // 8) * 8)
+        N = self.n_docs
+        vals_rows = np.zeros((N + 1, l_max), dtype=fwd.values.dtype)
+        arrays = {
+            "cbs": jnp.asarray(index.comp_block_indptr[:-1].astype(np.int32)),
+            "cbl": jnp.asarray(np.diff(index.comp_block_indptr).astype(np.int32)),
+            "sum_comps": jnp.asarray(sum_comps),
+            "sum_vals": jnp.asarray(sum_vals),
+            "block_docs": jnp.asarray(block_docs),
+            "nnz_rows": jnp.asarray(np.concatenate([nnz, np.zeros(1, np.int32)])),
+        }
+
+        if cfg.codec == "dotvbyte":
+            ctrl_rows = np.zeros((N + 1, l_max // 8), dtype=np.uint8)
+            datas = []
+            data_len = np.zeros(N, dtype=np.int64)
+            for d in range(N):
+                s, e = int(fwd.offsets[d]), int(fwd.offsets[d + 1])
+                comps = fwd.components[s:e].astype(np.int64)
+                gaps = np.zeros(l_max, dtype=np.uint32)
+                if len(comps):
+                    gaps[0] = comps[0]
+                    gaps[1 : len(comps)] = np.diff(comps)
+                ctrl, data = _encode_row(gaps)
+                ctrl_rows[d] = ctrl
+                datas.append(data)
+                data_len[d] = len(data)
+                vals_rows[d, : e - s] = fwd.values[s:e]
+            d_max = int(((data_len.max(initial=1) + 1 + 127) // 128) * 128)
+            data_rows = np.zeros((N + 1, d_max), dtype=np.uint8)
+            for d in range(N):
+                data_rows[d, : data_len[d]] = datas[d]
+            arrays["ctrl_rows"] = jnp.asarray(ctrl_rows)
+            arrays["data_rows"] = jnp.asarray(data_rows)
+        else:
+            comps_rows = np.zeros((N + 1, l_max), dtype=np.int32)
+            for d in range(N):
+                s, e = int(fwd.offsets[d]), int(fwd.offsets[d + 1])
+                comps_rows[d, : e - s] = fwd.components[s:e]
+                vals_rows[d, : e - s] = fwd.values[s:e]
+            arrays["comps_rows"] = jnp.asarray(comps_rows)
+        arrays["vals_rows"] = jnp.asarray(vals_rows)
+        return arrays
+
+    # ------------------------------------------------------------------
+    def search_batch(self, Q: jnp.ndarray):
+        """[nq, dim] dense queries → (ids [nq, k], scores [nq, k])."""
+        return self._search(Q)
+
+
+def make_sharded_search(
+    mesh,
+    cfg: EngineConfig,
+    n_docs_local: int,
+    n_docs_global: int,
+    value_scale: float,
+    *,
+    index_axis: str = "model",
+    query_axes: tuple[str, ...] = ("data",),
+):
+    """Distributed two-phase search (DESIGN.md §4).
+
+    The index is pre-partitioned into ``mesh.shape[index_axis]``
+    self-contained sub-indexes (arrays carry a leading shard dim,
+    sharded over ``index_axis``; ``idmap`` [n_shards, n_docs_local+1]
+    maps local → global doc ids, sentinel → n_docs_global). Queries
+    shard over ``query_axes`` and replicate across index shards; each
+    device searches its shard, then an O(k) all-gather + top-k merge
+    produces the global result. Collective bytes per query: 8·k·n_shards."""
+    from jax.sharding import PartitionSpec as P
+
+    def local(arrays, idmap, Q):
+        arrays = jax.tree.map(lambda a: a[0], arrays)  # drop shard dim
+        idmap = idmap[0]
+        ids, scores = jax.vmap(
+            partial(search_one_fn, cfg, n_docs_local, value_scale, arrays)
+        )(Q)
+        gids = jnp.take(idmap, ids)  # [nq_local, k] global ids
+        # merge across index shards: all-gather per-shard top-k
+        ag_s = jax.lax.all_gather(scores, index_axis)  # [S, nq, k]
+        ag_i = jax.lax.all_gather(gids, index_axis)
+        S, nq, k = ag_s.shape
+        flat_s = ag_s.transpose(1, 0, 2).reshape(nq, S * k)
+        flat_i = ag_i.transpose(1, 0, 2).reshape(nq, S * k)
+        # a document's blocks scatter across shards → the same doc can be
+        # reported by several shards; dedupe by id before the final top-k
+        order = jnp.argsort(flat_i, axis=1)
+        si = jnp.take_along_axis(flat_i, order, axis=1)
+        ss = jnp.take_along_axis(flat_s, order, axis=1)
+        dup = jnp.concatenate(
+            [jnp.zeros((nq, 1), bool), si[:, 1:] == si[:, :-1]], axis=1
+        )
+        ss = jnp.where(dup | (si >= n_docs_global), -jnp.inf, ss)
+        top_s, pos = jax.lax.top_k(ss, cfg.k)
+        top_i = jnp.take_along_axis(si, pos, axis=1)
+        return top_i, top_s
+
+    qa = query_axes or None
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(index_axis), P(index_axis), P(qa, None)),
+        out_specs=(P(qa, None), P(qa, None)),
+        check_vma=False,
+    )
+
+
+def build_shard_arrays(index: SeismicIndex, cfg: EngineConfig, n_shards: int):
+    """Partition a SeismicIndex into ``n_shards`` self-contained
+    sub-indexes (blocks round-robin, docs by ownership) and stack their
+    engine arrays with a leading shard dim. Returns (arrays, idmap,
+    n_docs_local)."""
+    full = BatchedSeismic(index, cfg)
+    A = full.arrays
+    n_blocks = int(A["block_docs"].shape[0])
+    dim = index.dim
+
+    shard_arrays, idmaps, docs_local_max = [], [], 0
+    shard_docs: list[np.ndarray] = []
+    for s in range(n_shards):
+        blocks = np.arange(s, n_blocks, n_shards)
+        docs = np.unique(np.asarray(A["block_docs"])[blocks])
+        docs = docs[docs < full.n_docs]
+        shard_docs.append(docs)
+        docs_local_max = max(docs_local_max, len(docs))
+
+    for s in range(n_shards):
+        blocks = np.arange(s, n_blocks, n_shards)
+        docs = shard_docs[s]
+        g2l = np.full(full.n_docs + 1, docs_local_max, dtype=np.int32)
+        g2l[docs] = np.arange(len(docs), dtype=np.int32)
+        # comp → local block ranges: blocks of comp c in this shard are
+        # contiguous in the round-robin order
+        cbs = np.asarray(A["cbs"])
+        cbl = np.asarray(A["cbl"])
+        lcbs = (cbs - s + n_shards - 1) // n_shards
+        lcbl = (cbs + cbl - s + n_shards - 1) // n_shards - lcbs
+        sub = {
+            "cbs": lcbs.astype(np.int32),
+            "cbl": np.maximum(lcbl, 0).astype(np.int32),
+            "sum_comps": np.asarray(A["sum_comps"])[blocks],
+            "sum_vals": np.asarray(A["sum_vals"])[blocks],
+            "block_docs": g2l[np.asarray(A["block_docs"])[blocks]],
+        }
+        row_keys = [k for k in ("vals_rows", "nnz_rows", "comps_rows", "ctrl_rows", "data_rows") if k in A]
+        pad_rows = np.concatenate([docs, np.full(docs_local_max - len(docs) + 1, full.n_docs)])
+        for k in row_keys:
+            sub[k] = np.asarray(A[k])[pad_rows]
+        shard_arrays.append(sub)
+        idmap = np.full(docs_local_max + 1, full.n_docs, dtype=np.int32)
+        idmap[: len(docs)] = docs
+        idmaps.append(idmap)
+
+    stacked = {
+        k: jnp.asarray(np.stack([sa[k] for sa in shard_arrays]))
+        for k in shard_arrays[0]
+    }
+    return stacked, jnp.asarray(np.stack(idmaps)), docs_local_max
+
+
+def _encode_row(gaps: np.ndarray):
+    """DotVByte-encode one pre-padded gap row (first gap absolute)."""
+    from repro.core.codecs.dotvbyte import control_bits
+
+    bits = control_bits(gaps)
+    ctrl = np.packbits(bits.reshape(-1, 8), axis=1, bitorder="little").reshape(-1)
+    lens = bits.astype(np.int64) + 1
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    data = np.zeros(int(lens.sum()), dtype=np.uint8)
+    g64 = gaps.astype(np.uint64)
+    data[starts] = (g64 & 0xFF).astype(np.uint8)
+    two = bits.astype(bool)
+    data[starts[two] + 1] = ((g64[two] >> 8) & 0xFF).astype(np.uint8)
+    return ctrl, data

@@ -1,0 +1,189 @@
+"""Hand-rolled optimizers (no optax in the container): AdamW + Adafactor.
+
+Both operate on plain pytrees and keep their state sharded exactly like
+the params (the dry-run in/out shardings mirror the param specs), which
+is what makes the 1T-param Kimi config fit: Adafactor's factored second
+moment stores O(rows+cols) instead of O(rows·cols) per matrix and skips
+first-moment state entirely by default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OptimizerConfig",
+    "warmup_cosine",
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "make_optimizer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # "adamw" | "adafactor"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor specifics
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+    state_dtype: object = jnp.float32  # bf16 state halves optimizer HBM
+
+
+def warmup_cosine(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, cfg: OptimizerConfig):
+    zeros = lambda p: jnp.zeros(p.shape, dtype=cfg.state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, cfg: OptimizerConfig):
+    step = state["step"] + 1
+    lr = warmup_cosine(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        v_new = b2 * v32 + (1 - b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (
+            p_new.astype(p.dtype),
+            m_new.astype(m.dtype),
+            v_new.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "lr": lr,
+        "grad_norm": gnorm,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — for the 1T-param configs
+# ---------------------------------------------------------------------------
+
+
+def _factored(p, cfg: OptimizerConfig) -> bool:
+    return p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min_dim
+
+
+def adafactor_init(params, cfg: OptimizerConfig):
+    def one(p):
+        if _factored(p, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], dtype=cfg.state_dtype),  # row
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dtype=cfg.state_dtype),
+            }
+        return {"v": jnp.zeros(p.shape, dtype=cfg.state_dtype)}
+
+    return {
+        "second": jax.tree.map(one, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, cfg: OptimizerConfig):
+    step = state["step"] + 1
+    lr = warmup_cosine(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-cfg.decay_rate)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(p, g, s):
+        g2 = g * g + 1e-30
+        if "vr" in s:
+            vr = decay * s["vr"].astype(jnp.float32) + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * s["vc"].astype(jnp.float32) + (1 - decay) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            update = g / jnp.sqrt(vhat + 1e-30)
+            new_s = {"vr": vr.astype(s["vr"].dtype), "vc": vc.astype(s["vc"].dtype)}
+        else:
+            v = decay * s["v"].astype(jnp.float32) + (1 - decay) * g2
+            update = g / jnp.sqrt(v + 1e-30)
+            new_s = {"v": v.astype(s["v"].dtype)}
+        # update clipping (RMS ≤ 1), per the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        p_new = p.astype(jnp.float32) - lr * update
+        if p.ndim >= 2:
+            p_new = p_new - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return p_new.astype(p.dtype), new_s
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_s = treedef.flatten_up_to(state["second"])
+    pairs = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+    new_params = treedef.unflatten([t[0] for t in pairs])
+    new_second = treedef.unflatten([t[1] for t in pairs])
+    return new_params, {"second": new_second, "step": step}, {
+        "lr": lr,
+        "grad_norm": gnorm,
+    }
+
+
+def make_optimizer(cfg: OptimizerConfig) -> tuple[Callable, Callable]:
+    if cfg.name == "adamw":
+        return (lambda p: adamw_init(p, cfg)), (
+            lambda g, s, p: adamw_update(g, s, p, cfg)
+        )
+    if cfg.name == "adafactor":
+        return (lambda p: adafactor_init(p, cfg)), (
+            lambda g, s, p: adafactor_update(g, s, p, cfg)
+        )
+    raise KeyError(cfg.name)

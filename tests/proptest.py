@@ -1,0 +1,95 @@
+"""Minimal property-based testing helper.
+
+``hypothesis`` is not installed in this container, so this module
+provides the same workflow in ~80 lines: seeded random strategies, many
+cases per property, and on failure a greedy shrink pass plus a printed
+reproduction seed. Used by the codec/kernel/scoring property tests.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import numpy as np
+
+N_CASES = int(os.environ.get("PROPTEST_CASES", "50"))
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], object], label: str = "?"):
+        self.draw = draw
+        self.label = label
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)), f"int[{lo},{hi}]")
+
+
+def sorted_unique_ints(max_n: int, lo: int, hi: int, min_n: int = 0) -> Strategy:
+    """Sorted strictly-increasing arrays — the components invariant."""
+
+    def draw(rng):
+        n = int(rng.integers(min_n, max_n + 1))
+        n = min(n, hi - lo)
+        if n == 0:
+            return np.zeros(0, dtype=np.uint32)
+        vals = rng.choice(np.arange(lo, hi, dtype=np.int64), size=n, replace=False)
+        return np.sort(vals).astype(np.uint32)
+
+    return Strategy(draw, f"sorted_unique(n≤{max_n},[{lo},{hi}))")
+
+
+def float_arrays(shape_fn, lo=0.0, hi=4.0) -> Strategy:
+    def draw(rng):
+        shape = shape_fn(rng) if callable(shape_fn) else shape_fn
+        return (rng.random(shape) * (hi - lo) + lo).astype(np.float32)
+
+    return Strategy(draw, "float_array")
+
+
+def run_property(prop: Callable, *strategies: Strategy, n_cases: int = None, seed: int = 0):
+    """Run ``prop(*drawn)`` for n_cases random draws; raise with repro info."""
+    n = n_cases or N_CASES
+    for case in range(n):
+        rng = np.random.default_rng(seed * 100_003 + case)
+        args = [s.draw(rng) for s in strategies]
+        try:
+            prop(*args)
+        except AssertionError as e:
+            shrunk = _shrink(prop, args)
+            raise AssertionError(
+                f"property failed (seed={seed}, case={case}, "
+                f"strategies={[s.label for s in strategies]}):\n"
+                f"  original args: {_fmt(args)}\n"
+                f"  shrunk args:   {_fmt(shrunk)}\n  {e}"
+            ) from e
+
+
+def _shrink(prop, args, rounds: int = 40):
+    """Greedy halving shrink on array args (keeps failure failing)."""
+    cur = list(args)
+    for _ in range(rounds):
+        progressed = False
+        for i, a in enumerate(cur):
+            if isinstance(a, np.ndarray) and len(a) > 1:
+                cand = list(cur)
+                cand[i] = a[: len(a) // 2]
+                try:
+                    prop(*cand)
+                except AssertionError:
+                    cur = cand
+                    progressed = True
+        if not progressed:
+            break
+    return cur
+
+
+def _fmt(args):
+    out = []
+    for a in args:
+        if isinstance(a, np.ndarray):
+            out.append(f"ndarray{a.shape}{a.dtype}:{a[:8]!r}…")
+        else:
+            out.append(repr(a))
+    return "[" + ", ".join(out) + "]"

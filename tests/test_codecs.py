@@ -1,0 +1,121 @@
+"""Codec unit + property tests: every codec must round-trip every legal
+component sequence, and the paper's size orderings must hold on
+realistic (Zipf-gap) data."""
+
+import numpy as np
+import pytest
+
+from proptest import run_property, sorted_unique_ints
+from repro.core.codecs import available_codecs, get_codec
+from repro.core.codecs.base import components_from_gaps, gaps_from_components
+from repro.core.codecs.bitpack import pack_block, unpack_block
+from repro.core.codecs.dotvbyte import decode_doc_arrays, encode_doc_arrays
+
+ALL_CODECS = available_codecs()
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_roundtrip_property(name):
+    codec = get_codec(name)
+
+    def prop(comps):
+        if len(comps) == 0:
+            return
+        buf = codec.encode_doc(comps)
+        out = codec.decode_doc(buf, len(comps))
+        assert np.array_equal(out, comps), f"{name} roundtrip mismatch"
+
+    run_property(prop, sorted_unique_ints(400, 0, 65536, min_n=1), seed=7)
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@pytest.mark.parametrize(
+    "comps",
+    [
+        np.array([0], dtype=np.uint32),  # component 0 (gap 0 at start)
+        np.array([65535], dtype=np.uint32),  # max component
+        np.array([0, 65535], dtype=np.uint32),  # max gap
+        np.arange(64, dtype=np.uint32),  # all-ones gaps
+        np.arange(0, 65536, 8192, dtype=np.uint32),  # large uniform gaps
+        np.array([7], dtype=np.uint32),
+        np.arange(9, dtype=np.uint32),  # DotVByte remainder path (9 = 8+1)
+    ],
+)
+def test_roundtrip_edges(name, comps):
+    codec = get_codec(name)
+    assert np.array_equal(codec.decode_doc(codec.encode_doc(comps), len(comps)), comps)
+
+
+def test_gap_transform_inverse():
+    def prop(comps):
+        if len(comps) == 0:
+            return
+        assert np.array_equal(components_from_gaps(gaps_from_components(comps)), comps)
+
+    run_property(prop, sorted_unique_ints(500, 0, 65536, min_n=1), seed=3)
+
+
+def test_gap_transform_rejects_unsorted():
+    with pytest.raises(ValueError):
+        gaps_from_components(np.array([5, 3], dtype=np.uint32))
+    with pytest.raises(ValueError):
+        gaps_from_components(np.array([3, 3], dtype=np.uint32))
+
+
+def _zipf_docs(n_docs=150, dim=30522, nnz=119, seed=0):
+    """Clustered Zipf-ish components — realistic gap distribution."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, dim + 1) ** 1.1
+    w /= w.sum()
+    docs = []
+    for _ in range(n_docs):
+        c = np.unique(rng.choice(dim, size=nnz, p=w))
+        docs.append(c.astype(np.uint32))
+    return docs
+
+
+def test_paper_size_orderings():
+    """Table 1 qualitative structure: every codec < 16 bits; zeta is the
+    smallest of the entropy codes; dotvbyte ≤ streamvbyte (1-bit vs 2-bit
+    controls); uncompressed is exactly 16."""
+    docs = _zipf_docs()
+    bpc = {n: get_codec(n).bits_per_component(docs) for n in ALL_CODECS}
+    assert bpc["uncompressed"] == 16.0
+    for n in ALL_CODECS:
+        if n != "uncompressed":
+            assert bpc[n] < 16.0, (n, bpc[n])
+    assert bpc["dotvbyte"] <= bpc["streamvbyte"] + 1e-9
+    assert bpc["zeta"] < bpc["vbyte"]
+
+
+def test_dotvbyte_alignment_invariants():
+    """Per-document alignment (§2.2): n8 components compressed, ≤7 raw."""
+
+    def prop(comps):
+        if len(comps) == 0:
+            return
+        ctrl, data, rem = encode_doc_arrays(comps)
+        n8 = (len(comps) // 8) * 8
+        assert len(ctrl) == n8 // 8
+        assert len(rem) == len(comps) - n8 <= 7
+        popcnt = int(np.unpackbits(ctrl).sum()) if len(ctrl) else 0
+        assert len(data) == n8 + popcnt  # 1 byte + 1 extra per 2-byte gap
+        assert np.array_equal(decode_doc_arrays(ctrl, data, rem), comps)
+
+    run_property(prop, sorted_unique_ints(200, 0, 65536, min_n=1), seed=11)
+
+
+def test_bitpack_block_roundtrip_all_widths():
+    rng = np.random.default_rng(0)
+    for width in range(1, 18):
+        vals = rng.integers(0, 1 << width, size=128).astype(np.uint32)
+        words = pack_block(vals, width)
+        assert len(words) == (128 * width + 31) // 32
+        out = unpack_block(words, width, 128)
+        assert np.array_equal(out, vals), width
+
+
+def test_codec_sizes_count_all_streams():
+    comps = np.arange(0, 330, 3, dtype=np.uint32)  # 110 comps
+    codec = get_codec("dotvbyte")
+    assert codec.encoded_size_bytes(comps) == len(codec.encode_doc(comps))

@@ -1,0 +1,103 @@
+"""ForwardIndex + packed-block layout tests."""
+
+import numpy as np
+import pytest
+
+from proptest import run_property, sorted_unique_ints
+from repro.core.forward_index import VALUE_FORMATS, ForwardIndex, pack_forward_index
+from repro.core.scoring import score_packed
+
+
+def _rand_docs(rng, n_docs, dim, max_nnz=300):
+    docs = []
+    for _ in range(n_docs):
+        n = int(rng.integers(1, max_nnz))
+        c = np.sort(rng.choice(dim, size=min(n, dim // 2), replace=False))
+        v = rng.gamma(2.0, 0.5, size=len(c)).astype(np.float32) + 0.05
+        docs.append((c, v))
+    return docs
+
+
+def test_exact_scores_matches_naive():
+    rng = np.random.default_rng(0)
+    dim = 4096
+    docs = _rand_docs(rng, 50, dim)
+    fwd = ForwardIndex.from_docs(docs, dim)
+    q = rng.random(dim).astype(np.float32)
+    want = np.array([q[c] @ v for c, v in docs])
+    got = fwd.exact_scores(q)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("vf", ["f32", "f16", "fixedu8"])
+def test_value_formats_quantisation_error(vf):
+    rng = np.random.default_rng(1)
+    dim = 2048
+    docs = _rand_docs(rng, 30, dim)
+    fwd = ForwardIndex.from_docs(docs, dim, value_format=vf)
+    fmt = VALUE_FORMATS[vf]
+    c0, v0 = docs[0]
+    order = np.argsort(c0, kind="stable")
+    got_c, got_v = fwd.doc(0)
+    assert np.array_equal(got_c, c0[order])
+    tol = {"f32": 1e-7, "f16": 2e-3, "fixedu8": fmt.scale / 2 + 1e-6}[vf]
+    np.testing.assert_allclose(got_v, v0[order], atol=tol, rtol=1e-2)
+
+
+def test_component_permutation_preserves_scores():
+    rng = np.random.default_rng(2)
+    dim = 1024
+    docs = _rand_docs(rng, 40, dim, max_nnz=60)
+    fwd = ForwardIndex.from_docs(docs, dim)
+    pi = rng.permutation(dim).astype(np.uint32)
+    fwd_p = fwd.apply_component_permutation(pi)
+    q = rng.random(dim).astype(np.float32)
+    q_p = np.zeros_like(q)
+    q_p[pi] = q
+    np.testing.assert_allclose(fwd.exact_scores(q), fwd_p.exact_scores(q_p), rtol=1e-5)
+    # components stay sorted per doc
+    for d in range(fwd_p.n_docs):
+        c, _ = fwd_p.doc(d)
+        assert np.all(np.diff(c) > 0)
+
+
+@pytest.mark.parametrize("codec", ["uncompressed", "dotvbyte", "bitpack"])
+@pytest.mark.parametrize("block_size", [128, 512])
+def test_packed_scoring_matches_exact(codec, block_size):
+    rng = np.random.default_rng(3)
+    dim = 8192
+    docs = _rand_docs(rng, 80, dim)
+    fwd = ForwardIndex.from_docs(docs, dim, value_format="f16")
+    packed = pack_forward_index(fwd, codec=codec, block_size=block_size)
+    q = np.zeros(dim, dtype=np.float32)
+    qc = rng.choice(dim, 40, replace=False)
+    q[qc] = rng.gamma(2.0, 0.5, size=40)
+    got = np.asarray(score_packed(q, packed))
+    want = fwd.exact_scores(q)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-3)
+
+
+def test_packed_handles_docs_larger_than_block():
+    """A document with nnz > block_size must split across blocks."""
+    dim = 4096
+    rng = np.random.default_rng(4)
+    big = np.sort(rng.choice(dim, size=500, replace=False)).astype(np.uint32)
+    docs = [(big, np.ones(500, dtype=np.float32))]
+    fwd = ForwardIndex.from_docs(docs, dim)
+    packed = pack_forward_index(fwd, codec="dotvbyte", block_size=128)
+    assert packed.n_blocks >= 4
+    q = rng.random(dim).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(score_packed(q, packed)), fwd.exact_scores(q), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_storage_bytes_accounting():
+    rng = np.random.default_rng(5)
+    docs = _rand_docs(rng, 20, 2048, max_nnz=50)
+    fwd = ForwardIndex.from_docs(docs, 2048, value_format="f16")
+    unc = fwd.storage_bytes("uncompressed")
+    dvb = fwd.storage_bytes("dotvbyte")
+    assert unc["components"] == 2 * fwd.total_nnz
+    assert dvb["components"] < unc["components"]
+    assert dvb["values"] == unc["values"] == 2 * fwd.total_nnz

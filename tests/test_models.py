@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests (reduced configs, 1 CPU device) plus
+model-level invariants (decode/forward parity, chunked-attention
+equivalence, MoE dispatch conservation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, RETRIEVAL_IDS, get_arch
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.transformer import (
+    TransformerConfig,
+    decode_step,
+    forward,
+    init_kv_cache,
+    init_params,
+)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS + RETRIEVAL_IDS)
+def test_arch_smoke(arch_id):
+    """Every assigned architecture instantiates a reduced config and
+    runs a forward/train step with finite outputs (deliverable f)."""
+    arch = get_arch(arch_id)
+    result = arch.smoke(seed=0)
+    assert isinstance(result, dict) and result
+
+
+def _tiny(attn="full", moe=None, qk=False):
+    return TransformerConfig(
+        name="tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab=64, qk_norm=qk, moe=moe, attention_impl=attn, attention_chunk=8,
+        dtype=jnp.float32,
+    )
+
+
+def test_chunked_attention_equals_full():
+    key = jax.random.PRNGKey(0)
+    p = init_params(key, _tiny())
+    toks = jax.random.randint(key, (2, 20), 0, 64)
+    lf, _ = forward(p, _tiny("full"), toks)
+    lc, _ = forward(p, _tiny("chunked"), toks)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lc), atol=2e-5)
+
+
+def test_decode_matches_forward():
+    key = jax.random.PRNGKey(1)
+    cfg = _tiny(qk=True)
+    p = init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 10), 0, 64)
+    full, _ = forward(p, cfg, toks)
+    cache = init_kv_cache(cfg, 2, 10, jnp.float32)
+    lens = jnp.zeros(2, jnp.int32)
+    outs = []
+    for t in range(10):
+        lg, cache = decode_step(p, cfg, cache, toks[:, t : t + 1], lens)
+        lens = lens + 1
+        outs.append(lg)
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1)), np.asarray(full), atol=3e-5
+    )
+
+
+def test_moe_capacity_conservation():
+    """Dispatch weights of surviving tokens are ≤1 and ≥0; output is a
+    convex-ish combination (no token counted twice per expert slot)."""
+    cfg = MoEConfig(n_experts=8, top_k=2, d_model=16, d_ff=32, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, cfg)
+    x = jax.random.normal(key, (64, 16))
+    y, aux = moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux["load_balance_loss"]) > 0
+    # with huge capacity nothing drops: output must differ from zero for
+    # every token (each token reaches at least one expert)
+    assert (np.abs(np.asarray(y)).sum(-1) > 0).all()
+
+
+def test_moe_dropping_under_tight_capacity():
+    cfg = MoEConfig(n_experts=4, top_k=1, d_model=8, d_ff=16, capacity_factor=0.25)
+    key = jax.random.PRNGKey(2)
+    p = moe_init(key, cfg)
+    x = jax.random.normal(key, (64, 8))
+    y, _ = moe_apply(p, cfg, x)
+    dropped = (np.abs(np.asarray(y)).sum(-1) == 0).sum()
+    assert dropped > 0  # tight capacity must actually drop tokens
+
+
+def test_grad_flows_through_every_param():
+    cfg = _tiny(moe=MoEConfig(n_experts=4, top_k=2, d_model=32, d_ff=16))
+    key = jax.random.PRNGKey(3)
+    p = init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 12), 0, 64)
+
+    from repro.models.transformer import lm_loss
+
+    g = jax.grad(lambda pp: lm_loss(pp, cfg, toks[:, :-1], toks[:, 1:])[0])(p)
+    flat = jax.tree_util.tree_flatten_with_path(g)[0]
+    zero_paths = [jax.tree_util.keystr(k) for k, v in flat if float(jnp.abs(v).sum()) == 0]
+    # only the final-layer norms may legitimately be ~0 in 2 steps; params
+    # like router/experts must receive gradient
+    assert not any("moe" in z and "router" in z for z in zero_paths), zero_paths

@@ -1,0 +1,91 @@
+"""Seismic reference engine + batched TPU engine tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
+from repro.data.synthetic import SyntheticConfig, generate_collection
+from repro.serve.engine import BatchedSeismic, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def collection():
+    cfg = SyntheticConfig(
+        name="test", dim=4096, n_docs=1500, n_queries=12,
+        doc_nnz_mean=80.0, query_nnz_mean=24.0, seed=0,
+    )
+    return generate_collection(cfg, value_format="f32")
+
+
+@pytest.fixture(scope="module")
+def index(collection):
+    return SeismicIndex.build(
+        collection.fwd, SeismicParams(n_postings=400, block_size=32, summary_mass=0.6)
+    )
+
+
+def test_recall_reference_engine(collection, index):
+    recs = []
+    for i in range(collection.n_queries):
+        q = collection.query_dense(i)
+        true_ids, _ = exact_top_k(collection.fwd, q, 10)
+        got_ids, _ = index.search(q, k=10, heap_factor=0.9, cut=12)
+        recs.append(recall_at_k(true_ids, got_ids))
+    assert np.mean(recs) >= 0.85, np.mean(recs)
+
+
+def test_recall_monotone_in_cut(collection, index):
+    """Looser pruning must not reduce recall (statistically)."""
+    r_small, r_big = [], []
+    for i in range(collection.n_queries):
+        q = collection.query_dense(i)
+        true_ids, _ = exact_top_k(collection.fwd, q, 10)
+        a, _ = index.search(q, k=10, heap_factor=1.0, cut=2)
+        b, _ = index.search(q, k=10, heap_factor=0.8, cut=16)
+        r_small.append(recall_at_k(true_ids, a))
+        r_big.append(recall_at_k(true_ids, b))
+    assert np.mean(r_big) >= np.mean(r_small)
+
+
+def test_codec_rescore_parity(collection, index):
+    """Compression is lossless on components: identical results."""
+    index.prepare_codec("dotvbyte")
+    q = collection.query_dense(0)
+    i0, s0 = index.search(q, 10, 0.9, 8, codec="uncompressed")
+    i1, s1 = index.search(q, 10, 0.9, 8, codec="dotvbyte")
+    assert np.array_equal(i0, i1)
+    np.testing.assert_allclose(s0, s1, rtol=1e-6)
+
+
+def test_index_bytes_accounting(collection, index):
+    sizes = index.index_bytes("dotvbyte")
+    unc = index.index_bytes("uncompressed")
+    assert sizes["forward_components"] < unc["forward_components"]
+    assert sizes["total"] < unc["total"]
+    assert unc["forward_components"] == 2 * collection.fwd.total_nnz
+
+
+@pytest.mark.parametrize("codec", ["uncompressed", "dotvbyte"])
+def test_batched_engine_recall(collection, index, codec):
+    eng = BatchedSeismic(index, EngineConfig(cut=12, block_budget=768, n_probe=96, k=10, codec=codec))
+    Q = np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
+    ids, scores = eng.search_batch(Q)
+    recs = []
+    for i in range(collection.n_queries):
+        true_ids, _ = exact_top_k(collection.fwd, Q[i], 10)
+        recs.append(recall_at_k(true_ids, np.asarray(ids[i])))
+    assert np.mean(recs) >= 0.85, np.mean(recs)
+    # scores of returned docs are the exact inner products
+    for i in range(3):
+        want = collection.fwd.exact_scores(Q[i])
+        got = np.asarray(scores[i])
+        ok = np.asarray(ids[i]) < collection.fwd.n_docs
+        np.testing.assert_allclose(got[ok], want[np.asarray(ids[i])[ok]], rtol=1e-3, atol=1e-3)
+
+
+def test_batched_engine_codec_parity(collection, index):
+    cfgs = [EngineConfig(codec=c) for c in ("uncompressed", "dotvbyte")]
+    Q = np.stack([collection.query_dense(i) for i in range(4)])
+    res = [BatchedSeismic(index, c).search_batch(Q) for c in cfgs]
+    assert np.array_equal(np.asarray(res[0][0]), np.asarray(res[1][0]))
+    np.testing.assert_allclose(np.asarray(res[0][1]), np.asarray(res[1][1]), rtol=1e-5)
