@@ -1,0 +1,19 @@
+# Developer entry points. PYTHONPATH is set per-target so the targets
+# work from a clean checkout with no install step.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test check bench bench-fast
+
+test:            ## tier-1 suite (the CI gate)
+	$(PY) -m pytest -x -q
+
+check:           ## tier-1 suite + tiny Table-1/2 benchmark pass
+	$(PY) -m benchmarks.run --quick
+
+bench:           ## full benchmark sweep (slow)
+	$(PY) -m benchmarks.run
+
+bench-fast:      ## reduced-size benchmark sweep
+	$(PY) -m benchmarks.run --fast

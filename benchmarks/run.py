@@ -4,23 +4,67 @@ extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py).
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --fast     # reduced sizes
     PYTHONPATH=src python -m benchmarks.run --only table1
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke: tier-1
+                                                       # pytest + tiny
+                                                       # Table-1/2 pass
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import time
 
 from .common import emit
 
 
+def _quick_smoke() -> int:
+    """One-command regression gate (``make check``): the tier-1 test
+    suite plus a miniature Table-1/Table-2 benchmark pass, so codec or
+    layout regressions surface even when they only bend a curve."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    )
+    print("# tier-1 pytest…", file=sys.stderr, flush=True)
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q"], cwd=root, env=env
+    )
+    if proc.returncode:
+        return proc.returncode
+
+    from . import table1_codecs, table2_seismic
+
+    print("# tiny table1/table2…", file=sys.stderr, flush=True)
+    rows = table1_codecs.run(n_docs=400, n_queries=2, rgb_iters=2)
+    rows += table2_seismic.run(n_docs=400, n_queries=4)
+    emit(rows)
+    # a NaN latency means no sweep point reached the accuracy level —
+    # the codec/accuracy regression class this gate exists to catch
+    # (at these sizes a healthy build produces zero NaN rows)
+    bad = [r.name for r in rows if r.us != r.us]
+    if bad:
+        print(f"# quick smoke FAILED: unmet accuracy rows: {bad}", file=sys.stderr)
+        return 1
+    print(f"# quick smoke OK ({len(rows)} rows)", file=sys.stderr)
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="reduced collection sizes")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tier-1 pytest + tiny table1/table2")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "kernel", "roofline"])
     args = ap.parse_args()
+
+    if args.quick:
+        sys.exit(_quick_smoke())
 
     rows = []
     t0 = time.time()

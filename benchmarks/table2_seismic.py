@@ -23,9 +23,10 @@ import numpy as np
 from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
 from repro.data.synthetic import generate_collection, lilsr_config, splade_config
 
-from .common import Row
+from .common import Row, timeit_us
 
 CODECS = ["uncompressed", "zeta", "streamvbyte", "dotvbyte"]
+ENGINE_CODECS = ["uncompressed", "dotvbyte", "streamvbyte"]  # TPU serving path
 ACCURACY_LEVELS = (0.90, 0.95)
 SWEEP = [(0.8, 4), (0.9, 8), (1.0, 12)]  # (heap_factor, cut)
 
@@ -46,14 +47,60 @@ def _eval(index, col, codec, k=10):
     return out
 
 
+def run_engine(
+    n_docs: int = 3000, n_queries: int = 10, *, col=None, index=None, truth=None
+) -> list[Row]:
+    """Batched static-shape engine latency per codec (decode inside the
+    measured jit'd search, codecs swapped through core/layout.py).
+
+    ``run()`` passes its already-built splade/f16 collection+index+truth
+    so the engine section costs no second index build.
+
+    Expectation: identical top-k across codecs (lossless components),
+    latency ordering uncompressed ≤ dotvbyte ≤ streamvbyte on CPU-XLA."""
+    import jax.numpy as jnp
+
+    from repro.serve.engine import BatchedSeismic, EngineConfig
+
+    rows: list[Row] = []
+    if col is None:
+        col = generate_collection(splade_config(n_docs, n_queries, seed=0), value_format="f16")
+    n_queries = col.n_queries
+    if index is None:
+        index = SeismicIndex.build(col.fwd, SeismicParams(n_postings=1500, block_size=32))
+    Q = jnp.asarray(np.stack([col.query_dense(i) for i in range(n_queries)]))
+    if truth is None:
+        truth = [exact_top_k(col.fwd, col.query_dense(i), 10)[0] for i in range(n_queries)]
+    for codec in ENGINE_CODECS:
+        eng = BatchedSeismic(
+            index, EngineConfig(cut=8, block_budget=512, n_probe=64, k=10, codec=codec)
+        )
+        ids, _ = eng.search_batch(Q)  # compile + correctness sample
+        rec = float(np.mean([recall_at_k(truth[i], np.asarray(ids[i]))
+                             for i in range(n_queries)]))
+        us = timeit_us(lambda: eng.search_batch(Q)[0].block_until_ready()) / n_queries
+        comp_bytes = col.fwd.storage_bytes(codec)["components"]
+        rows.append(
+            Row(
+                f"table2/engine/splade/{codec}",
+                us,
+                f"recall={rec:.3f};comp_bits={8*comp_bytes/col.fwd.total_nnz:.1f}",
+            )
+        )
+    return rows
+
+
 def run(n_docs: int = 3000, n_queries: int = 10) -> list[Row]:
     rows: list[Row] = []
+    engine_col = engine_index = None  # splade/f16 build reused by run_engine
     for enc_name, cfg_fn in (("splade", splade_config), ("lilsr", lilsr_config)):
         for vf in ("f16", "fixedu8"):
             col = generate_collection(cfg_fn(n_docs, n_queries, seed=0), value_format=vf)
             index = SeismicIndex.build(
                 col.fwd, SeismicParams(n_postings=1500, block_size=32)
             )
+            if enc_name == "splade" and vf == "f16":
+                engine_col, engine_index = col, index
             for codec in CODECS:
                 if codec != "uncompressed":
                     index.prepare_codec(codec)
@@ -71,6 +118,7 @@ def run(n_docs: int = 3000, n_queries: int = 10) -> list[Row]:
                             f"{8*comp_bytes/col.fwd.total_nnz:.1f}",
                         )
                     )
+    rows.extend(run_engine(n_docs, n_queries, col=engine_col, index=engine_index))
     return rows
 
 

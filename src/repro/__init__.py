@@ -1,4 +1,8 @@
 """repro — Forward Index Compression for Learned Sparse Retrieval,
 as a production-grade JAX/Pallas framework. See DESIGN.md."""
 
-__version__ = "1.0.0"
+from . import compat as _compat
+
+_compat.install()
+
+__version__ = "1.1.0"

@@ -1,0 +1,102 @@
+"""Forward-compatibility shims for newer jax APIs on jax 0.4.x.
+
+The codebase is written against the current jax surface (``jax.set_mesh``,
+``jax.shard_map`` with ``check_vma``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``, ``jax.make_mesh(..., axis_types=…)``).
+This container ships jax 0.4.37, where those names either do not exist or
+have older spellings.  ``install()`` (run once on ``import repro``) fills
+the gaps with thin adapters; on a new-enough jax every branch is a no-op,
+so upgrading jax silently drops the shims.
+
+Each adapter is behavioural, not cosmetic-only:
+
+* ``set_mesh(mesh)``     → the mesh itself (``Mesh`` is a context manager
+  that installs the thread-resource env, which is what the new API does).
+* ``shard_map(..., check_vma=)`` → ``jax.experimental.shard_map.shard_map``
+  with ``check_rep`` carrying the flag (same replication-check semantics).
+* ``AxisType``           → minimal enum; 0.4 meshes are always "auto".
+* ``make_mesh``          → accepts and drops ``axis_types``.
+* ``get_abstract_mesh``  → the thread-local physical mesh (axis_names /
+  shape are the only fields our callers read).
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding as _jshard
+
+__all__ = ["install"]
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _get_abstract_mesh():
+    from jax._src.mesh import thread_resources
+
+    return thread_resources.env.physical_mesh
+
+
+def install() -> None:
+    if not hasattr(_jshard, "AxisType"):
+        _jshard.AxisType = _AxisType
+
+    if not hasattr(_jshard, "get_abstract_mesh"):
+        _jshard.get_abstract_mesh = _get_abstract_mesh
+
+    native_make_mesh = getattr(jax, "make_mesh", None)
+    if native_make_mesh is not None:
+        import inspect
+
+        try:
+            takes_axis_types = "axis_types" in inspect.signature(native_make_mesh).parameters
+        except (TypeError, ValueError):
+            takes_axis_types = True
+        if not takes_axis_types:
+
+            @functools.wraps(native_make_mesh)
+            def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+                return native_make_mesh(axis_shapes, axis_names, **kw)
+
+            jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        # Mesh.__enter__ installs the thread-resource env — exactly the
+        # scope the new context manager provides.
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+            return _shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma, **kw,
+            )
+
+        jax.shard_map = shard_map
+
+    # Compiled.cost_analysis(): newer jax returns one flat dict; 0.4.x
+    # returns a per-program list of dicts.
+    try:
+        import jax.stages as _stages
+
+        native_cost = _stages.Compiled.cost_analysis
+
+        def cost_analysis(self):
+            out = native_cost(self)
+            if isinstance(out, (list, tuple)):
+                return out[0] if out else {}
+            return out
+
+        if getattr(native_cost, "__name__", "") != "cost_analysis_compat":
+            cost_analysis.__name__ = "cost_analysis_compat"
+            _stages.Compiled.cost_analysis = cost_analysis
+    except Exception:  # pragma: no cover - future jax restructures
+        pass

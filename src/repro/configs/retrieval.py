@@ -28,7 +28,7 @@ from repro.core.scoring import (
     block_products,
     combine_block_scores,
     components_from_gaps,
-    decode_gaps_dotvbyte,
+    decode_block_gaps,
     dequantise_values,
 )
 from repro.dist import sharding as shd
@@ -55,6 +55,7 @@ class RetrievalArch(BaseArch):
     docs_per_block: int = 64
     l_max: int = 384  # per-doc row capacity (p100 nnz, 8-aligned)
     value_scale: float = 1.0
+    codec: str = "dotvbyte"  # any core/layout.py stream codec
     family: str = "retrieval"
     shape_names: tuple[str, ...] = tuple(RETRIEVAL_SHAPES)
     # §Perf opt levels for scan_100q (EXPERIMENTS.md):
@@ -75,20 +76,30 @@ class RetrievalArch(BaseArch):
         return (raw + 511) // 512 * 512
 
     def packed_structs(self) -> dict:
-        """ShapeDtypeStructs of the DotVByte packed-block index."""
+        """ShapeDtypeStructs of the packed-block index — codec stream
+        fields mirror what ``layout.pack_blocks(codec=…)`` produces."""
         sds = jax.ShapeDtypeStruct
         B, T, D = self.n_blocks, self.block_size, self.docs_per_block
-        DP = ((T + T // 2) // 128 + 1) * 128  # ~1.5 B/component + over-read
         seg_dt = jnp.int8 if self.opt >= 2 else jnp.int32
-        return {
-            "ctrl": sds((B, T // 8), jnp.uint8),
-            "data": sds((B, DP), jnp.uint8),
+        structs = {
             "seg": sds((B, T), seg_dt),
             "start_pos": sds((B, D), jnp.int32),
             "start_abs": sds((B, D), jnp.int32),
             "vals": sds((B, T), jnp.float16),
             "doc_ids": sds((B, D), jnp.int32),
         }
+        if self.codec == "uncompressed":
+            structs["comps"] = sds((B, T), jnp.int32)
+        elif self.codec == "bitpack":
+            # per-block width ≤ 16 bits for a 30522-dim vocabulary
+            structs["words"] = sds((B, (T * 16 + 31) // 32), jnp.uint32)
+            structs["widths"] = sds((B,), jnp.int32)
+        else:  # dotvbyte (1-bit ctrl) | streamvbyte (2-bit ctrl)
+            ctrl_group = 8 if self.codec == "dotvbyte" else 4
+            DP = ((T + T // 2) // 128 + 1) * 128  # ~1.5 B/component + over-read
+            structs["ctrl"] = sds((B, T // ctrl_group), jnp.uint8)
+            structs["data"] = sds((B, DP), jnp.uint8)
+        return structs
 
     def model_flops(self, shape: str) -> float:
         if shape == "scan_100q":
@@ -100,7 +111,13 @@ class RetrievalArch(BaseArch):
         return float(per_q) * nq
 
     def _engine_cfg(self) -> EngineConfig:
-        return EngineConfig(cut=8, block_budget=512, n_probe=64, k=10, codec="dotvbyte")
+        if self.codec not in ("uncompressed", "dotvbyte", "streamvbyte"):
+            # the scan cell takes any layout codec (bitpack included);
+            # the two-phase serve cell needs a row-stream codec
+            raise ValueError(
+                f"serve_4096q needs an engine row codec, got {self.codec!r}"
+            )
+        return EngineConfig(cut=8, block_budget=512, n_probe=64, k=10, codec=self.codec)
 
     # ------------------------------------------------------------------
     def build_cell(self, shape: str, mesh: Mesh) -> Cell:
@@ -111,16 +128,21 @@ class RetrievalArch(BaseArch):
 
         if shape == "scan_100q":
             n_docs, T, scale = self.n_docs, self.block_size, self.value_scale
+            codec = self.codec
 
             if self.opt == 0:
                 # paper-faithful baseline: jit auto-sharding; the global
                 # segment-sum scatters block partials across shards
                 def scan_fn(arrays, Q):
                     def one(q):
-                        gaps = decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
-                        comps = components_from_gaps(
-                            gaps, arrays["seg"], arrays["start_pos"], arrays["start_abs"]
-                        )
+                        if codec == "uncompressed":
+                            comps = arrays["comps"]
+                        else:
+                            gaps = decode_block_gaps(codec, arrays, T)
+                            comps = components_from_gaps(
+                                gaps, arrays["seg"], arrays["start_pos"],
+                                arrays["start_abs"],
+                            )
                         prod = block_products(
                             q, comps, dequantise_values(arrays["vals"], scale), arrays["seg"]
                         )
@@ -145,7 +167,7 @@ class RetrievalArch(BaseArch):
                 for a in flat:
                     n_shards *= mesh.shape[a]
                 docs_local = self.n_docs // n_shards
-                fn = make_doc_aligned_scan(mesh, flat, docs_local, scale)
+                fn = make_doc_aligned_scan(mesh, flat, docs_local, scale, codec=codec)
 
             base_structs = self.packed_structs()
             if self.opt >= 1:
@@ -233,7 +255,7 @@ class RetrievalArch(BaseArch):
             query_nnz_mean=float(min(self.query_nnz, 16)), seed=seed,
         )
         col = generate_collection(cfg, value_format="f16")
-        packed = pack_forward_index(col.fwd, codec="dotvbyte", block_size=128)
+        packed = pack_forward_index(col.fwd, codec=self.codec, block_size=128)
         q = col.query_dense(0)
         got = np.asarray(score_packed(q, packed))
         want = col.fwd.exact_scores(q)

@@ -22,15 +22,13 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from .codecs import get_codec
-from .codecs.base import gaps_from_components
-from .codecs.bitpack import pack_block
-from .codecs.dotvbyte import control_bits
 
 __all__ = [
     "ValueFormat",
     "ForwardIndex",
     "PackedBlocks",
     "pack_forward_index",
+    "pack_forward_index_sharded",
     "VALUE_FORMATS",
 ]
 
@@ -189,8 +187,9 @@ class PackedBlocks:
     start_abs     i32 [B,D]  absolute first component of each fragment
     vals          [B,T]      stored-dtype values (0 for padding)
     doc_ids       i32 [B,D]  global doc id per slot, -1 for unused slots
-    ctrl          u8 [B,T/8] DotVByte control bits (codec="dotvbyte")
-    data          u8 [B,DP]  DotVByte byte stream, padded (codec="dotvbyte")
+    ctrl          u8 [B,T/8] DotVByte controls — or [B,T/4] StreamVByte
+                             2-bit controls (codec="streamvbyte")
+    data          u8 [B,DP]  byte stream, padded (dotvbyte/streamvbyte)
     words         u32[B,W]   bitpack words (codec="bitpack")
     widths        i32 [B]    bitpack bit-width per block (codec="bitpack")
     comps         i32 [B,T]  raw components (codec="uncompressed")
@@ -198,6 +197,8 @@ class PackedBlocks:
 
     Gap streams encode the *within-fragment* gaps with the fragment-first
     gap forced to 0; absolutes live in ``start_abs`` (DESIGN.md §3).
+    Built exclusively by ``repro.core.layout.pack_blocks`` — the codec
+    byte-packing itself lives in the layout registry.
     """
 
     codec: str
@@ -224,41 +225,24 @@ class PackedBlocks:
     def max_docs_per_block(self) -> int:
         return self.doc_ids.shape[1]
 
+    def as_dict(self) -> dict[str, np.ndarray]:
+        """Every populated array field, keyed by name (shard stacking)."""
+        out = {
+            "seg": self.seg,
+            "start_pos": self.start_pos,
+            "start_abs": self.start_abs,
+            "vals": self.vals,
+            "doc_ids": self.doc_ids,
+        }
+        for k in ("ctrl", "data", "words", "widths", "comps"):
+            a = getattr(self, k)
+            if a is not None:
+                out[k] = a
+        return out
+
     def payload_bytes(self) -> int:
         """Bytes the scoring path actually streams from HBM (roofline)."""
-        total = self.seg.nbytes + self.start_pos.nbytes + self.start_abs.nbytes
-        total += self.vals.nbytes + self.doc_ids.nbytes
-        for a in (self.ctrl, self.data, self.words, self.widths, self.comps):
-            if a is not None:
-                total += a.nbytes
-        return total
-
-
-def _fragments(
-    fwd: ForwardIndex, block_size: int, max_docs: int
-) -> list[list[tuple[int, int, int]]]:
-    """Greedy first-fit packing of doc fragments into blocks.
-
-    Returns per-block lists of (doc_id, start_nnz, end_nnz) fragments.
-    A block closes when T components or D doc slots are used.
-    """
-    blocks: list[list[tuple[int, int, int]]] = []
-    cur: list[tuple[int, int, int]] = []
-    used = 0
-    for d in range(fwd.n_docs):
-        n = fwd.nnz(d)
-        pos = 0
-        while pos < n:
-            if used == block_size or len(cur) == max_docs:
-                blocks.append(cur)
-                cur, used = [], 0
-            take = min(n - pos, block_size - used)
-            cur.append((d, pos, pos + take))
-            used += take
-            pos += take
-    if cur:
-        blocks.append(cur)
-    return blocks
+        return sum(int(a.nbytes) for a in self.as_dict().values())
 
 
 def pack_forward_index(
@@ -270,87 +254,22 @@ def pack_forward_index(
 ) -> PackedBlocks:
     """Build the TPU packed block layout from a CSR forward index.
 
+    Thin alias for ``repro.core.layout.pack_blocks`` (kept here for the
+    historical import path); any codec registered in the layout registry
+    works — uncompressed, bitpack, dotvbyte, streamvbyte.
+
     ``seg_dtype=np.int8`` is the §Perf "metadata slimming" layout: the
     per-element doc-slot id fits i8 whenever max_docs_per_block ≤ 127,
     cutting the dominant metadata stream 4×."""
-    if codec not in ("dotvbyte", "bitpack", "uncompressed"):
-        raise ValueError(f"no packed layout for codec {codec!r}")
-    if block_size % 128:
-        raise ValueError("block_size must be a multiple of 128 (TPU lanes)")
-    T = block_size
-    D = max_docs_per_block or T // 8
-    if np.dtype(seg_dtype) == np.int8 and D > 127:
-        raise ValueError("int8 seg needs max_docs_per_block <= 127")
-    frags = _fragments(fwd, T, D)
-    B = len(frags)
+    from .layout import pack_blocks
 
-    seg = np.full((B, T), -1, dtype=seg_dtype)
-    start_pos = np.zeros((B, D), dtype=np.int32)
-    start_abs = np.zeros((B, D), dtype=np.int32)
-    vals = np.zeros((B, T), dtype=fwd.values.dtype)
-    doc_ids = np.full((B, D), -1, dtype=np.int32)
-    gaps_all = np.zeros((B, T), dtype=np.uint32)
-
-    for b, frag_list in enumerate(frags):
-        pos = 0
-        for s_idx, (d, lo, hi) in enumerate(frag_list):
-            off = int(fwd.offsets[d])
-            comps = fwd.components[off + lo : off + hi].astype(np.int64)
-            n = len(comps)
-            g = np.empty(n, dtype=np.uint32)
-            g[0] = 0  # fragment-first gap forced to 0; absolute out-of-band
-            g[1:] = np.diff(comps).astype(np.uint32)
-            gaps_all[b, pos : pos + n] = g
-            seg[b, pos : pos + n] = s_idx
-            vals[b, pos : pos + n] = fwd.values[off + lo : off + hi]
-            start_pos[b, s_idx] = pos
-            start_abs[b, s_idx] = comps[0]
-            doc_ids[b, s_idx] = d
-            pos += n
-
-    out = PackedBlocks(
+    return pack_blocks(
+        fwd,
         codec=codec,
-        block_size=T,
-        n_docs=fwd.n_docs,
-        dim=fwd.dim,
-        value_format=fwd.value_format,
-        seg=seg,
-        start_pos=start_pos,
-        start_abs=start_abs,
-        vals=vals,
-        doc_ids=doc_ids,
+        block_size=block_size,
+        max_docs_per_block=max_docs_per_block,
+        seg_dtype=seg_dtype,
     )
-
-    if codec == "uncompressed":
-        # decode-free path: reconstruct absolute components directly
-        t = np.cumsum(gaps_all.astype(np.int64), axis=1)
-        tp = np.take_along_axis(t, start_pos.astype(np.int64), axis=1)
-        segc = np.clip(seg, 0, D - 1)
-        base = np.take_along_axis(start_abs.astype(np.int64), segc, axis=1)
-        tseg = np.take_along_axis(tp, segc, axis=1)
-        comps = np.where(seg >= 0, base + t - tseg, 0)
-        out.comps = comps.astype(np.int32)
-        return out
-
-    if codec == "dotvbyte":
-        bits = control_bits(gaps_all.reshape(-1)).reshape(B, T)
-        out.ctrl = np.packbits(
-            bits.reshape(B, T // 8, 8), axis=2, bitorder="little"
-        ).reshape(B, T // 8)
-        lens = bits.astype(np.int64) + 1
-        data_len = lens.sum(axis=1)
-        DP = int(data_len.max(initial=1)) + 1  # +1: safe hi-byte over-read
-        data = np.zeros((B, DP), dtype=np.uint8)
-        for b in range(B):
-            starts = np.concatenate([[0], np.cumsum(lens[b])[:-1]])
-            g64 = gaps_all[b].astype(np.uint64)
-            data[b, starts] = (g64 & 0xFF).astype(np.uint8)
-            two = bits[b].astype(bool)
-            data[b, starts[two] + 1] = ((g64[two] >> 8) & 0xFF).astype(np.uint8)
-        out.data = data
-        return out
-
-    return _bitpack_tail(out, gaps_all, T, B)
 
 
 def pack_forward_index_sharded(
@@ -362,69 +281,11 @@ def pack_forward_index_sharded(
 ) -> tuple[dict, int]:
     """Doc-aligned sharded packing (§Perf opt1, EXPERIMENTS.md).
 
-    Splits documents into ``n_shards`` contiguous equal ranges, packs
-    each range independently with range-LOCAL doc ids, pads per-shard
-    block counts/data widths to a common size, and stacks every array
-    with a leading shard dim. Feed to ``scoring.make_doc_aligned_scan``
-    with the arrays sharded over the mesh. Returns (arrays, docs_local)."""
-    n = fwd.n_docs
-    docs_local = (n + n_shards - 1) // n_shards
-    packs = []
-    for s in range(n_shards):
-        lo, hi = s * docs_local, min((s + 1) * docs_local, n)
-        sub_docs = []
-        for d in range(lo, hi):
-            c, v = fwd.doc(d)
-            sub_docs.append((c, v))
-        while len(sub_docs) < docs_local:  # tail padding: empty doc
-            sub_docs.append((np.array([0], np.uint32), np.array([0.0], np.float32)))
-        sub = ForwardIndex.from_docs(sub_docs, fwd.dim, value_format=fwd.value_format.name)
-        packs.append(pack_forward_index(sub, codec=codec, block_size=block_size,
-                                        seg_dtype=seg_dtype))
-    B = max(p.n_blocks for p in packs)
-    DP = max(p.data.shape[1] for p in packs) if codec == "dotvbyte" else 0
-    out: dict[str, np.ndarray] = {}
+    Thin alias for ``repro.core.layout.pack_blocks_sharded``. Feed the
+    result to ``scoring.make_doc_aligned_scan`` with the arrays sharded
+    over the mesh. Returns (arrays, docs_local)."""
+    from .layout import pack_blocks_sharded
 
-    def stack(field, pad_value=0):
-        arrs = []
-        for p in packs:
-            a = getattr(p, field)
-            buf = np.full((B, *a.shape[1:]), pad_value, dtype=a.dtype)
-            buf[: a.shape[0]] = a
-            arrs.append(buf)
-        return np.stack(arrs)
-
-    T = block_size
-    for field, pad in (("seg", -1), ("start_pos", 0), ("start_abs", 0),
-                       ("vals", 0), ("doc_ids", -1)):
-        out[field] = stack(field, pad)
-    if codec == "dotvbyte":
-        # pad data width to the common max (+over-read byte preserved)
-        datas = []
-        ctrls = []
-        for p in packs:
-            d = np.zeros((B, DP), np.uint8)
-            d[: p.data.shape[0], : p.data.shape[1]] = p.data
-            datas.append(d)
-            c = np.zeros((B, T // 8), np.uint8)
-            c[: p.ctrl.shape[0]] = p.ctrl
-            ctrls.append(c)
-        out["data"] = np.stack(datas)
-        out["ctrl"] = np.stack(ctrls)
-    return out, docs_local
-
-
-def _bitpack_tail(out, gaps_all, T, B):
-    # bitpack: one width per block, bucket-friendly (DESIGN.md §3)
-    widths = np.maximum(
-        [int(g.max(initial=0)).bit_length() for g in gaps_all], 1
-    ).astype(np.int32)
-    Wmax = int(widths.max(initial=1))
-    n_words = (T * Wmax + 31) // 32
-    words = np.zeros((B, n_words), dtype=np.uint32)
-    for b in range(B):
-        wb = pack_block(gaps_all[b], int(widths[b]))
-        words[b, : len(wb)] = wb
-    out.words = words
-    out.widths = widths
-    return out
+    return pack_blocks_sharded(
+        fwd, n_shards, codec=codec, block_size=block_size, seg_dtype=seg_dtype
+    )

@@ -1,0 +1,488 @@
+"""Codec-pluggable packed layouts (DESIGN.md §3) — the ONE place a gap
+stream becomes device arrays.
+
+A ``ForwardIndex`` reaches the TPU in two fixed-shape forms:
+
+* **block form** ``[B, T]`` — documents greedily packed into
+  self-contained blocks for the full-scan / Pallas path
+  (``pack_blocks`` → ``PackedBlocks``);
+* **row form** ``[N+1, L]`` — one fixed-capacity row per document for
+  the serve-engine candidate-rescoring path (``pack_rows`` →
+  ``PackedRows``; the ``+1`` row is the all-zero sentinel that absorbs
+  out-of-range gathers).
+
+Both forms reduce to the same primitive: a 2-D matrix of d-gaps, one
+row per block/document, padded with zeros.  A ``LayoutCodec`` turns
+that matrix into named byte/word streams (and back, in jnp, on
+device).  Registering a codec here makes it available to *every*
+consumer — ``pack_forward_index``, the sharded scan, the batched
+Seismic engine — which is what lets ``EngineConfig(codec=…)`` swap the
+forward-index wire format without touching the serving code.
+
+Gap conventions (DESIGN.md §3):
+
+* block rows: the fragment-first gap is forced to 0 and the absolute
+  component lives out-of-band in ``start_abs`` → every block decodes
+  independently;
+* doc rows: the first gap IS the absolute component (per-document
+  alignment), so ``cumsum`` alone rebuilds the ids.
+
+``pad_stack`` is the shared shard-stacking helper: pad every field to
+the across-shard max shape and stack with a leading shard dim — used by
+``pack_blocks_sharded`` (doc-aligned scan) and
+``serve.engine.build_shard_arrays`` (two-phase search).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Sequence
+
+import numpy as np
+
+from .codecs import get_codec
+from .codecs.bitpack import pack_block
+from .codecs.dotvbyte import control_bits
+from .forward_index import ForwardIndex, PackedBlocks, ValueFormat
+
+__all__ = [
+    "LayoutCodec",
+    "register_layout",
+    "get_layout",
+    "available_layouts",
+    "PackedRows",
+    "pack_blocks",
+    "pack_rows",
+    "pack_blocks_sharded",
+    "pad_stack",
+    "encode_docs",
+    "BLOCK_PAD_VALUES",
+]
+
+_LANES = 128  # TPU lane count: data-stream widths are padded to this
+
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# layout-codec registry
+# ---------------------------------------------------------------------------
+
+
+class LayoutCodec:
+    """Vectorised gap-matrix ⇄ device-stream transform for one codec.
+
+    ``encode`` consumes a padded u32 gap matrix ``[R, T]`` (zeros past
+    each row's payload) and returns named numpy arrays, all with leading
+    dim R.  ``decode`` is the jnp inverse used on device; it must be
+    jit-traceable and return i32 gaps ``[R, T]``.  ``decode_free``
+    codecs store absolute component ids directly and skip decode on the
+    hot path (the packers special-case them)."""
+
+    name: str = "abstract"
+    #: row length must be a multiple of this (control-byte grouping)
+    block_multiple: int = 1
+    #: stores absolute components; no per-query decode work
+    decode_free: bool = False
+
+    def encode(self, gaps: np.ndarray) -> Dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    def decode(self, arrays: Mapping, block_size: int):
+        raise NotImplementedError
+
+    # -- shared encode plumbing ----------------------------------------
+    @staticmethod
+    def _byte_scatter(
+        gaps: np.ndarray, lens: np.ndarray, n_over_read: int
+    ) -> np.ndarray:
+        """Scatter each gap's ``lens`` LE bytes into a dense [R, DP]
+        stream (DP = max row length + over-read, lane-padded)."""
+        R, T = gaps.shape
+        ends = np.cumsum(lens, axis=1)
+        starts = ends - lens
+        max_end = int(np.max(ends[:, -1], initial=0)) if T else 0
+        DP = max(_round_up(max_end + n_over_read, _LANES), _LANES)
+        data = np.zeros((R, DP), dtype=np.uint8)
+        rows = np.broadcast_to(np.arange(R)[:, None], (R, T))
+        g64 = gaps.astype(np.uint64)
+        for b in range(int(lens.max(initial=1))):
+            sel = lens > b
+            data[rows[sel], starts[sel] + b] = (g64[sel] >> (8 * b)).astype(np.uint8)
+        return data
+
+
+_LAYOUTS: Dict[str, Callable[[], LayoutCodec]] = {}
+
+
+def register_layout(name: str):
+    def deco(factory: Callable[[], LayoutCodec]):
+        _LAYOUTS[name] = factory
+        return factory
+
+    return deco
+
+
+def get_layout(name: str) -> LayoutCodec:
+    try:
+        return _LAYOUTS[name]()
+    except KeyError:
+        raise ValueError(
+            f"no packed layout for codec {name!r}; have {sorted(_LAYOUTS)}"
+        ) from None
+
+
+def available_layouts() -> list[str]:
+    return sorted(_LAYOUTS)
+
+
+@register_layout("uncompressed")
+class UncompressedLayout(LayoutCodec):
+    """Raw gaps as i32 — the packers replace them with absolute
+    components (decode-free hot path, the paper's baseline)."""
+
+    name = "uncompressed"
+    decode_free = True
+
+    def encode(self, gaps: np.ndarray) -> Dict[str, np.ndarray]:
+        return {"gaps": gaps.astype(np.int32)}
+
+    def decode(self, arrays: Mapping, block_size: int):
+        return arrays["gaps"]
+
+
+@register_layout("dotvbyte")
+class DotVByteLayout(LayoutCodec):
+    """1-bit controls, 8 gaps per control byte, 1–2 data bytes per gap
+    (paper §2.2). Requires 16-bit gaps."""
+
+    name = "dotvbyte"
+    block_multiple = 8
+
+    def encode(self, gaps: np.ndarray) -> Dict[str, np.ndarray]:
+        R, T = gaps.shape
+        bits = control_bits(gaps.reshape(-1)).reshape(R, T)
+        ctrl = np.packbits(
+            bits.reshape(R, T // 8, 8), axis=2, bitorder="little"
+        ).reshape(R, T // 8)
+        lens = bits.astype(np.int64) + 1
+        return {"ctrl": ctrl, "data": self._byte_scatter(gaps, lens, 1)}
+
+    def decode(self, arrays: Mapping, block_size: int):
+        from .scoring import decode_gaps_dotvbyte
+
+        return decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
+
+
+@register_layout("streamvbyte")
+class StreamVByteLayout(LayoutCodec):
+    """2-bit controls, 4 gaps per control byte, 1–4 data bytes per gap
+    (Lemire et al.) — the paper's headline general-purpose codec, full
+    32-bit gap range (no 16-bit ceiling)."""
+
+    name = "streamvbyte"
+    block_multiple = 4
+
+    def encode(self, gaps: np.ndarray) -> Dict[str, np.ndarray]:
+        R, T = gaps.shape
+        g = gaps.astype(np.uint64)
+        codes = np.zeros((R, T), dtype=np.uint8)
+        codes[g > 0xFF] = 1
+        codes[g > 0xFFFF] = 2
+        codes[g > 0xFFFFFF] = 3
+        q = codes.reshape(R, T // 4, 4).astype(np.uint8)
+        ctrl = (q[..., 0] | (q[..., 1] << 2) | (q[..., 2] << 4) | (q[..., 3] << 6))
+        lens = codes.astype(np.int64) + 1
+        return {"ctrl": ctrl, "data": self._byte_scatter(gaps, lens, 3)}
+
+    def decode(self, arrays: Mapping, block_size: int):
+        from .scoring import decode_gaps_streamvbyte
+
+        return decode_gaps_streamvbyte(arrays["ctrl"], arrays["data"])
+
+
+@register_layout("bitpack")
+class BitpackLayout(LayoutCodec):
+    """Per-row fixed-width word packing (TPU-native shift+mask decode);
+    words are packed by the single ``codecs.bitpack.pack_block``
+    implementation at each row's own width."""
+
+    name = "bitpack"
+
+    def encode(self, gaps: np.ndarray) -> Dict[str, np.ndarray]:
+        R, T = gaps.shape
+        widths = np.maximum(
+            [int(g.max(initial=0)).bit_length() for g in gaps], 1
+        ).astype(np.int32)
+        w_max = int(widths.max(initial=1))
+        n_words = (T * w_max + 31) // 32
+        words = np.zeros((R, n_words), dtype=np.uint32)
+        for r in range(R):
+            wr = pack_block(gaps[r], int(widths[r]))
+            words[r, : len(wr)] = wr
+        return {"words": words, "widths": widths}
+
+    def decode(self, arrays: Mapping, block_size: int):
+        from .scoring import decode_gaps_bitpack
+
+        return decode_gaps_bitpack(arrays["words"], arrays["widths"], block_size)
+
+
+# ---------------------------------------------------------------------------
+# block form  [B, T]
+# ---------------------------------------------------------------------------
+
+#: pad values for stacking block arrays across shards
+BLOCK_PAD_VALUES = {"seg": -1, "doc_ids": -1}
+
+
+def _fragments(
+    fwd: ForwardIndex, block_size: int, max_docs: int
+) -> list[list[tuple[int, int, int]]]:
+    """Greedy first-fit packing of doc fragments into blocks.
+
+    Returns per-block lists of (doc_id, start_nnz, end_nnz) fragments.
+    A block closes when T components or D doc slots are used."""
+    blocks: list[list[tuple[int, int, int]]] = []
+    cur: list[tuple[int, int, int]] = []
+    used = 0
+    for d in range(fwd.n_docs):
+        n = fwd.nnz(d)
+        pos = 0
+        while pos < n:
+            if used == block_size or len(cur) == max_docs:
+                blocks.append(cur)
+                cur, used = [], 0
+            take = min(n - pos, block_size - used)
+            cur.append((d, pos, pos + take))
+            used += take
+            pos += take
+    if cur:
+        blocks.append(cur)
+    return blocks
+
+
+def _resolve_absolute(gaps, seg, start_pos, start_abs):
+    """numpy mirror of ``scoring.components_from_gaps`` for the
+    decode-free layout: gaps + out-of-band absolutes → component ids."""
+    D = start_pos.shape[1]
+    t = np.cumsum(gaps.astype(np.int64), axis=1)
+    tp = np.take_along_axis(t, start_pos.astype(np.int64), axis=1)
+    segc = np.clip(seg, 0, D - 1).astype(np.int64)
+    base = np.take_along_axis(start_abs.astype(np.int64), segc, axis=1)
+    tseg = np.take_along_axis(tp, segc, axis=1)
+    return np.where(seg >= 0, base + t - tseg, 0).astype(np.int32)
+
+
+def pack_blocks(
+    fwd: ForwardIndex,
+    codec: str = "dotvbyte",
+    block_size: int = 512,
+    max_docs_per_block: int | None = None,
+    seg_dtype=np.int32,
+) -> PackedBlocks:
+    """Build the TPU packed block layout under any registered codec.
+
+    ``seg_dtype=np.int8`` is the §Perf "metadata slimming" layout: the
+    per-element doc-slot id fits i8 whenever max_docs_per_block ≤ 127,
+    cutting the dominant metadata stream 4×."""
+    lc = get_layout(codec)
+    if block_size % 128:
+        raise ValueError("block_size must be a multiple of 128 (TPU lanes)")
+    T = block_size
+    D = max_docs_per_block or T // 8
+    if np.dtype(seg_dtype) == np.int8 and D > 127:
+        raise ValueError("int8 seg needs max_docs_per_block <= 127")
+    frags = _fragments(fwd, T, D)
+    B = len(frags)
+
+    seg = np.full((B, T), -1, dtype=seg_dtype)
+    start_pos = np.zeros((B, D), dtype=np.int32)
+    start_abs = np.zeros((B, D), dtype=np.int32)
+    vals = np.zeros((B, T), dtype=fwd.values.dtype)
+    doc_ids = np.full((B, D), -1, dtype=np.int32)
+    gaps_all = np.zeros((B, T), dtype=np.uint32)
+
+    for b, frag_list in enumerate(frags):
+        pos = 0
+        for s_idx, (d, lo, hi) in enumerate(frag_list):
+            off = int(fwd.offsets[d])
+            comps = fwd.components[off + lo : off + hi].astype(np.int64)
+            n = len(comps)
+            g = np.empty(n, dtype=np.uint32)
+            g[0] = 0  # fragment-first gap forced to 0; absolute out-of-band
+            g[1:] = np.diff(comps).astype(np.uint32)
+            gaps_all[b, pos : pos + n] = g
+            seg[b, pos : pos + n] = s_idx
+            vals[b, pos : pos + n] = fwd.values[off + lo : off + hi]
+            start_pos[b, s_idx] = pos
+            start_abs[b, s_idx] = comps[0]
+            doc_ids[b, s_idx] = d
+            pos += n
+
+    out = PackedBlocks(
+        codec=codec,
+        block_size=T,
+        n_docs=fwd.n_docs,
+        dim=fwd.dim,
+        value_format=fwd.value_format,
+        seg=seg,
+        start_pos=start_pos,
+        start_abs=start_abs,
+        vals=vals,
+        doc_ids=doc_ids,
+    )
+    if lc.decode_free:
+        out.comps = _resolve_absolute(gaps_all, seg, start_pos, start_abs)
+        return out
+    for field, arr in lc.encode(gaps_all).items():
+        setattr(out, field, arr)
+    return out
+
+
+def pack_blocks_sharded(
+    fwd: ForwardIndex,
+    n_shards: int,
+    codec: str = "dotvbyte",
+    block_size: int = 512,
+    seg_dtype=np.int32,
+) -> tuple[dict, int]:
+    """Doc-aligned sharded packing (§Perf opt1, EXPERIMENTS.md).
+
+    Splits documents into ``n_shards`` contiguous equal ranges, packs
+    each range independently with range-LOCAL doc ids, and ``pad_stack``s
+    every array to a leading shard dim. Feed to
+    ``scoring.make_doc_aligned_scan`` with the arrays sharded over the
+    mesh. Returns (arrays, docs_local)."""
+    n = fwd.n_docs
+    docs_local = (n + n_shards - 1) // n_shards
+    dicts = []
+    for s in range(n_shards):
+        lo, hi = s * docs_local, min((s + 1) * docs_local, n)
+        sub_docs = [fwd.doc(d) for d in range(lo, hi)]
+        while len(sub_docs) < docs_local:  # tail padding: empty doc
+            sub_docs.append((np.array([0], np.uint32), np.array([0.0], np.float32)))
+        sub = ForwardIndex.from_docs(sub_docs, fwd.dim, value_format=fwd.value_format.name)
+        dicts.append(
+            pack_blocks(sub, codec=codec, block_size=block_size, seg_dtype=seg_dtype).as_dict()
+        )
+    return pad_stack(dicts, BLOCK_PAD_VALUES), docs_local
+
+
+# ---------------------------------------------------------------------------
+# row form  [N+1, L]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedRows:
+    """Fixed-capacity per-document rows for candidate rescoring.
+
+    ``vals_rows``/``nnz_rows`` are codec-independent; ``payload`` holds
+    the codec streams keyed engine-style (``comps_rows`` |
+    ``ctrl_rows`` + ``data_rows``). Row N is the all-zero sentinel."""
+
+    codec: str
+    n_docs: int
+    dim: int
+    l_max: int
+    value_format: ValueFormat
+    vals_rows: np.ndarray
+    nnz_rows: np.ndarray
+    payload: dict[str, np.ndarray]
+
+    def arrays(self) -> dict[str, np.ndarray]:
+        return {"vals_rows": self.vals_rows, "nnz_rows": self.nnz_rows, **self.payload}
+
+
+def _row_gap_matrix(fwd: ForwardIndex, l_max: int):
+    """CSR → padded [N+1, l_max] gap/value matrices, vectorised.
+
+    Row-first gaps are ABSOLUTE (per-document alignment): cumsum alone
+    rebuilds component ids; padding gaps are 0."""
+    N = fwd.n_docs
+    nnz = np.diff(fwd.offsets).astype(np.int64)
+    total = int(fwd.total_nnz)
+    doc_of = np.repeat(np.arange(N), nnz)
+    pos = np.arange(total) - np.repeat(fwd.offsets[:-1].astype(np.int64), nnz)
+    comps = fwd.components.astype(np.int64)
+    gaps_flat = np.zeros(total, dtype=np.int64)
+    if total:
+        gaps_flat[1:] = comps[1:] - comps[:-1]
+        starts = fwd.offsets[:-1][nnz > 0].astype(np.int64)
+        gaps_flat[starts] = comps[starts]
+    gaps = np.zeros((N + 1, l_max), dtype=np.uint32)
+    gaps[doc_of, pos] = gaps_flat
+    vals = np.zeros((N + 1, l_max), dtype=fwd.values.dtype)
+    vals[doc_of, pos] = fwd.values
+    return gaps, vals, np.concatenate([nnz, [0]]).astype(np.int32)
+
+
+def pack_rows(
+    fwd: ForwardIndex, codec: str = "uncompressed", l_max: int | None = None
+) -> PackedRows:
+    """Build the per-document row layout under any registered codec."""
+    lc = get_layout(codec)
+    nnz_max = int(np.diff(fwd.offsets).max(initial=1))
+    cap = max(l_max or 0, nnz_max, 1)
+    cap = _round_up(cap, 8)  # 8 covers every codec's control grouping
+    gaps, vals_rows, nnz_rows = _row_gap_matrix(fwd, cap)
+    if lc.decode_free:
+        comps = np.cumsum(gaps.astype(np.int64), axis=1)
+        live = np.arange(cap)[None, :] < nnz_rows[:, None]
+        payload = {"comps_rows": np.where(live, comps, 0).astype(np.int32)}
+    else:
+        payload = {f"{k}_rows": v for k, v in lc.encode(gaps).items()}
+    return PackedRows(
+        codec=codec,
+        n_docs=fwd.n_docs,
+        dim=fwd.dim,
+        l_max=cap,
+        value_format=fwd.value_format,
+        vals_rows=vals_rows,
+        nnz_rows=nnz_rows,
+        payload=payload,
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared shard stacking + host-side doc encoding
+# ---------------------------------------------------------------------------
+
+
+def pad_stack(
+    dicts: Sequence[Mapping[str, np.ndarray]],
+    pad_values: Mapping[str, int] | None = None,
+) -> dict[str, np.ndarray]:
+    """Stack per-shard array dicts with a leading shard dim, padding
+    every axis to the across-shard max (block counts and data-stream
+    widths legitimately differ between shards)."""
+    pad_values = pad_values or {}
+    keys = list(dicts[0])
+    for d in dicts[1:]:
+        if list(d) != keys:
+            raise ValueError("shard dicts must share the same fields")
+    out: dict[str, np.ndarray] = {}
+    for k in keys:
+        arrs = [np.asarray(d[k]) for d in dicts]
+        nd = arrs[0].ndim
+        target = tuple(max(a.shape[i] for a in arrs) for i in range(nd))
+        buf = np.full((len(arrs), *target), pad_values.get(k, 0), dtype=arrs[0].dtype)
+        for s, a in enumerate(arrs):
+            buf[(s, *(slice(0, d) for d in a.shape))] = a
+        out[k] = buf
+    return out
+
+
+def encode_docs(fwd: ForwardIndex, codec_name: str) -> list[bytes]:
+    """Host-side per-document byte encoding (reference engine / size
+    accounting) through the codec registry — one implementation for
+    ``SeismicIndex.prepare_codec`` and friends."""
+    codec = get_codec(codec_name)
+    offs = fwd.offsets
+    return [
+        codec.encode_doc(fwd.components[int(s) : int(e)])
+        for s, e in zip(offs[:-1], offs[1:])
+    ]

@@ -23,12 +23,15 @@ from .forward_index import PackedBlocks
 __all__ = [
     "dequantise_values",
     "decode_gaps_dotvbyte",
+    "decode_gaps_streamvbyte",
     "decode_gaps_bitpack",
+    "decode_block_gaps",
     "components_from_gaps",
     "block_products",
     "combine_block_scores",
     "score_packed",
     "score_packed_batch",
+    "decode_doc_rows",
 ]
 
 
@@ -57,6 +60,31 @@ def decode_gaps_dotvbyte(ctrl: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
     return lo + (hi << 8)
 
 
+def decode_gaps_streamvbyte(ctrl: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """StreamVByte decode, vectorised — same shape contract as the
+    DotVByte decoder (DESIGN.md §3).
+
+    ctrl u8 [B, T/4] (2-bit codes, value i of a quad in bits 2i..2i+1),
+    data u8 [B, DP] (DP ≥ total data bytes + 3 over-read).
+    Returns gaps i32 [B, T].
+
+    The x86 ``_mm_shuffle_epi8`` table decode becomes: 2-bit controls →
+    prefix-sum byte offsets → up-to-4-byte gathers masked by the code.
+    """
+    B, nc = ctrl.shape
+    codes = (ctrl[:, :, None].astype(jnp.int32) >> (2 * jnp.arange(4, dtype=jnp.int32))) & 0x3
+    codes = codes.reshape(B, nc * 4)  # quad-local value i ↔ bits 2i..2i+1
+    lens = codes + 1
+    ends = jnp.cumsum(lens, axis=1)
+    starts = ends - lens
+    d = data.astype(jnp.int32)
+    out = jnp.take_along_axis(d, starts, axis=1)
+    out = out | (jnp.take_along_axis(d, starts + 1, axis=1) * (codes >= 1)) << 8
+    out = out | (jnp.take_along_axis(d, starts + 2, axis=1) * (codes >= 2)) << 16
+    out = out | (jnp.take_along_axis(d, starts + 3, axis=1) * (codes >= 3)) << 24
+    return out
+
+
 def decode_gaps_bitpack(
     words: jnp.ndarray, widths: jnp.ndarray, block_size: int
 ) -> jnp.ndarray:
@@ -79,6 +107,21 @@ def decode_gaps_bitpack(
     hi = jnp.where(off > 0, hi_raw << hi_shift, jnp.uint32(0))
     mask = (jnp.uint32(1) << width) - jnp.uint32(1)
     return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def decode_block_gaps(codec: str, arrays, block_size: int) -> jnp.ndarray:
+    """Codec-dispatching gap decode over a dict of layout arrays.
+
+    ``codec`` must be static under jit (it selects the traced graph).
+    The arrays carry the fields the layout codec produced — ctrl/data
+    (dotvbyte, streamvbyte) or words/widths (bitpack)."""
+    if codec == "dotvbyte":
+        return decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
+    if codec == "streamvbyte":
+        return decode_gaps_streamvbyte(arrays["ctrl"], arrays["data"])
+    if codec == "bitpack":
+        return decode_gaps_bitpack(arrays["words"], arrays["widths"], block_size)
+    raise ValueError(f"no device decoder for codec {codec!r}")
 
 
 def components_from_gaps(
@@ -164,14 +207,14 @@ def _score_packed(
     n_docs: int,
     scale: float,
 ):
-    if codec == "dotvbyte":
-        gaps = decode_gaps_dotvbyte(ctrl, data)
-        c = components_from_gaps(gaps, seg, start_pos, start_abs)
-    elif codec == "bitpack":
-        gaps = decode_gaps_bitpack(words, widths, block_size)
-        c = components_from_gaps(gaps, seg, start_pos, start_abs)
-    else:  # uncompressed
+    if codec == "uncompressed":  # decode-free layout
         c = comps
+    else:
+        gaps = decode_block_gaps(
+            codec, {"ctrl": ctrl, "data": data, "words": words, "widths": widths},
+            block_size,
+        )
+        c = components_from_gaps(gaps, seg, start_pos, start_abs)
     vals_f = dequantise_values(vals, scale)
     prod = block_products(q, c, vals_f, seg)
     return combine_block_scores(prod, seg, doc_ids, n_docs)
@@ -210,23 +253,30 @@ def score_packed_batch(Q, packed: PackedBlocks) -> jnp.ndarray:
     return jnp.stack([score_packed(q, packed) for q in Q])
 
 
-def make_doc_aligned_scan(mesh, axes: tuple[str, ...], docs_local: int, scale: float):
+def make_doc_aligned_scan(
+    mesh, axes: tuple[str, ...], docs_local: int, scale: float,
+    codec: str = "dotvbyte",
+):
     """§Perf opt1: doc-aligned sharded scan (EXPERIMENTS.md).
 
     Each device owns a contiguous range of ``docs_local`` documents AND
     exactly the packed blocks containing them (arrays carry an explicit
     leading shard dim sharded over ``axes``; doc_ids are range-LOCAL),
     so the score scatter is device-local and the scan path carries ZERO
-    collectives. Queries replicate. fn(arrays, Q [nq, dim_pad]) →
-    [nq, n_shards·docs_local]."""
+    collectives. Queries replicate. Any layout codec works — the arrays
+    come from ``layout.pack_blocks_sharded(codec=…)``.
+    fn(arrays, Q [nq, dim_pad]) → [nq, n_shards·docs_local]."""
     from jax.sharding import PartitionSpec as P
 
     def local_scan(arrays, Q):
         arrays = jax.tree.map(lambda a: a[0], arrays)  # drop shard dim
-        gaps = decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
-        comps = components_from_gaps(
-            gaps, arrays["seg"], arrays["start_pos"], arrays["start_abs"]
-        )
+        if codec == "uncompressed":
+            comps = arrays["comps"]
+        else:
+            gaps = decode_block_gaps(codec, arrays, arrays["seg"].shape[-1])
+            comps = components_from_gaps(
+                gaps, arrays["seg"], arrays["start_pos"], arrays["start_abs"]
+            )
         vals_f = dequantise_values(arrays["vals"], scale)
 
         def one(q):
@@ -248,18 +298,27 @@ def make_doc_aligned_scan(mesh, axes: tuple[str, ...], docs_local: int, scale: f
 # per-document row layout (serve-engine rescoring path)
 # ---------------------------------------------------------------------------
 # Candidate re-scoring in the batched Seismic engine gathers a fixed-
-# capacity row per candidate document. Rows are either raw components
-# (uncompressed) or a DotVByte (ctrl,data) pair decoded on the fly — the
-# decode is identical to the block path but per-row.
+# capacity row per candidate document (built by ``layout.pack_rows``).
+# Rows are either raw components (uncompressed) or a (ctrl, data) stream
+# pair — DotVByte or StreamVByte — decoded on the fly; the decode is
+# identical to the block path but row gaps carry their absolute first
+# component, so a plain cumsum rebuilds the ids.
 
 
-def decode_doc_rows_dotvbyte(ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> jnp.ndarray:
-    """ctrl u8 [N, L/8], data u8 [N, DP] → absolute components i32 [N, L].
+def decode_doc_rows(codec: str, ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> jnp.ndarray:
+    """ctrl u8 [N, L/8 | L/4], data u8 [N, DP] → absolute comps i32 [N, L].
 
     Row gaps are encoded with the first gap absolute (per-doc alignment);
     padding gaps are 0 with value 0, the usual neutral trick."""
-    gaps = decode_gaps_dotvbyte(ctrl_rows, data_rows)
+    if codec == "streamvbyte":
+        gaps = decode_gaps_streamvbyte(ctrl_rows, data_rows)
+    else:
+        gaps = decode_gaps_dotvbyte(ctrl_rows, data_rows)
     return jnp.cumsum(gaps, axis=1)
+
+
+def decode_doc_rows_dotvbyte(ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> jnp.ndarray:
+    return decode_doc_rows("dotvbyte", ctrl_rows, data_rows)
 
 
 def score_doc_rows(

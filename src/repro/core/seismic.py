@@ -163,12 +163,9 @@ class SeismicIndex:
     # ------------------------------------------------------------------
     def prepare_codec(self, codec_name: str) -> None:
         """Pre-encode every document with ``codec_name`` for rescoring."""
-        codec = get_codec(codec_name)
-        encoded = []
-        for d in range(self.fwd.n_docs):
-            s, e = int(self.fwd.offsets[d]), int(self.fwd.offsets[d + 1])
-            encoded.append(codec.encode_doc(self.fwd.components[s:e]))
-        self._decoded = {"codec": codec_name, "bufs": encoded}
+        from .layout import encode_docs
+
+        self._decoded = {"codec": codec_name, "bufs": encode_docs(self.fwd, codec_name)}
 
     def _doc_components(self, d: int, codec_name: str) -> np.ndarray:
         """Decode doc d's components with the configured codec (timed path)."""

@@ -1,0 +1,16 @@
+"""Distribution layer (DESIGN.md §4).
+
+Three concerns, three modules:
+
+* ``sharding``    — the family sharding RULES: pure functions from
+  (config, mesh) to PartitionSpec pytrees, plus the NamedSharding
+  plumbing every Cell uses. No jax transformations live here.
+* ``collectives`` — hand-written shard_map collectives where jit
+  auto-sharding is not enough: sequence-sharded flash decoding.
+* ``compression`` — wire-format gradient compression (int8 + error
+  feedback) for the pure-DP trainer.
+"""
+
+from . import collectives, compression, sharding
+
+__all__ = ["sharding", "collectives", "compression"]

@@ -1,0 +1,77 @@
+"""Hand-written shard_map collectives (DESIGN.md §4).
+
+``flash_decode_shardmap`` is the sequence-sharded decode-attention step:
+each device scores the query against its LOCAL slice of the KV cache,
+keeps the flash-attention partial statistics (running max, denominator,
+weighted accumulator), and the softmax is completed with one ``pmax``
+and two ``psum``s over the sequence axes — O(B·H·dh) collective bytes
+per step instead of gathering O(S) cache. This is the standard
+flash-decoding decomposition (softmax is an associative reduction over
+the key axis), so the result is bit-comparable to the local reference
+``models.transformer._decode_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["flash_decode_shardmap"]
+
+
+def flash_decode_shardmap(
+    mesh: Mesh,
+    *,
+    batch_axes: tuple[str, ...] = ("data",),
+    seq_axes: tuple[str, ...] = ("model",),
+):
+    """fn(q [B,1,H,dh], k/v caches [B,S,Hk,dh], valid_len [B]) → [B,1,H,dh].
+
+    The cache shards over ``seq_axes`` on S (and ``batch_axes`` on B);
+    queries and outputs shard over ``batch_axes`` only. ``seq_axes`` may
+    cover every mesh axis (the 500k-context layout, batch replicated)."""
+    ba = tuple(batch_axes) or None
+    sa = tuple(seq_axes)
+
+    def local(q, k, v, valid_len):
+        B, _, H, dh = q.shape
+        S_local, Hk = k.shape[1], k.shape[2]
+        G = H // Hk
+        # global position of this shard's first key (axes major-to-minor,
+        # matching how PartitionSpec splits the dimension)
+        idx = jnp.int32(0)
+        for a in sa:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        kpos = idx * S_local + jnp.arange(S_local)
+
+        qg = q.reshape(B, Hk, G, dh)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(dh))
+        mask = kpos[None, :] < valid_len[:, None]  # [B, S_local]
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+
+        m_local = s.max(axis=-1)  # [B, Hk, G]
+        m = jax.lax.pmax(m_local, sa)
+        p = jnp.exp(s - m[..., None])
+        p = jnp.where(mask[:, None, None, :], p, 0.0)
+        denom = jax.lax.psum(p.sum(axis=-1), sa)
+        acc = jax.lax.psum(
+            jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32)), sa
+        )
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]
+        return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(ba, None, None, None),
+            P(ba, sa, None, None),
+            P(ba, sa, None, None),
+            P(ba),
+        ),
+        out_specs=P(ba, None, None, None),
+        check_vma=False,
+    )

@@ -1,0 +1,194 @@
+"""Family sharding rules: (config, mesh) → PartitionSpec pytrees.
+
+Single home for the placement policy referenced throughout
+DESIGN.md §4:
+
+* **LM** — 2-D "data × model": weights column/row-split over ``model``
+  (Megatron TP) and, when ``fsdp`` is on, additionally split over the
+  data axes on the non-TP dim for storage (ZeRO-3; the just-in-time
+  gather back to TP layout happens inside the model via ``shard_hint``).
+* **GNN** — parameters replicated (they are tiny), node/edge arrays
+  sharded over the data axes.
+* **RecSys** — embedding tables row-sharded over ``model`` (the only
+  big tensors), dense towers replicated, batches over data.
+* **KV caches** — batch over data + sequence over ``model`` for normal
+  decode; sequence over EVERY axis for the 500k-context cell (feeds
+  ``collectives.flash_decode_shardmap``).
+
+Every rule degrades gracefully: an axis is only used when it divides
+the dimension, so the same specs lower on the 8-device debug mesh, the
+16×16 pod and the 2×16×16 multi-pod mesh without special-casing.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "data_axes",
+    "to_shardings",
+    "replicate",
+    "lm_param_specs",
+    "kv_cache_spec",
+    "gnn_batch_spec",
+    "recsys_param_specs",
+    "recsys_batch_spec",
+]
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes present on this mesh (pod-major)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def to_shardings(mesh: Mesh, specs):
+    """PartitionSpec pytree → NamedSharding pytree (specs are leaves)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def replicate(tree):
+    """A fully-replicated spec for every leaf of ``tree``."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _fit(mesh: Mesh, entry, dim: int):
+    """Keep a spec entry only when it divides the dimension."""
+    if entry is None:
+        return None
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes or dim % _axis_size(mesh, axes):
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _spec(mesh: Mesh, shape, *entries):
+    fitted = [_fit(mesh, e, d) for e, d in zip(entries, shape)]
+    return P(*fitted)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def lm_param_specs(cfg, mesh: Mesh, fsdp: bool = True):
+    """Storage specs for every LM parameter (stacked-layer layout).
+
+    TP over ``model`` on the contraction-free dim; FSDP over the data
+    axes on the other dim when ``fsdp`` (train/prefill — decode turns it
+    off so weights stay TP-resident)."""
+    from repro.models import transformer as tf_m
+
+    abs_params = jax.eval_shape(
+        lambda k: tf_m.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    da = data_axes(mesh)
+    dsp = da if fsdp else None
+
+    def one(path, leaf):
+        name = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        if leaf.ndim <= 1 or "norm" in name or "router" in name:
+            return P()
+        if "moe" in name:
+            # stacked experts [L, E, d_in, d_out]: expert-parallel over
+            # model, FSDP on d_in (gate/up) or d_out (down)
+            if leaf.ndim == 4:
+                if "w_down" in name:
+                    return _spec(mesh, shape, None, "model", None, dsp)
+                return _spec(mesh, shape, None, "model", dsp, None)
+            if "shared_down" in name:  # [L, S·F, D]
+                return _spec(mesh, shape, None, "model", dsp)
+            return _spec(mesh, shape, None, dsp, "model")  # shared gate/up
+        if "embed" in name:  # [V, D] — vocab-sharded over model
+            return _spec(mesh, shape, "model", dsp)
+        if "lm_head" in name:  # [D, V]
+            return _spec(mesh, shape, dsp, "model")
+        if "wo" in name or "w_down" in name:  # [L, X, D] row-parallel
+            return _spec(mesh, shape, None, "model", dsp)
+        # [L, D, X] column-parallel (wq/wk/wv/w_gate/w_up)
+        return _spec(mesh, shape, None, dsp, "model")
+
+    return jax.tree_util.tree_map_with_path(one, abs_params)
+
+
+def kv_cache_spec(mesh: Mesh, *, batch: int, seq_shard: bool = False):
+    """Specs for the [L, B, S, Hk, dh] KV cache dict.
+
+    Normal decode: batch over data, sequence over ``model`` (matches
+    ``flash_decode_shardmap(batch_axes=da, seq_axes=("model",))``).
+    ``seq_shard`` (500k context): sequence over every axis, batch
+    replicated."""
+    da = data_axes(mesh)
+    if seq_shard:
+        spec = P(None, None, (*da, "model"), None, None)
+    else:
+        ba = _fit(mesh, da, batch)
+        spec = P(None, ba, "model", None, None)
+    return {"k": spec, "v": spec}
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def gnn_batch_spec(mesh: Mesh) -> dict:
+    """Node/edge arrays shard over the data axes; params are replicated
+    by ``replicate`` (they are KBs)."""
+    da = data_axes(mesh)
+    return {
+        "x": P(da, None),
+        "edge_src": P(da),
+        "edge_dst": P(da),
+        "labels": P(da),
+        "train_mask": P(da),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+
+def recsys_param_specs(model_name: str, abs_params, mesh: Mesh):
+    """Embedding tables row-shard over ``model`` (vocab dim); everything
+    else (MLP towers, cross layers, heads) is small enough to replicate."""
+
+    def one(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if "embed" in name and leaf.ndim >= 1:
+            return _spec(mesh, leaf.shape, "model", *([None] * (leaf.ndim - 1)))
+        if "linear" in name and leaf.ndim == 1:  # deepfm first-order terms
+            return _spec(mesh, leaf.shape, "model")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, abs_params)
+
+
+def recsys_batch_spec(model_name: str, mesh: Mesh) -> dict:
+    da = data_axes(mesh)
+    if model_name == "deepfm":
+        return {"sparse": P(da, None), "label": P(da)}
+    if model_name == "dcn-v2":
+        return {"dense": P(da, None), "sparse": P(da, None), "label": P(da)}
+    if model_name == "sasrec":
+        return {
+            "seq": P(da, None),
+            "pos_label": P(da, None),
+            "neg_label": P(da, None, None),
+        }
+    if model_name == "din":
+        return {"hist": P(da, None), "target": P(da), "label": P(da)}
+    raise KeyError(f"unknown recsys model {model_name!r}")

@@ -16,11 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 
 
+ENGINE_CODECS = ("uncompressed", "dotvbyte", "streamvbyte")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--encoder", choices=["splade", "lilsr"], default="splade")
-    ap.add_argument("--codec", default="dotvbyte",
-                    choices=["uncompressed", "dotvbyte"])
+    ap.add_argument("--codec", default="dotvbyte", choices=list(ENGINE_CODECS))
+    ap.add_argument("--compare-codecs", action="store_true",
+                    help="sweep every engine codec over the same index")
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--n-queries", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -42,30 +46,30 @@ def main() -> None:
     index = SeismicIndex.build(col.fwd, SeismicParams(n_postings=2000, block_size=64))
     print(f"  {index.n_blocks} blocks in {time.time()-t0:.1f}s")
 
-    engine = BatchedSeismic(
-        index,
-        EngineConfig(cut=args.cut, block_budget=512, n_probe=args.n_probe,
-                     k=args.k, codec=args.codec),
-    )
     Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
-    ids, scores = engine.search_batch(jnp.asarray(Q))  # compile
-    t0 = time.time()
-    ids, scores = engine.search_batch(jnp.asarray(Q))
-    ids = np.asarray(ids)
-    dt = time.time() - t0
+    truth = [exact_top_k(col.fwd, Q[i], args.k)[0] for i in range(col.n_queries)]
+    codecs = ENGINE_CODECS if args.compare_codecs else (args.codec,)
+    for codec in codecs:
+        engine = BatchedSeismic(
+            index,
+            EngineConfig(cut=args.cut, block_budget=512, n_probe=args.n_probe,
+                         k=args.k, codec=codec),
+        )
+        ids, scores = engine.search_batch(jnp.asarray(Q))  # compile
+        t0 = time.time()
+        ids, scores = engine.search_batch(jnp.asarray(Q))
+        ids = np.asarray(ids)
+        dt = time.time() - t0
 
-    recs = [
-        recall_at_k(exact_top_k(col.fwd, Q[i], args.k)[0], ids[i])
-        for i in range(col.n_queries)
-    ]
-    comp_bytes = col.fwd.storage_bytes(args.codec)["components"]
-    raw_bytes = col.fwd.storage_bytes("uncompressed")["components"]
-    print(
-        f"codec={args.codec:13s} recall@{args.k}={np.mean(recs):.3f} "
-        f"latency={1e6*dt/col.n_queries:7.0f}µs/q (CPU) "
-        f"components={comp_bytes/2**20:.1f}MiB ({8*comp_bytes/col.fwd.total_nnz:.1f} "
-        f"bits/comp vs 16.0 raw, {100*(1-comp_bytes/raw_bytes):.0f}% saved)"
-    )
+        recs = [recall_at_k(truth[i], ids[i]) for i in range(col.n_queries)]
+        comp_bytes = col.fwd.storage_bytes(codec)["components"]
+        raw_bytes = col.fwd.storage_bytes("uncompressed")["components"]
+        print(
+            f"codec={codec:13s} recall@{args.k}={np.mean(recs):.3f} "
+            f"latency={1e6*dt/col.n_queries:7.0f}µs/q (CPU) "
+            f"components={comp_bytes/2**20:.1f}MiB ({8*comp_bytes/col.fwd.total_nnz:.1f} "
+            f"bits/comp vs 16.0 raw, {100*(1-comp_bytes/raw_bytes):.0f}% saved)"
+        )
 
 
 if __name__ == "__main__":

@@ -12,8 +12,9 @@ relaxation of the same algorithm:
            budget (the Seismic papers' own batching trick);
   phase 2  gather the ≤ n_probe·block_size candidate documents, dedupe
            (sort by id, mask repeats), re-score *exactly* against the
-           forward index rows — uncompressed or DotVByte-decoded, the
-           paper's hot path — and take the global top-k.
+           forward index rows — uncompressed, DotVByte- or StreamVByte-
+           decoded (any codec registered in core/layout.py), the paper's
+           hot path — and take the global top-k.
 
 ``search_one_fn`` is a *pure* function of (arrays, query) so the same
 code serves the jit'd production path, the multi-pod dry-run
@@ -31,10 +32,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scoring import decode_doc_rows_dotvbyte, score_doc_rows
+from repro.core import layout
+from repro.core.scoring import decode_doc_rows, score_doc_rows
 from repro.core.seismic import SeismicIndex
 
 __all__ = ["BatchedSeismic", "EngineConfig", "search_one_fn", "engine_array_specs"]
+
+#: codecs with a (ctrl, data) row stream decoded on the fly
+_STREAM_CODECS = ("dotvbyte", "streamvbyte")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +48,7 @@ class EngineConfig:
     block_budget: int = 512  # max candidate blocks per query (phase 1)
     n_probe: int = 64  # blocks exactly re-scored (phase 2)
     k: int = 10
-    codec: str = "uncompressed"  # "uncompressed" | "dotvbyte"
+    codec: str = "uncompressed"  # "uncompressed" | "dotvbyte" | "streamvbyte"
 
 
 def search_one_fn(cfg: EngineConfig, n_docs: int, value_scale: float, arrays: dict, q):
@@ -81,10 +86,10 @@ def search_one_fn(cfg: EngineConfig, n_docs: int, value_scale: float, arrays: di
 
     vals = jnp.take(arrays["vals_rows"], docs, axis=0)
     nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
-    if cfg.codec == "dotvbyte":
+    if cfg.codec in _STREAM_CODECS:
         ctrl = jnp.take(arrays["ctrl_rows"], docs, axis=0)
         data = jnp.take(arrays["data_rows"], docs, axis=0)
-        comps = decode_doc_rows_dotvbyte(ctrl, data)
+        comps = decode_doc_rows(cfg.codec, ctrl, data)
     else:
         comps = jnp.take(arrays["comps_rows"], docs, axis=0)
     scores = score_doc_rows(q, comps, vals, nnz, value_scale)
@@ -116,8 +121,9 @@ def engine_array_specs(
         "vals_rows": sds((n_docs + 1, l_max), value_dtype),
         "nnz_rows": sds((n_docs + 1,), jnp.int32),
     }
-    if cfg.codec == "dotvbyte":
-        arrays["ctrl_rows"] = sds((n_docs + 1, l_max // 8), jnp.uint8)
+    if cfg.codec in _STREAM_CODECS:
+        ctrl_group = 8 if cfg.codec == "dotvbyte" else 4
+        arrays["ctrl_rows"] = sds((n_docs + 1, l_max // ctrl_group), jnp.uint8)
         arrays["data_rows"] = sds((n_docs + 1, d_max), jnp.uint8)
     else:
         arrays["comps_rows"] = sds((n_docs + 1, l_max), jnp.int32)
@@ -128,6 +134,11 @@ class BatchedSeismic:
     """Static-array view of a SeismicIndex + jit'd batched search."""
 
     def __init__(self, index: SeismicIndex, cfg: EngineConfig):
+        if cfg.codec != "uncompressed" and cfg.codec not in _STREAM_CODECS:
+            raise ValueError(
+                f"engine codec must be one of {('uncompressed', *_STREAM_CODECS)}, "
+                f"got {cfg.codec!r}"
+            )
         self.cfg = cfg
         self.dim = index.dim
         self.n_docs = index.fwd.n_docs
@@ -163,49 +174,17 @@ class BatchedSeismic:
             s, e = int(index.block_doc_indptr[b]), int(index.block_doc_indptr[b + 1])
             block_docs[b, : e - s] = index.block_docs[s:e]
 
-        nnz = np.diff(fwd.offsets).astype(np.int32)
-        l_max = int(((nnz.max(initial=1) + 7) // 8) * 8)
-        N = self.n_docs
-        vals_rows = np.zeros((N + 1, l_max), dtype=fwd.values.dtype)
         arrays = {
             "cbs": jnp.asarray(index.comp_block_indptr[:-1].astype(np.int32)),
             "cbl": jnp.asarray(np.diff(index.comp_block_indptr).astype(np.int32)),
             "sum_comps": jnp.asarray(sum_comps),
             "sum_vals": jnp.asarray(sum_vals),
             "block_docs": jnp.asarray(block_docs),
-            "nnz_rows": jnp.asarray(np.concatenate([nnz, np.zeros(1, np.int32)])),
         }
-
-        if cfg.codec == "dotvbyte":
-            ctrl_rows = np.zeros((N + 1, l_max // 8), dtype=np.uint8)
-            datas = []
-            data_len = np.zeros(N, dtype=np.int64)
-            for d in range(N):
-                s, e = int(fwd.offsets[d]), int(fwd.offsets[d + 1])
-                comps = fwd.components[s:e].astype(np.int64)
-                gaps = np.zeros(l_max, dtype=np.uint32)
-                if len(comps):
-                    gaps[0] = comps[0]
-                    gaps[1 : len(comps)] = np.diff(comps)
-                ctrl, data = _encode_row(gaps)
-                ctrl_rows[d] = ctrl
-                datas.append(data)
-                data_len[d] = len(data)
-                vals_rows[d, : e - s] = fwd.values[s:e]
-            d_max = int(((data_len.max(initial=1) + 1 + 127) // 128) * 128)
-            data_rows = np.zeros((N + 1, d_max), dtype=np.uint8)
-            for d in range(N):
-                data_rows[d, : data_len[d]] = datas[d]
-            arrays["ctrl_rows"] = jnp.asarray(ctrl_rows)
-            arrays["data_rows"] = jnp.asarray(data_rows)
-        else:
-            comps_rows = np.zeros((N + 1, l_max), dtype=np.int32)
-            for d in range(N):
-                s, e = int(fwd.offsets[d]), int(fwd.offsets[d + 1])
-                comps_rows[d, : e - s] = fwd.components[s:e]
-                vals_rows[d, : e - s] = fwd.values[s:e]
-            arrays["comps_rows"] = jnp.asarray(comps_rows)
-        arrays["vals_rows"] = jnp.asarray(vals_rows)
+        # per-doc rescoring rows under the configured codec — one shared
+        # layout implementation for every codec (core/layout.py)
+        rows = layout.pack_rows(fwd, codec=cfg.codec)
+        arrays.update({k: jnp.asarray(v) for k, v in rows.arrays().items()})
         return arrays
 
     # ------------------------------------------------------------------
@@ -318,23 +297,9 @@ def build_shard_arrays(index: SeismicIndex, cfg: EngineConfig, n_shards: int):
         idmaps.append(idmap)
 
     stacked = {
-        k: jnp.asarray(np.stack([sa[k] for sa in shard_arrays]))
-        for k in shard_arrays[0]
+        k: jnp.asarray(v)
+        for k, v in layout.pad_stack(
+            shard_arrays, pad_values={"block_docs": docs_local_max}
+        ).items()
     }
     return stacked, jnp.asarray(np.stack(idmaps)), docs_local_max
-
-
-def _encode_row(gaps: np.ndarray):
-    """DotVByte-encode one pre-padded gap row (first gap absolute)."""
-    from repro.core.codecs.dotvbyte import control_bits
-
-    bits = control_bits(gaps)
-    ctrl = np.packbits(bits.reshape(-1, 8), axis=1, bitorder="little").reshape(-1)
-    lens = bits.astype(np.int64) + 1
-    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
-    data = np.zeros(int(lens.sum()), dtype=np.uint8)
-    g64 = gaps.astype(np.uint64)
-    data[starts] = (g64 & 0xFF).astype(np.uint8)
-    two = bits.astype(bool)
-    data[starts[two] + 1] = ((g64[two] >> 8) & 0xFF).astype(np.uint8)
-    return ctrl, data

@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing: msgpack + zstd, atomic, resharding-aware.
+"""Fault-tolerant checkpointing: msgpack + zstd/zlib, atomic, resharding-aware.
 
 Layout (one directory per step)::
 
@@ -30,11 +30,48 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstandard is optional — stdlib zlib is the fallback wire format
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
 
 __all__ = ["save", "restore", "latest_step", "available_steps", "prune_old"]
 
 _ZSTD_LEVEL = 3
+_ZLIB_LEVEL = 6
+
+
+def _compress(raw: bytes) -> bytes:
+    """Self-describing payload: 1-byte codec tag + compressed bytes, so a
+    checkpoint written with zstd restores on a zlib-only host and vice
+    versa (the tag, not the environment, selects the decompressor)."""
+    if zstandard is not None:
+        return b"Z" + zstandard.ZstdCompressor(level=_ZSTD_LEVEL).compress(raw)
+    import zlib
+
+    return b"z" + zlib.compress(raw, _ZLIB_LEVEL)
+
+
+def _decompress(payload: bytes) -> bytes:
+    tag, body = payload[:1], payload[1:]
+    if tag == b"Z":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(body)
+    if tag == b"z":
+        import zlib
+
+        return zlib.decompress(body)
+    if payload[:4] == b"\x28\xb5\x2f\xfd":  # legacy untagged zstd frame
+        if zstandard is None:
+            raise RuntimeError(
+                "legacy zstd checkpoint but zstandard is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(payload)
+    raise ValueError(f"unknown checkpoint compression tag {tag!r}")
 
 
 def _tree_paths(tree) -> list[tuple[str, Any]]:
@@ -74,11 +111,10 @@ def save(
     with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
         f.write(msgpack.packb(meta))
 
-    cctx = zstandard.ZstdCompressor(level=_ZSTD_LEVEL)
     payload = {}
     for path, leaf in leaves:
         arr = np.asarray(jax.device_get(leaf))
-        payload[path] = cctx.compress(arr.tobytes())
+        payload[path] = _compress(arr.tobytes())
     with open(os.path.join(tmp, f"shard_p{process_index}.msgpack.zst"), "wb") as f:
         f.write(msgpack.packb(payload))
 
@@ -145,7 +181,6 @@ def restore(
         meta = msgpack.unpackb(f.read())
     with open(os.path.join(path, f"shard_p{process_index}.msgpack.zst"), "rb") as f:
         payload = msgpack.unpackb(f.read())
-    dctx = zstandard.ZstdDecompressor()
     info = {m["path"]: m for m in meta["leaves"]}
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -158,7 +193,7 @@ def restore(
         if key not in info:
             raise KeyError(f"checkpoint missing leaf {key}")
         m = info[key]
-        arr = np.frombuffer(dctx.decompress(payload[key]), dtype=m["dtype"]).reshape(
+        arr = np.frombuffer(_decompress(payload[key]), dtype=m["dtype"]).reshape(
             m["shape"]
         )
         if sh is not None:

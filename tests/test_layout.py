@@ -1,0 +1,226 @@
+"""Layout-subsystem tests: every registered layout codec must round-trip
+through BOTH fixed-shape forms (packed blocks [B,T] and doc rows [N+1,L])
+against the numpy exact-scoring oracle, including the shapes the codecs
+historically mishandled — empty documents, single-element documents, and
+gaps wider than 16 bits (StreamVByte's 3–4-byte cases, which DotVByte
+cannot represent)."""
+
+import numpy as np
+import pytest
+
+from proptest import run_property, integers, sorted_unique_ints
+from repro.core import layout
+from repro.core.forward_index import ForwardIndex
+from repro.core.scoring import score_doc_rows, score_packed
+
+ALL_LAYOUTS = layout.available_layouts()
+WIDE_GAP_LAYOUTS = [n for n in ALL_LAYOUTS if n != "dotvbyte"]  # >16-bit gaps
+
+
+def _fwd_from_docs(docs, dim, value_format="f16"):
+    return ForwardIndex.from_docs(docs, dim, value_format=value_format)
+
+
+def _random_docs(rng, n_docs, dim, max_nnz, allow_empty=True):
+    docs = []
+    for _ in range(n_docs):
+        n = int(rng.integers(0 if allow_empty else 1, max_nnz + 1))
+        c = np.sort(rng.choice(dim, size=min(n, dim // 2), replace=False))
+        v = rng.gamma(2.0, 0.5, size=len(c)).astype(np.float32) + 0.05
+        docs.append((c.astype(np.uint32), v))
+    if all(len(c) == 0 for c, _ in docs):
+        docs[0] = (np.array([3], np.uint32), np.array([1.0], np.float32))
+    return docs
+
+
+def _query(rng, dim, nnz=32):
+    q = np.zeros(dim, dtype=np.float32)
+    qc = rng.choice(dim, size=min(nnz, dim), replace=False)
+    q[qc] = rng.gamma(2.0, 0.5, size=len(qc)) + 0.05
+    return q
+
+
+def _check_both_forms(fwd, codec, q, atol=2e-3):
+    want = fwd.exact_scores(q)
+    packed = layout.pack_blocks(fwd, codec=codec, block_size=128)
+    got_blocks = np.asarray(score_packed(q, packed))
+    np.testing.assert_allclose(got_blocks, want, atol=atol, rtol=1e-3)
+
+    rows = layout.pack_rows(fwd, codec=codec)
+    arrays = rows.arrays()
+    if "comps_rows" in arrays:
+        comps = arrays["comps_rows"]
+    else:
+        import jax.numpy as jnp
+
+        streams = {
+            k[: -len("_rows")]: v
+            for k, v in rows.payload.items()
+            if k.endswith("_rows")
+        }
+        gaps = layout.get_layout(codec).decode(streams, rows.l_max)
+        comps = jnp.cumsum(gaps, axis=1)  # row-first gap is absolute
+    got_rows = np.asarray(
+        score_doc_rows(
+            q, np.asarray(comps), arrays["vals_rows"], arrays["nnz_rows"],
+            float(fwd.value_format.scale),
+        )
+    )[: fwd.n_docs]
+    np.testing.assert_allclose(got_rows, want, atol=atol, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# property: block AND row scoring match the exact oracle, every codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ALL_LAYOUTS)
+def test_block_and_row_scoring_match_exact_property(codec):
+    dim = 4096
+
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        docs = _random_docs(rng, n_docs=12, dim=dim, max_nnz=200)
+        fwd = _fwd_from_docs(docs, dim)
+        _check_both_forms(fwd, codec, _query(rng, dim))
+
+    run_property(prop, integers(0, 1 << 30), n_cases=8, seed=13)
+
+
+@pytest.mark.parametrize("codec", ALL_LAYOUTS)
+def test_edge_docs_empty_and_single(codec):
+    """Empty docs score 0 through both forms; single-element docs carry
+    their absolute component through the gap transform."""
+    dim = 2048
+    docs = [
+        (np.zeros(0, np.uint32), np.zeros(0, np.float32)),  # empty
+        (np.array([0], np.uint32), np.array([1.5], np.float32)),  # component 0
+        (np.array([2047], np.uint32), np.array([2.0], np.float32)),  # max comp
+        (np.zeros(0, np.uint32), np.zeros(0, np.float32)),  # empty again
+        (np.array([7, 9], np.uint32), np.array([1.0, 1.0], np.float32)),
+    ]
+    fwd = _fwd_from_docs(docs, dim, value_format="f32")
+    q = np.ones(dim, dtype=np.float32)
+    _check_both_forms(fwd, codec, q, atol=1e-5)
+    assert fwd.exact_scores(q)[0] == 0.0  # the empty doc really scores 0
+
+
+@pytest.mark.parametrize("codec", WIDE_GAP_LAYOUTS)
+def test_gaps_beyond_16_bits(codec):
+    """StreamVByte's 3- and 4-byte branches (gap > 0xFFFF / > 0xFFFFFF):
+    exact through blocks and rows on a 2^25-dim space."""
+    dim = 1 << 25
+    docs = [
+        (np.array([5, 5 + 70_000, 5 + 70_000 + 20_000_000], np.uint32),
+         np.array([1.0, 2.0, 3.0], np.float32)),
+        (np.array([0xFFFF + 1], np.uint32), np.array([4.0], np.float32)),
+        (np.array([1, 2, 3], np.uint32), np.array([1.0, 1.0, 1.0], np.float32)),
+    ]
+    fwd = _fwd_from_docs(docs, dim, value_format="f32")
+    q = np.zeros(dim, dtype=np.float32)
+    for c, _ in docs:
+        q[c] += 1.0
+    _check_both_forms(fwd, codec, q, atol=1e-5)
+
+
+def test_dotvbyte_rejects_wide_gaps():
+    """DotVByte is 16-bit by construction (§2.2) — wide gaps must fail
+    loudly at pack time, not corrupt silently."""
+    dim = 1 << 20
+    fwd = _fwd_from_docs(
+        [(np.array([0, 0x10000], np.uint32), np.array([1.0, 1.0], np.float32))], dim
+    )
+    with pytest.raises(ValueError):
+        layout.pack_blocks(fwd, codec="dotvbyte", block_size=128)
+    with pytest.raises(ValueError):
+        layout.pack_rows(fwd, codec="dotvbyte")
+
+
+def test_unknown_codec_rejected():
+    fwd = _fwd_from_docs([(np.array([1], np.uint32), np.array([1.0], np.float32))], 16)
+    with pytest.raises(ValueError):
+        layout.pack_blocks(fwd, codec="zeta")  # bit-oriented: no device layout
+
+
+# ---------------------------------------------------------------------------
+# codec encoders round-trip at the gap-matrix level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["dotvbyte", "streamvbyte", "bitpack"])
+def test_gap_matrix_roundtrip(codec):
+    lc = layout.get_layout(codec)
+    hi = 0xFFFF if codec == "dotvbyte" else (1 << 28)
+
+    def prop(comps):
+        T = 64
+        n = min(len(comps), T)
+        gaps = np.zeros((1, T), dtype=np.uint32)
+        if n:
+            c = comps[:n].astype(np.int64)
+            gaps[0, 0] = c[0]
+            gaps[0, 1:n] = np.diff(c)
+        streams = lc.encode(gaps)
+        out = np.asarray(lc.decode(streams, T))
+        assert out.shape == (1, T)
+        assert np.array_equal(out.astype(np.uint32), gaps), codec
+
+    run_property(prop, sorted_unique_ints(64, 0, hi, min_n=0), n_cases=30, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# shared shard stacking
+# ---------------------------------------------------------------------------
+
+
+def test_pad_stack_pads_every_axis_to_max():
+    a = {"x": np.ones((2, 3), np.int32), "y": np.full((4,), 7, np.int8)}
+    b = {"x": np.ones((3, 2), np.int32), "y": np.full((1,), 7, np.int8)}
+    out = layout.pad_stack([a, b], pad_values={"x": -1})
+    assert out["x"].shape == (2, 3, 3) and out["y"].shape == (2, 4)
+    assert out["x"][0, 2, 0] == -1 and out["x"][1, 0, 2] == -1  # pad value
+    assert out["x"][1, :3, :2].sum() == 6  # payload intact
+    assert out["y"][1, 1] == 0  # default pad
+
+
+def test_pad_stack_rejects_mismatched_fields():
+    with pytest.raises(ValueError):
+        layout.pad_stack([{"x": np.zeros(1)}, {"z": np.zeros(1)}])
+
+
+def test_sharded_block_packing_matches_unsharded_scores():
+    """pack_blocks_sharded + per-shard local scoring == exact, for a
+    stream codec AND the decode-free layout."""
+    from repro.core.scoring import (
+        combine_block_scores,
+        components_from_gaps,
+        block_products,
+        decode_block_gaps,
+        dequantise_values,
+    )
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(11)
+    dim = 2048
+    docs = _random_docs(rng, 23, dim, 120, allow_empty=True)
+    fwd = _fwd_from_docs(docs, dim)
+    q = _query(rng, dim)
+    want = fwd.exact_scores(q)
+    for codec in ("streamvbyte", "uncompressed"):
+        arrays, docs_local = layout.pack_blocks_sharded(fwd, 4, codec=codec, block_size=128)
+        got = np.zeros(4 * docs_local, dtype=np.float32)
+        for s in range(4):
+            sub = {k: jnp.asarray(v[s]) for k, v in arrays.items()}
+            if codec == "uncompressed":
+                comps = sub["comps"]
+            else:
+                gaps = decode_block_gaps(codec, sub, 128)
+                comps = components_from_gaps(
+                    gaps, sub["seg"], sub["start_pos"], sub["start_abs"]
+                )
+            prod = block_products(
+                jnp.asarray(q), comps, dequantise_values(sub["vals"], 1.0), sub["seg"]
+            )
+            local = combine_block_scores(prod, sub["seg"], sub["doc_ids"], docs_local)
+            got[s * docs_local : (s + 1) * docs_local] = np.asarray(local)
+        np.testing.assert_allclose(got[: fwd.n_docs], want, atol=2e-3, rtol=1e-3)

@@ -65,7 +65,7 @@ def test_index_bytes_accounting(collection, index):
     assert unc["forward_components"] == 2 * collection.fwd.total_nnz
 
 
-@pytest.mark.parametrize("codec", ["uncompressed", "dotvbyte"])
+@pytest.mark.parametrize("codec", ["uncompressed", "dotvbyte", "streamvbyte"])
 def test_batched_engine_recall(collection, index, codec):
     eng = BatchedSeismic(index, EngineConfig(cut=12, block_budget=768, n_probe=96, k=10, codec=codec))
     Q = np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
@@ -84,8 +84,13 @@ def test_batched_engine_recall(collection, index, codec):
 
 
 def test_batched_engine_codec_parity(collection, index):
-    cfgs = [EngineConfig(codec=c) for c in ("uncompressed", "dotvbyte")]
+    """Components compression is lossless: every stream codec returns the
+    exact same top-k as the uncompressed rows."""
+    cfgs = [EngineConfig(codec=c) for c in ("uncompressed", "dotvbyte", "streamvbyte")]
     Q = np.stack([collection.query_dense(i) for i in range(4)])
     res = [BatchedSeismic(index, c).search_batch(Q) for c in cfgs]
-    assert np.array_equal(np.asarray(res[0][0]), np.asarray(res[1][0]))
-    np.testing.assert_allclose(np.asarray(res[0][1]), np.asarray(res[1][1]), rtol=1e-5)
+    for i in range(1, len(res)):
+        assert np.array_equal(np.asarray(res[0][0]), np.asarray(res[i][0]))
+        np.testing.assert_allclose(
+            np.asarray(res[0][1]), np.asarray(res[i][1]), rtol=1e-5
+        )
