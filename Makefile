@@ -4,12 +4,15 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test check bench bench-fast
+.PHONY: test check bench bench-fast docs-check
 
 test:            ## tier-1 suite (the CI gate)
 	$(PY) -m pytest -x -q
 
-check:           ## tier-1 suite + tiny Table-1/2 benchmark pass
+docs-check:      ## audit DESIGN/EXPERIMENTS § cross-references + README make targets
+	$(PY) tools/docs_check.py
+
+check: docs-check ## tier-1 suite + tiny Table-1/2/3 benchmark pass + docs audit
 	$(PY) -m benchmarks.run --quick
 
 bench:           ## full benchmark sweep (slow)

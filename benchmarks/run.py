@@ -6,7 +6,7 @@ extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py).
     PYTHONPATH=src python -m benchmarks.run --only table1
     PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke: tier-1
                                                        # pytest + tiny
-                                                       # Table-1/2 pass
+                                                       # Table-1/2/3 pass
 """
 
 from __future__ import annotations
@@ -22,8 +22,8 @@ from .common import emit
 
 def _quick_smoke() -> int:
     """One-command regression gate (``make check``): the tier-1 test
-    suite plus a miniature Table-1/Table-2 benchmark pass, so codec or
-    layout regressions surface even when they only bend a curve."""
+    suite plus a miniature Table-1/2/3 benchmark pass, so codec, layout
+    or engine regressions surface even when they only bend a curve."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
@@ -37,11 +37,12 @@ def _quick_smoke() -> int:
     if proc.returncode:
         return proc.returncode
 
-    from . import table1_codecs, table2_seismic
+    from . import table1_codecs, table2_seismic, table3_graph
 
-    print("# tiny table1/table2…", file=sys.stderr, flush=True)
+    print("# tiny table1/table2/table3…", file=sys.stderr, flush=True)
     rows = table1_codecs.run(n_docs=400, n_queries=2, rgb_iters=2)
     rows += table2_seismic.run(n_docs=400, n_queries=4)
+    rows += table3_graph.run(n_docs=400, n_queries=4)
     emit(rows)
     # a NaN latency means no sweep point reached the accuracy level —
     # the codec/accuracy regression class this gate exists to catch
@@ -58,9 +59,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="reduced collection sizes")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: tier-1 pytest + tiny table1/table2")
+                    help="CI smoke: tier-1 pytest + tiny table1/table2/table3")
     ap.add_argument("--only", default=None,
-                    choices=["table1", "table2", "kernel", "roofline"])
+                    choices=["table1", "table2", "table3", "kernel", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -75,15 +76,17 @@ def main() -> None:
         print(f"# running {name}…", file=sys.stderr, flush=True)
         rows.extend(fn())
 
-    from . import kernel_bench, roofline, table1_codecs, table2_seismic
+    from . import kernel_bench, roofline, table1_codecs, table2_seismic, table3_graph
 
     if args.fast:
         section("table1", lambda: table1_codecs.run(n_docs=1500, n_queries=2, rgb_iters=3))
         section("table2", lambda: table2_seismic.run(n_docs=1200, n_queries=6))
+        section("table3", lambda: table3_graph.run(n_docs=800, n_queries=6))
         section("kernel", lambda: kernel_bench.run(n_docs=800))
     else:
         section("table1", lambda: table1_codecs.run())
         section("table2", lambda: table2_seismic.run())
+        section("table3", lambda: table3_graph.run())
         section("kernel", lambda: kernel_bench.run())
     section("roofline", roofline.run)
 

@@ -4,7 +4,7 @@
   for SPLADE and LILSR statistics (paper Table 1 rows, both encoders);
 * gap-distribution histogram driving the codec behaviour;
 * cross-domain demo: the same codecs compress a GNN edge index (CSR
-  neighbour lists are d-gap sequences too — DESIGN.md §5) and recsys
+  neighbour lists are d-gap sequences too — DESIGN.md §6) and recsys
   multi-hot candidate feature lists (the retrieval_cand offline path).
 
 Run:  PYTHONPATH=src python examples/compression_analysis.py
@@ -49,7 +49,7 @@ def main() -> None:
         docs_rgb = [np.sort(pi[d]) for d in docs]
         codec_table(docs_rgb, f"{enc} (after RGB)")
 
-    # --- GNN edge index (DESIGN.md §5: gat-cora applicability) -----------
+    # --- GNN edge index (DESIGN.md §6: gat-cora applicability) -----------
     rng = np.random.default_rng(0)
     n_nodes = 4096
     adj = [np.sort(rng.choice(n_nodes, size=rng.integers(3, 40), replace=False)

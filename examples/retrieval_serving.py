@@ -1,12 +1,15 @@
 """End-to-end serving driver (deliverable b): serve a small collection
-with batched requests through the static TPU engine.
+with batched requests through the static TPU engines.
 
-Builds SPLADE + LILSR collections, constructs Seismic indexes, runs
-batched search with uncompressed vs DotVByte forward indexes, and
-reports recall / per-query latency / index bytes — the serving analogue
-of the paper's Table 2.
+Builds SPLADE + LILSR collections, constructs a Seismic index and an
+HNSW graph over the same forward index, runs batched search with every
+engine codec — uncompressed, DotVByte and StreamVByte rows — and
+reports recall / per-query latency / index bytes: the serving analogue
+of the paper's Table 2, plus the graph-vs-inverted-index comparison of
+EXPERIMENTS.md §Graph.
 
 Run:  PYTHONPATH=src python examples/retrieval_serving.py [--n-docs 8000]
+(the HNSW host build is a few ms per doc; use --no-hnsw to skip it)
 """
 
 import argparse
@@ -15,9 +18,26 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hnsw import HNSWIndex, HNSWParams
 from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
 from repro.data.synthetic import generate_collection, lilsr_config, splade_config
 from repro.serve.engine import BatchedSeismic, EngineConfig
+from repro.serve.graph_engine import BatchedHNSW, GraphConfig
+
+CODECS = ("uncompressed", "dotvbyte", "streamvbyte")
+
+
+def _serve(name, engine, Q, truth, col, k):
+    ids, _ = engine.search_batch(Q)  # warm-up / compile
+    t0 = time.perf_counter()
+    ids, _ = engine.search_batch(Q)
+    np.asarray(ids)
+    dt = (time.perf_counter() - t0) * 1e6 / Q.shape[0]
+    rec = np.mean([recall_at_k(truth[i], np.asarray(ids[i]))
+                   for i in range(Q.shape[0])])
+    comp = col.fwd.storage_bytes(engine.cfg.codec)["components"]
+    print(f"  {name:8s} {engine.cfg.codec:13s} recall@{k}={rec:.3f} "
+          f"{dt:8.0f} µs/query (CPU)  components={comp/2**20:6.2f} MiB")
 
 
 def main() -> None:
@@ -25,6 +45,8 @@ def main() -> None:
     ap.add_argument("--n-docs", type=int, default=6000)
     ap.add_argument("--n-queries", type=int, default=48)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--no-hnsw", action="store_true",
+                    help="skip the graph-engine section (faster)")
     args = ap.parse_args()
 
     for enc, cfg_fn in (("splade", splade_config), ("lilsr", lilsr_config)):
@@ -36,20 +58,20 @@ def main() -> None:
         truth = [exact_top_k(col.fwd, np.asarray(Q[i]), args.k)[0]
                  for i in range(args.n_queries)]
 
-        for codec in ("uncompressed", "dotvbyte"):
+        for codec in CODECS:
             engine = BatchedSeismic(
                 index, EngineConfig(cut=8, block_budget=512, n_probe=96, k=args.k,
                                     codec=codec))
-            ids, _ = engine.search_batch(Q)  # warm-up / compile
-            t0 = time.perf_counter()
-            ids, _ = engine.search_batch(Q)
-            np.asarray(ids)
-            dt = (time.perf_counter() - t0) * 1e6 / args.n_queries
-            rec = np.mean([recall_at_k(truth[i], np.asarray(ids[i]))
-                           for i in range(args.n_queries)])
-            comp = col.fwd.storage_bytes(codec)["components"]
-            print(f"  {codec:13s} recall@{args.k}={rec:.3f} "
-                  f"{dt:8.0f} µs/query (CPU)  components={comp/2**20:6.2f} MiB")
+            _serve("seismic", engine, Q, truth, col, args.k)
+
+        if args.no_hnsw:
+            continue
+        graph = HNSWIndex.build(col.fwd, HNSWParams(m=16, ef_construction=48))
+        for codec in CODECS:
+            engine = BatchedHNSW(
+                graph, GraphConfig(beam=96, iters=96, n_seeds=8, k=args.k,
+                                   codec=codec))
+            _serve("hnsw", engine, Q, truth, col, args.k)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """RetrievalArch — the paper's own workload as first-class configs.
 
-Two cells per config (extra rows beyond the assigned 40):
+Three cells per config (extra rows beyond the assigned 40):
 
 * ``scan_100q``  — Table 1's hot loop: decode+dot of EVERY document
   against a query batch through the DotVByte packed-block path (the
@@ -9,6 +9,9 @@ Two cells per config (extra rows beyond the assigned 40):
 * ``serve_4096q`` — the production two-phase batched Seismic search,
   index sharded over ``model`` (16 self-contained sub-indexes), queries
   sharded over ``data``, O(k) all-gather merge.
+* ``graph_4096q`` — the batched HNSW beam search (DESIGN.md §5) over
+  the same sharding layout: per-shard sub-graphs over ``model``,
+  queries over ``data``, O(k) all-gather merge.
 
 Array sizes derive from MsMarco statistics (8.84M passages; SPLADE
 119 nnz/doc, LILSR 387 nnz/doc — §3 of the paper).
@@ -41,6 +44,7 @@ __all__ = ["RetrievalArch", "RETRIEVAL_SHAPES"]
 RETRIEVAL_SHAPES = {
     "scan_100q": dict(kind="serve", n_queries=100),
     "serve_4096q": dict(kind="serve", n_queries=4096),
+    "graph_4096q": dict(kind="serve", n_queries=4096),
 }
 
 
@@ -54,6 +58,7 @@ class RetrievalArch(BaseArch):
     block_size: int = 512
     docs_per_block: int = 64
     l_max: int = 384  # per-doc row capacity (p100 nnz, 8-aligned)
+    graph_degree: int = 32  # HNSW base-layer degree (2·m, m=16)
     value_scale: float = 1.0
     codec: str = "dotvbyte"  # any core/layout.py stream codec
     family: str = "retrieval"
@@ -102,22 +107,37 @@ class RetrievalArch(BaseArch):
         return structs
 
     def model_flops(self, shape: str) -> float:
+        nq = RETRIEVAL_SHAPES[shape]["n_queries"]
         if shape == "scan_100q":
             # useful work: 2 flops per (query × nonzero)
-            return 2.0 * self.n_docs * self.doc_nnz * RETRIEVAL_SHAPES[shape]["n_queries"]
+            return 2.0 * self.n_docs * self.doc_nnz * nq
+        if shape == "graph_4096q":
+            gcfg = self._graph_cfg()
+            # one neighbour list scored per expanded node
+            per_q = (gcfg.iters * self.graph_degree + gcfg.n_seeds) * self.l_max * 2
+            return float(per_q) * nq
         cfg = self._engine_cfg()
-        nq = RETRIEVAL_SHAPES[shape]["n_queries"]
         per_q = cfg.block_budget * 64 * 2 + cfg.n_probe * 64 * self.l_max * 2
         return float(per_q) * nq
 
-    def _engine_cfg(self) -> EngineConfig:
+    def _row_codec(self, shape: str) -> str:
         if self.codec not in ("uncompressed", "dotvbyte", "streamvbyte"):
             # the scan cell takes any layout codec (bitpack included);
-            # the two-phase serve cell needs a row-stream codec
+            # the candidate-rescoring cells need a row-stream codec
             raise ValueError(
-                f"serve_4096q needs an engine row codec, got {self.codec!r}"
+                f"{shape} needs an engine row codec, got {self.codec!r}"
             )
-        return EngineConfig(cut=8, block_budget=512, n_probe=64, k=10, codec=self.codec)
+        return self.codec
+
+    def _engine_cfg(self) -> EngineConfig:
+        return EngineConfig(cut=8, block_budget=512, n_probe=64, k=10,
+                            codec=self._row_codec("serve_4096q"))
+
+    def _graph_cfg(self):
+        from repro.serve.graph_engine import GraphConfig
+
+        return GraphConfig(beam=64, iters=64, n_seeds=8, k=10,
+                           codec=self._row_codec("graph_4096q"))
 
     # ------------------------------------------------------------------
     def build_cell(self, shape: str, mesh: Mesh) -> Cell:
@@ -197,6 +217,44 @@ class RetrievalArch(BaseArch):
                 self.model_flops(shape),
                 {"n_docs": self.n_docs, "payload_bytes": self._payload_bytes(),
                  "opt": self.opt},
+            )
+
+        if shape == "graph_4096q":
+            # sharded HNSW beam search (DESIGN.md §5): per-shard
+            # sub-graphs over ``model``, same row arrays as serve_4096q
+            from repro.serve.graph_engine import graph_array_specs
+            from repro.serve.graph_engine import make_sharded_search as make_graph_search
+
+            gcfg = self._graph_cfg()
+            n_shards = mesh.shape["model"]
+            n_docs_local = self.n_docs // n_shards + 1
+            arr = graph_array_specs(
+                gcfg,
+                n_docs=n_docs_local,
+                degree=self.graph_degree,
+                l_max=self.l_max,
+                d_max=((self.l_max + self.l_max // 2) // 128 + 1) * 128,
+            )
+            arr_stacked = {
+                k: jax.ShapeDtypeStruct((n_shards, *v.shape), v.dtype)
+                for k, v in arr.items()
+            }
+            idmap = jax.ShapeDtypeStruct((n_shards, n_docs_local + 1), jnp.int32)
+            fn = make_graph_search(
+                mesh, gcfg, n_docs_local, self.n_docs, self.value_scale,
+                index_axis="model", query_axes=da,
+            )
+            structs = (arr_stacked, idmap, jax.ShapeDtypeStruct((nq, self.dim), jnp.float32))
+            in_sh = (
+                shd.to_shardings(mesh, {k: P("model") for k in arr_stacked}),
+                shd.to_shardings(mesh, P("model")),
+                shd.to_shardings(mesh, P(da, None)),
+            )
+            out_sh = shd.to_shardings(mesh, (P(da, None), P(da, None)))
+            return Cell(
+                self.name, shape, "serve", fn, structs, in_sh, out_sh,
+                self.model_flops(shape),
+                {"n_docs": self.n_docs, "n_shards": n_shards},
             )
 
         # serve_4096q — sharded two-phase search

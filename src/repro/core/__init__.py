@@ -1,5 +1,6 @@
 """Core: the paper's contribution — forward-index compression for
-learned sparse retrieval, plus the Seismic ANNS engine it plugs into."""
+learned sparse retrieval, plus the two ANNS engines it plugs into
+(inverted-index Seismic and graph-based HNSW)."""
 
 from .forward_index import (
     VALUE_FORMATS,
@@ -7,10 +8,13 @@ from .forward_index import (
     PackedBlocks,
     pack_forward_index,
 )
+from .hnsw import HNSWIndex, HNSWParams
 
 __all__ = [
     "VALUE_FORMATS",
     "ForwardIndex",
+    "HNSWIndex",
+    "HNSWParams",
     "PackedBlocks",
     "pack_forward_index",
 ]

@@ -1,10 +1,15 @@
-"""Serving launcher: build a Seismic index over a synthetic MsMarco-like
-collection and serve batched queries through the static TPU engine.
+"""Serving launcher: build an ANNS index over a synthetic MsMarco-like
+collection and serve batched queries through the static TPU engines.
 
-``python -m repro.launch.serve --encoder splade --codec dotvbyte
---n-docs 20000 --batch 64`` builds the collection + index, runs batched
-searches, and reports recall@10 + latency; with ``--compare-codecs`` it
+``python -m repro.launch.serve --engine seismic --codec dotvbyte
+--n-docs 20000 --n-queries 64`` builds the collection + index, runs
+batched searches, and reports recall@10 + latency; ``--engine hnsw`` serves the
+same collection through the graph engine (DESIGN.md §5) instead, and
+``--engine both`` compares them head to head. ``--compare-codecs``
 sweeps every component codec (the quickstart of the serving stack).
+
+The HNSW host build is a few ms per document — prefer ``--n-docs``
+in the low thousands when sweeping the graph engine interactively.
 """
 
 from __future__ import annotations
@@ -19,9 +24,21 @@ import numpy as np
 ENGINE_CODECS = ("uncompressed", "dotvbyte", "streamvbyte")
 
 
+def _report(name, codec, k, recs, dt_us, col, extra=""):
+    comp_bytes = col.fwd.storage_bytes(codec)["components"]
+    raw_bytes = col.fwd.storage_bytes("uncompressed")["components"]
+    print(
+        f"{name:8s} codec={codec:13s} recall@{k}={np.mean(recs):.3f} "
+        f"latency={dt_us:7.0f}µs/q (CPU) "
+        f"components={comp_bytes/2**20:.1f}MiB ({8*comp_bytes/col.fwd.total_nnz:.1f} "
+        f"bits/comp vs 16.0 raw, {100*(1-comp_bytes/raw_bytes):.0f}% saved){extra}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--encoder", choices=["splade", "lilsr"], default="splade")
+    ap.add_argument("--engine", choices=["seismic", "hnsw", "both"], default="seismic")
     ap.add_argument("--codec", default="dotvbyte", choices=list(ENGINE_CODECS))
     ap.add_argument("--compare-codecs", action="store_true",
                     help="sweep every engine codec over the same index")
@@ -30,46 +47,61 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--cut", type=int, default=8)
     ap.add_argument("--n-probe", type=int, default=64)
+    ap.add_argument("--beam", type=int, default=64, help="HNSW beam width (static ef)")
+    ap.add_argument("--iters", type=int, default=64, help="HNSW nodes expanded per query")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.core.hnsw import HNSWIndex, HNSWParams
     from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
     from repro.data.synthetic import generate_collection, lilsr_config, splade_config
     from repro.serve.engine import BatchedSeismic, EngineConfig
+    from repro.serve.graph_engine import BatchedHNSW, GraphConfig
 
     cfg_fn = splade_config if args.encoder == "splade" else lilsr_config
     print(f"generating {args.n_docs}-doc synthetic {args.encoder} collection…")
     col = generate_collection(cfg_fn(args.n_docs, args.n_queries, args.seed),
                               value_format="f16")
-    print(f"building Seismic index… (nnz/doc={col.fwd.total_nnz/col.fwd.n_docs:.0f})")
-    t0 = time.time()
-    index = SeismicIndex.build(col.fwd, SeismicParams(n_postings=2000, block_size=64))
-    print(f"  {index.n_blocks} blocks in {time.time()-t0:.1f}s")
+    print(f"(nnz/doc={col.fwd.total_nnz/col.fwd.n_docs:.0f})")
+
+    engines = ("seismic", "hnsw") if args.engine == "both" else (args.engine,)
+    indexes = {}
+    if "seismic" in engines:
+        t0 = time.time()
+        indexes["seismic"] = SeismicIndex.build(
+            col.fwd, SeismicParams(n_postings=2000, block_size=64)
+        )
+        print(f"Seismic: {indexes['seismic'].n_blocks} blocks in {time.time()-t0:.1f}s")
+    if "hnsw" in engines:
+        t0 = time.time()
+        indexes["hnsw"] = HNSWIndex.build(col.fwd, HNSWParams(m=16, ef_construction=48))
+        print(f"HNSW: {indexes['hnsw'].n_edges} edges in {time.time()-t0:.1f}s")
 
     Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
     truth = [exact_top_k(col.fwd, Q[i], args.k)[0] for i in range(col.n_queries)]
     codecs = ENGINE_CODECS if args.compare_codecs else (args.codec,)
-    for codec in codecs:
-        engine = BatchedSeismic(
-            index,
-            EngineConfig(cut=args.cut, block_budget=512, n_probe=args.n_probe,
-                         k=args.k, codec=codec),
-        )
-        ids, scores = engine.search_batch(jnp.asarray(Q))  # compile
-        t0 = time.time()
-        ids, scores = engine.search_batch(jnp.asarray(Q))
-        ids = np.asarray(ids)
-        dt = time.time() - t0
+    for name in engines:
+        for codec in codecs:
+            if name == "seismic":
+                engine = BatchedSeismic(
+                    indexes[name],
+                    EngineConfig(cut=args.cut, block_budget=512, n_probe=args.n_probe,
+                                 k=args.k, codec=codec),
+                )
+            else:
+                engine = BatchedHNSW(
+                    indexes[name],
+                    GraphConfig(beam=args.beam, iters=args.iters, n_seeds=8,
+                                k=args.k, codec=codec),
+                )
+            ids, scores = engine.search_batch(jnp.asarray(Q))  # compile
+            t0 = time.time()
+            ids, scores = engine.search_batch(jnp.asarray(Q))
+            ids = np.asarray(ids)
+            dt = time.time() - t0
 
-        recs = [recall_at_k(truth[i], ids[i]) for i in range(col.n_queries)]
-        comp_bytes = col.fwd.storage_bytes(codec)["components"]
-        raw_bytes = col.fwd.storage_bytes("uncompressed")["components"]
-        print(
-            f"codec={codec:13s} recall@{args.k}={np.mean(recs):.3f} "
-            f"latency={1e6*dt/col.n_queries:7.0f}µs/q (CPU) "
-            f"components={comp_bytes/2**20:.1f}MiB ({8*comp_bytes/col.fwd.total_nnz:.1f} "
-            f"bits/comp vs 16.0 raw, {100*(1-comp_bytes/raw_bytes):.0f}% saved)"
-        )
+            recs = [recall_at_k(truth[i], ids[i]) for i in range(col.n_queries)]
+            _report(name, codec, args.k, recs, 1e6 * dt / col.n_queries, col)
 
 
 if __name__ == "__main__":

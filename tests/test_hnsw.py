@@ -1,0 +1,135 @@
+"""HNSW host reference + batched graph engine tests (DESIGN.md §5).
+
+Covers the ISSUE-2 acceptance criteria: recall parity vs ``exact_top_k``
+(recall@10 ≥ 0.9), codec invariance (identical top-k ids through every
+registered row codec), and build determinism under a fixed seed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hnsw import HNSWIndex, HNSWParams
+from repro.core.seismic import exact_top_k, recall_at_k
+from repro.data.synthetic import SyntheticConfig, generate_collection
+from repro.serve.graph_engine import BatchedHNSW, GraphConfig
+
+PARAMS = HNSWParams(m=16, ef_construction=48, seed=0)
+
+
+@pytest.fixture(scope="module")
+def collection():
+    cfg = SyntheticConfig(
+        name="test", dim=2048, n_docs=600, n_queries=10,
+        doc_nnz_mean=60.0, query_nnz_mean=16.0, seed=0,
+    )
+    return generate_collection(cfg, value_format="f32")
+
+
+@pytest.fixture(scope="module")
+def index(collection):
+    return HNSWIndex.build(collection.fwd, PARAMS)
+
+
+def test_reference_recall(collection, index):
+    recs = []
+    for i in range(collection.n_queries):
+        q = collection.query_dense(i)
+        true_ids, _ = exact_top_k(collection.fwd, q, 10)
+        got_ids, got_scores = index.search(q, k=10, ef=64)
+        recs.append(recall_at_k(true_ids, got_ids))
+        # returned scores are the exact inner products
+        want = collection.fwd.exact_scores(q)
+        np.testing.assert_allclose(got_scores, want[got_ids], rtol=1e-5, atol=1e-5)
+    assert np.mean(recs) >= 0.9, np.mean(recs)
+
+
+def test_reference_codec_timed_parity(collection, index):
+    """Decoding candidates through a host codec changes timing, never
+    results (components compression is lossless)."""
+    index.prepare_codec("streamvbyte")
+    q = collection.query_dense(0)
+    i0, s0 = index.search(q, 10, ef=64, codec="uncompressed")
+    i1, s1 = index.search(q, 10, ef=64, codec="streamvbyte")
+    assert np.array_equal(i0, i1)
+    np.testing.assert_allclose(s0, s1, rtol=1e-6)
+
+
+def test_graph_degree_bounds(collection, index):
+    for layer, adj in enumerate(index.graph):
+        deg = index.params.degree(layer)
+        for node, nbrs in adj.items():
+            assert len(nbrs) <= deg
+            assert node not in nbrs
+            assert int(index.levels[node]) >= layer
+
+
+@pytest.mark.parametrize("codec", ["uncompressed", "dotvbyte", "streamvbyte"])
+def test_batched_engine_recall(collection, index, codec):
+    eng = BatchedHNSW(index, GraphConfig(beam=64, iters=64, n_seeds=8, k=10, codec=codec))
+    Q = np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
+    ids, scores = eng.search_batch(Q)
+    recs = []
+    for i in range(collection.n_queries):
+        true_ids, _ = exact_top_k(collection.fwd, Q[i], 10)
+        recs.append(recall_at_k(true_ids, np.asarray(ids[i])))
+    assert np.mean(recs) >= 0.9, np.mean(recs)
+    # scores of returned docs are the exact inner products
+    for i in range(3):
+        want = collection.fwd.exact_scores(Q[i])
+        got = np.asarray(scores[i])
+        ok = np.asarray(ids[i]) < collection.fwd.n_docs
+        np.testing.assert_allclose(
+            got[ok], want[np.asarray(ids[i])[ok]], rtol=1e-3, atol=1e-3
+        )
+
+
+def test_batched_engine_codec_invariance(collection, index):
+    """The graph path returns the exact same top-k ids whichever row
+    codec decodes the candidates — the paper's claim on algorithm #2."""
+    Q = np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
+    res = [
+        BatchedHNSW(index, GraphConfig(beam=64, iters=64, n_seeds=8, k=10, codec=c))
+        .search_batch(Q)
+        for c in ("uncompressed", "dotvbyte", "streamvbyte")
+    ]
+    for i in range(1, len(res)):
+        assert np.array_equal(np.asarray(res[0][0]), np.asarray(res[i][0]))
+        np.testing.assert_allclose(
+            np.asarray(res[0][1]), np.asarray(res[i][1]), rtol=1e-5
+        )
+
+
+def test_build_determinism(collection, index):
+    again = HNSWIndex.build(collection.fwd, PARAMS)
+    assert again.entry == index.entry
+    assert again.max_level == index.max_level
+    assert np.array_equal(again.levels, index.levels)
+    assert len(again.graph) == len(index.graph)
+    for layer in range(len(index.graph)):
+        assert again.graph[layer] == index.graph[layer]
+    for layer in range(len(index.graph)):
+        assert np.array_equal(again.adjacency(layer), index.adjacency(layer))
+
+
+def test_index_bytes_accounting(collection, index):
+    sizes = index.index_bytes("streamvbyte")
+    unc = index.index_bytes("uncompressed")
+    assert sizes["forward_components"] < unc["forward_components"]
+    assert sizes["graph"] == unc["graph"] == 4 * index.n_edges + index.levels.nbytes
+    assert sizes["total"] < unc["total"]
+
+
+def test_empty_and_tiny_index():
+    from repro.core.forward_index import ForwardIndex
+
+    fwd = ForwardIndex.from_docs(
+        [(np.array([3, 7], np.uint32), np.array([1.0, 2.0], np.float32))], dim=16
+    )
+    idx = HNSWIndex.build(fwd, HNSWParams(m=4, ef_construction=8))
+    q = np.zeros(16, np.float32)
+    q[7] = 1.0
+    ids, scores = idx.search(q, k=1)
+    assert ids.tolist() == [0] and scores[0] == pytest.approx(2.0)
+    eng = BatchedHNSW(idx, GraphConfig(beam=8, iters=4, n_seeds=2, k=1))
+    ids, scores = eng.search_batch(q[None, :])
+    assert np.asarray(ids)[0, 0] == 0

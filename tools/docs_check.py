@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Docs cross-reference gate (``make docs-check``).
+
+Verifies, with zero third-party deps:
+
+1. every ``DESIGN.md §N`` / ``EXPERIMENTS.md §X`` citation in source
+   docstrings and the markdown docs resolves to a real heading. A §
+   token is checked when ``DESIGN.md`` or ``EXPERIMENTS.md`` appears
+   within a few lines of it (citations wrap across docstring lines);
+   it must then exist in the mentioned doc's headings — or, for a bare
+   token merely sharing the line window with a doc name (e.g.
+   "DESIGN.md §4 / §Perf"), in the union of both docs' headings.
+2. every ``make <target>`` named inside README.md code fences exists in
+   the Makefile.
+3. the documentation spine exists (README.md, DESIGN.md,
+   EXPERIMENTS.md).
+
+Exit status is the number of dangling references (0 = pass).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_NAMES = ("DESIGN.md", "EXPERIMENTS.md")
+#: meta-placeholders used when *talking about* the citation convention
+PLACEHOLDER_TOKENS = {"N", "X"}
+#: chars of context on either side of a § token searched for a doc name
+WINDOW = 90
+
+SECTION_RE = re.compile(r"§([A-Za-z0-9][A-Za-z0-9_-]*)")
+HEADING_RE = re.compile(r"^#+\s*§([A-Za-z0-9][A-Za-z0-9_-]*)", re.M)
+FENCE_RE = re.compile(r"```.*?```", re.S)
+MAKE_RE = re.compile(r"\bmake\s+([a-z][\w-]*)")
+TARGET_RE = re.compile(r"^([a-z][\w-]*):", re.M)
+
+
+def headings(doc: pathlib.Path) -> set[str]:
+    return set(HEADING_RE.findall(doc.read_text(encoding="utf-8")))
+
+
+def scan_files() -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for sub in ("src", "benchmarks", "examples", "tests", "tools"):
+        files += sorted((ROOT / sub).rglob("*.py"))
+    files += [ROOT / n for n in ("README.md", "DESIGN.md", "EXPERIMENTS.md")]
+    return [f for f in files if f.is_file()]
+
+
+def check_sections(ids: dict[str, set[str]]) -> list[str]:
+    errors = []
+    union = set().union(*ids.values())
+    for path in scan_files():
+        text = path.read_text(encoding="utf-8")
+        for m in SECTION_RE.finditer(text):
+            tok = m.group(1)
+            if tok in PLACEHOLDER_TOKENS:
+                continue
+            window = text[max(0, m.start() - WINDOW): m.end() + WINDOW]
+            mentioned = [d for d in DOC_NAMES if d in window]
+            if not mentioned:
+                continue  # bare §token with no doc attribution — skip
+            # adjacent form "<DOC> §tok" is strict; a bare token that
+            # merely shares the window with a doc name may resolve in
+            # either doc ("DESIGN.md §4 / §Perf" cites both)
+            before = text[max(0, m.start() - 20): m.start()]
+            strict = [d for d in DOC_NAMES if re.search(re.escape(d) + r"[\s:]*$", before)]
+            ok_in = ids[strict[0]] if strict else union
+            if tok not in ok_in:
+                line = text.count("\n", 0, m.start()) + 1
+                owner = strict[0] if strict else "/".join(mentioned)
+                errors.append(
+                    f"{path.relative_to(ROOT)}:{line}: §{tok} not a heading of {owner}"
+                )
+    return errors
+
+
+def check_make_targets() -> list[str]:
+    readme = (ROOT / "README.md").read_text(encoding="utf-8")
+    makefile = (ROOT / "Makefile").read_text(encoding="utf-8")
+    targets = set(TARGET_RE.findall(makefile))
+    errors = []
+    for fence in FENCE_RE.findall(readme):
+        for t in MAKE_RE.findall(fence):
+            if t not in targets:
+                errors.append(f"README.md: `make {t}` is not a Makefile target")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for name in ("README.md", *DOC_NAMES):
+        if not (ROOT / name).is_file():
+            errors.append(f"{name} is missing")
+    if errors:
+        print("\n".join(errors))
+        return len(errors)
+    ids = {d: headings(ROOT / d) for d in DOC_NAMES}
+    errors += check_sections(ids)
+    errors += check_make_targets()
+    if errors:
+        print("\n".join(errors))
+        print(f"docs-check: {len(errors)} dangling cross-reference(s)")
+    else:
+        n = sum(len(v) for v in ids.values())
+        print(f"docs-check OK ({n} headings, {len(scan_files())} files scanned)")
+    return len(errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
