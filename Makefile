@@ -4,7 +4,10 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test check bench bench-fast docs-check
+ROUNDTRIP_DIR ?= /tmp/repro-serve-roundtrip
+ROUNDTRIP_ARGS = --engine all --compare-codecs --n-docs 400 --n-queries 8 --seed 0
+
+.PHONY: test check bench bench-fast docs-check serve-roundtrip clean
 
 test:            ## tier-1 suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -12,7 +15,13 @@ test:            ## tier-1 suite (the CI gate)
 docs-check:      ## audit DESIGN/EXPERIMENTS § cross-references + README make targets
 	$(PY) tools/docs_check.py
 
-check: docs-check ## tier-1 suite + tiny Table-1/2/3 benchmark pass + docs audit
+serve-roundtrip: ## artifact lifecycle smoke: build→save, then load→search in a fresh process (byte-identical top-k, every engine×codec)
+	rm -rf $(ROUNDTRIP_DIR)
+	$(PY) -m repro.launch.serve $(ROUNDTRIP_ARGS) --save-index $(ROUNDTRIP_DIR)
+	$(PY) -m repro.launch.serve $(ROUNDTRIP_ARGS) --load-index $(ROUNDTRIP_DIR)
+	rm -rf $(ROUNDTRIP_DIR)
+
+check: docs-check serve-roundtrip ## tier-1 suite + tiny Table-1/2/3 benchmark pass + docs audit + artifact smoke
 	$(PY) -m benchmarks.run --quick
 
 bench:           ## full benchmark sweep (slow)
@@ -20,3 +29,8 @@ bench:           ## full benchmark sweep (slow)
 
 bench-fast:      ## reduced-size benchmark sweep
 	$(PY) -m benchmarks.run --fast
+
+clean:           ## remove stray bytecode + tool caches (they pollute find/grep)
+	find . -type d -name __pycache__ -prune -exec rm -rf {} +
+	find . -type f \( -name '*.pyc' -o -name '*.pyo' \) -delete
+	rm -rf .pytest_cache .ruff_cache .mypy_cache

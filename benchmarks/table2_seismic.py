@@ -20,13 +20,15 @@ import time
 
 import numpy as np
 
+from repro.core.layout import available_layouts
 from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
 from repro.data.synthetic import generate_collection, lilsr_config, splade_config
 
 from .common import Row, timeit_us
 
 CODECS = ["uncompressed", "zeta", "streamvbyte", "dotvbyte"]
-ENGINE_CODECS = ["uncompressed", "dotvbyte", "streamvbyte"]  # TPU serving path
+#: TPU serving path — every codec registered in core/layout.py serves
+ENGINE_CODECS = available_layouts()
 ACCURACY_LEVELS = (0.90, 0.95)
 SWEEP = [(0.8, 4), (0.9, 8), (1.0, 12)]  # (heap_factor, cut)
 
@@ -51,7 +53,8 @@ def run_engine(
     n_docs: int = 3000, n_queries: int = 10, *, col=None, index=None, truth=None
 ) -> list[Row]:
     """Batched static-shape engine latency per codec (decode inside the
-    measured jit'd search, codecs swapped through core/layout.py).
+    measured jit'd search, codecs swapped through core/layout.py and
+    served through the unified ``repro.serve.api`` Retriever).
 
     ``run()`` passes its already-built splade/f16 collection+index+truth
     so the engine section costs no second index build.
@@ -60,7 +63,7 @@ def run_engine(
     latency ordering uncompressed ≤ dotvbyte ≤ streamvbyte on CPU-XLA."""
     import jax.numpy as jnp
 
-    from repro.serve.engine import BatchedSeismic, EngineConfig
+    from repro.serve.api import Retriever, RetrieverConfig
 
     rows: list[Row] = []
     if col is None:
@@ -72,13 +75,15 @@ def run_engine(
     if truth is None:
         truth = [exact_top_k(col.fwd, col.query_dense(i), 10)[0] for i in range(n_queries)]
     for codec in ENGINE_CODECS:
-        eng = BatchedSeismic(
-            index, EngineConfig(cut=8, block_budget=512, n_probe=64, k=10, codec=codec)
+        eng = Retriever.from_host_index(
+            index,
+            RetrieverConfig(engine="seismic", codec=codec, k=10,
+                            params=dict(cut=8, block_budget=512, n_probe=64)),
         )
-        ids, _ = eng.search_batch(Q)  # compile + correctness sample
+        ids, _ = eng.search(Q)  # compile + correctness sample
         rec = float(np.mean([recall_at_k(truth[i], np.asarray(ids[i]))
                              for i in range(n_queries)]))
-        us = timeit_us(lambda: eng.search_batch(Q)[0].block_until_ready()) / n_queries
+        us = timeit_us(lambda: eng.search(Q)[0].block_until_ready()) / n_queries
         comp_bytes = col.fwd.storage_bytes(codec)["components"]
         rows.append(
             Row(

@@ -23,19 +23,20 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.hnsw import HNSWIndex, HNSWParams
+from repro.core.layout import available_layouts
 from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
 from repro.data.synthetic import generate_collection, splade_config
 
 from .common import Row, timeit_us
 
-ENGINE_CODECS = ["uncompressed", "dotvbyte", "streamvbyte"]
+#: every codec registered in core/layout.py serves both engines
+ENGINE_CODECS = available_layouts()
 
 
 def run(n_docs: int = 2000, n_queries: int = 8, *, col=None) -> list[Row]:
     import jax.numpy as jnp
 
-    from repro.serve.engine import BatchedSeismic, EngineConfig
-    from repro.serve.graph_engine import BatchedHNSW, GraphConfig
+    from repro.serve.api import Retriever, RetrieverConfig
 
     if col is None:
         col = generate_collection(splade_config(n_docs, n_queries, seed=0),
@@ -53,24 +54,27 @@ def run(n_docs: int = 2000, n_queries: int = 8, *, col=None) -> list[Row]:
     for codec in ENGINE_CODECS:
         engines = {
             "seismic": (
-                BatchedSeismic(
+                Retriever.from_host_index(
                     seismic,
-                    EngineConfig(cut=8, block_budget=512, n_probe=64, k=10, codec=codec),
+                    RetrieverConfig(engine="seismic", codec=codec, k=10,
+                                    params=dict(cut=8, block_budget=512, n_probe=64)),
                 ),
                 seismic.index_bytes(codec)["total"],
             ),
             "hnsw": (
-                BatchedHNSW(
-                    hnsw, GraphConfig(beam=64, iters=64, n_seeds=8, k=10, codec=codec)
+                Retriever.from_host_index(
+                    hnsw,
+                    RetrieverConfig(engine="hnsw", codec=codec, k=10,
+                                    params=dict(beam=64, iters=64, n_seeds=8)),
                 ),
                 hnsw.index_bytes(codec)["total"],
             ),
         }
         for name, (eng, index_bytes) in engines.items():
-            ids, _ = eng.search_batch(Q)  # compile + correctness sample
+            ids, _ = eng.search(Q)  # compile + correctness sample
             rec = float(np.mean([recall_at_k(truth[i], np.asarray(ids[i]))
                                  for i in range(n_queries)]))
-            us = timeit_us(lambda: eng.search_batch(Q)[0].block_until_ready()) / n_queries
+            us = timeit_us(lambda: eng.search(Q)[0].block_until_ready()) / n_queries
             comp_bytes = col.fwd.storage_bytes(codec)["components"]
             rows.append(
                 Row(

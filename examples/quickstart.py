@@ -4,18 +4,23 @@
 2. build the forward index; compress components with every codec and
    compare bits/component (Table 1's size axis);
 3. apply RGB re-ordering and show the compression improvement;
-4. build a Seismic index; search with DotVByte-compressed rescoring and
-   verify recall@10 against exact search.
+4. serve through the unified Retriever API (DESIGN.md §7): build a
+   DotVByte-compressed Seismic retriever, verify recall@10 against
+   exact search, then save the index artifact and reopen it —
+   build/serve split, byte-identical top-k.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+
+import tempfile
 
 import numpy as np
 
 from repro.core.codecs import available_codecs, get_codec
 from repro.core.rgb import apply_permutation_dense, recursive_graph_bisection
-from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
+from repro.core.seismic import exact_top_k, recall_at_k
 from repro.data.synthetic import generate_collection, splade_config
+from repro.serve.api import Retriever, RetrieverConfig, open_retriever
 
 
 def main() -> None:
@@ -42,24 +47,32 @@ def main() -> None:
         print(f"  {name:13s} {b0:5.2f} → {b1:5.2f} bits/component "
               f"({100*(1-b1/b0):+.0f}%)")
 
-    print("\n=== 4. Seismic + compressed forward index (paper §3) ===")
-    index = SeismicIndex.build(fwd, SeismicParams(n_postings=1000, block_size=32))
-    index.prepare_codec("dotvbyte")
-    recalls = []
-    for i in range(col.n_queries):
-        q = col.query_dense(i)
-        true_ids, _ = exact_top_k(fwd, q, 10)
-        got_ids, _ = index.search(q, k=10, heap_factor=0.9, cut=8, codec="dotvbyte")
-        recalls.append(recall_at_k(true_ids, got_ids))
-    sizes_c = index.index_bytes("dotvbyte")
-    sizes_u = index.index_bytes("uncompressed")
+    print("\n=== 4. serve + index artifact (paper §3, DESIGN.md §7) ===")
+    retriever = Retriever.build(
+        fwd,
+        RetrieverConfig(engine="seismic", codec="dotvbyte", k=10,
+                        params=dict(n_postings=1000, block_size=32, cut=8)),
+    )
+    Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
+    ids, _ = retriever.search(Q)
+    recalls = [recall_at_k(exact_top_k(fwd, Q[i], 10)[0], np.asarray(ids[i]))
+               for i in range(col.n_queries)]
     print(f"  recall@10 = {np.mean(recalls):.3f} with DotVByte rescoring")
-    print(f"  forward-index components: {sizes_u['forward_components']/2**20:.2f} MiB → "
-          f"{sizes_c['forward_components']/2**20:.2f} MiB "
-          f"({100*(1-sizes_c['forward_components']/sizes_u['forward_components']):.0f}% saved)")
-    print(f"  total index: {sizes_u['total']/2**20:.1f} → {sizes_c['total']/2**20:.1f} MiB "
-          f"(summaries/inverted dominate at this toy scale; at MsMarco scale "
-          f"the forward index dominates, as in the paper's Table 2)")
+    comp_c = fwd.storage_bytes("dotvbyte")["components"]
+    comp_u = fwd.storage_bytes("uncompressed")["components"]
+    print(f"  forward-index components: {comp_u/2**20:.2f} MiB → "
+          f"{comp_c/2**20:.2f} MiB ({100*(1-comp_c/comp_u):.0f}% saved)")
+
+    # build/serve split: save the packed arrays + manifest, reopen in a
+    # (conceptually) fresh serving process — no re-encoding, same top-k
+    with tempfile.TemporaryDirectory() as tmp:
+        art = retriever.save(f"{tmp}/msmarco-mini")
+        nbytes = sum(f.stat().st_size for f in art.iterdir())
+        reopened = open_retriever(art)
+        ids2, _ = reopened.search(Q)
+        same = np.array_equal(np.asarray(ids), np.asarray(ids2))
+        print(f"  artifact: {nbytes/2**20:.2f} MiB on disk "
+              f"(manifest + packed npz), reopened top-k identical: {same}")
 
 
 if __name__ == "__main__":

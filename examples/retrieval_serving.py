@@ -1,12 +1,12 @@
 """End-to-end serving driver (deliverable b): serve a small collection
-with batched requests through the static TPU engines.
+with batched requests through the unified ``repro.serve.api`` surface.
 
 Builds SPLADE + LILSR collections, constructs a Seismic index and an
 HNSW graph over the same forward index, runs batched search with every
-engine codec — uncompressed, DotVByte and StreamVByte rows — and
-reports recall / per-query latency / index bytes: the serving analogue
-of the paper's Table 2, plus the graph-vs-inverted-index comparison of
-EXPERIMENTS.md §Graph.
+codec registered in ``core/layout.py`` — uncompressed, DotVByte,
+StreamVByte and bitpack rows — and reports recall / per-query latency /
+index bytes: the serving analogue of the paper's Table 2, plus the
+graph-vs-inverted-index comparison of EXPERIMENTS.md §Graph.
 
 Run:  PYTHONPATH=src python examples/retrieval_serving.py [--n-docs 8000]
 (the HNSW host build is a few ms per doc; use --no-hnsw to skip it)
@@ -19,24 +19,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hnsw import HNSWIndex, HNSWParams
+from repro.core.layout import available_layouts
 from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
 from repro.data.synthetic import generate_collection, lilsr_config, splade_config
-from repro.serve.engine import BatchedSeismic, EngineConfig
-from repro.serve.graph_engine import BatchedHNSW, GraphConfig
+from repro.serve.api import Retriever, RetrieverConfig
 
-CODECS = ("uncompressed", "dotvbyte", "streamvbyte")
+CODECS = available_layouts()
 
 
-def _serve(name, engine, Q, truth, col, k):
-    ids, _ = engine.search_batch(Q)  # warm-up / compile
+def _serve(name, retriever, Q, truth, col, k):
+    ids, _ = retriever.search(Q)  # warm-up / compile
     t0 = time.perf_counter()
-    ids, _ = engine.search_batch(Q)
+    ids, _ = retriever.search(Q)
     np.asarray(ids)
     dt = (time.perf_counter() - t0) * 1e6 / Q.shape[0]
     rec = np.mean([recall_at_k(truth[i], np.asarray(ids[i]))
                    for i in range(Q.shape[0])])
-    comp = col.fwd.storage_bytes(engine.cfg.codec)["components"]
-    print(f"  {name:8s} {engine.cfg.codec:13s} recall@{k}={rec:.3f} "
+    codec = retriever.cfg.codec
+    comp = col.fwd.storage_bytes(codec)["components"]
+    print(f"  {name:8s} {codec:13s} recall@{k}={rec:.3f} "
           f"{dt:8.0f} µs/query (CPU)  components={comp/2**20:6.2f} MiB")
 
 
@@ -59,19 +60,21 @@ def main() -> None:
                  for i in range(args.n_queries)]
 
         for codec in CODECS:
-            engine = BatchedSeismic(
-                index, EngineConfig(cut=8, block_budget=512, n_probe=96, k=args.k,
-                                    codec=codec))
-            _serve("seismic", engine, Q, truth, col, args.k)
+            r = Retriever.from_host_index(
+                index,
+                RetrieverConfig(engine="seismic", codec=codec, k=args.k,
+                                params=dict(cut=8, block_budget=512, n_probe=96)))
+            _serve("seismic", r, Q, truth, col, args.k)
 
         if args.no_hnsw:
             continue
         graph = HNSWIndex.build(col.fwd, HNSWParams(m=16, ef_construction=48))
         for codec in CODECS:
-            engine = BatchedHNSW(
-                graph, GraphConfig(beam=96, iters=96, n_seeds=8, k=args.k,
-                                   codec=codec))
-            _serve("hnsw", engine, Q, truth, col, args.k)
+            r = Retriever.from_host_index(
+                graph,
+                RetrieverConfig(engine="hnsw", codec=codec, k=args.k,
+                                params=dict(beam=96, iters=96, n_seeds=8)))
+            _serve("hnsw", r, Q, truth, col, args.k)
 
 
 if __name__ == "__main__":

@@ -35,7 +35,7 @@ from repro.core.scoring import (
     dequantise_values,
 )
 from repro.dist import sharding as shd
-from repro.serve.engine import EngineConfig, engine_array_specs, make_sharded_search
+from repro.serve.api import RetrieverConfig, get_engine, make_sharded_search
 
 from .base import BaseArch, Cell
 
@@ -112,32 +112,22 @@ class RetrievalArch(BaseArch):
             # useful work: 2 flops per (query × nonzero)
             return 2.0 * self.n_docs * self.doc_nnz * nq
         if shape == "graph_4096q":
-            gcfg = self._graph_cfg()
+            gp = self._graph_cfg().params
             # one neighbour list scored per expanded node
-            per_q = (gcfg.iters * self.graph_degree + gcfg.n_seeds) * self.l_max * 2
+            per_q = (gp["iters"] * self.graph_degree + gp["n_seeds"]) * self.l_max * 2
             return float(per_q) * nq
-        cfg = self._engine_cfg()
-        per_q = cfg.block_budget * 64 * 2 + cfg.n_probe * 64 * self.l_max * 2
+        ep = self._engine_cfg().params
+        per_q = ep["block_budget"] * 64 * 2 + ep["n_probe"] * 64 * self.l_max * 2
         return float(per_q) * nq
 
-    def _row_codec(self, shape: str) -> str:
-        if self.codec not in ("uncompressed", "dotvbyte", "streamvbyte"):
-            # the scan cell takes any layout codec (bitpack included);
-            # the candidate-rescoring cells need a row-stream codec
-            raise ValueError(
-                f"{shape} needs an engine row codec, got {self.codec!r}"
-            )
-        return self.codec
+    def _engine_cfg(self) -> RetrieverConfig:
+        # every codec registered in core/layout.py serves the row form
+        return RetrieverConfig(engine="seismic", codec=self.codec, k=10,
+                               params=dict(cut=8, block_budget=512, n_probe=64))
 
-    def _engine_cfg(self) -> EngineConfig:
-        return EngineConfig(cut=8, block_budget=512, n_probe=64, k=10,
-                            codec=self._row_codec("serve_4096q"))
-
-    def _graph_cfg(self):
-        from repro.serve.graph_engine import GraphConfig
-
-        return GraphConfig(beam=64, iters=64, n_seeds=8, k=10,
-                           codec=self._row_codec("graph_4096q"))
+    def _graph_cfg(self) -> RetrieverConfig:
+        return RetrieverConfig(engine="hnsw", codec=self.codec, k=10,
+                               params=dict(beam=64, iters=64, n_seeds=8))
 
     # ------------------------------------------------------------------
     def build_cell(self, shape: str, mesh: Mesh) -> Cell:
@@ -222,13 +212,10 @@ class RetrievalArch(BaseArch):
         if shape == "graph_4096q":
             # sharded HNSW beam search (DESIGN.md §5): per-shard
             # sub-graphs over ``model``, same row arrays as serve_4096q
-            from repro.serve.graph_engine import graph_array_specs
-            from repro.serve.graph_engine import make_sharded_search as make_graph_search
-
             gcfg = self._graph_cfg()
             n_shards = mesh.shape["model"]
             n_docs_local = self.n_docs // n_shards + 1
-            arr = graph_array_specs(
+            arr = get_engine("hnsw").array_specs(
                 gcfg,
                 n_docs=n_docs_local,
                 degree=self.graph_degree,
@@ -240,7 +227,7 @@ class RetrievalArch(BaseArch):
                 for k, v in arr.items()
             }
             idmap = jax.ShapeDtypeStruct((n_shards, n_docs_local + 1), jnp.int32)
-            fn = make_graph_search(
+            fn = make_sharded_search(
                 mesh, gcfg, n_docs_local, self.n_docs, self.value_scale,
                 index_axis="model", query_axes=da,
             )
@@ -262,7 +249,7 @@ class RetrievalArch(BaseArch):
         n_shards = mesh.shape["model"]
         n_docs_local = self.n_docs // n_shards + 1
         n_blocks_inv = int(min(self.dim * 4000, self.n_docs * self.doc_nnz) / 64) + 1
-        arr = engine_array_specs(
+        arr = get_engine("seismic").array_specs(
             ecfg,
             dim=self.dim,
             n_docs=n_docs_local,

@@ -29,8 +29,10 @@ side densified per insertion, the other gathered sparse), so the builder
 never materialises a dense matrix.
 
 This module is the host-side (numpy) reference engine with faithful
-heap semantics; the batched static-shape TPU serving path lives in
-``repro.serve.graph_engine`` (DESIGN.md §5, EXPERIMENTS.md §Graph).
+heap semantics; the batched static-shape TPU serving path is the
+``hnsw`` entry of the engine registry (``repro.serve.engines.hnsw``,
+served through ``repro.serve.api`` — DESIGN.md §5/§7, EXPERIMENTS.md
+§Graph).
 """
 
 from __future__ import annotations

@@ -30,7 +30,7 @@ Gap conventions (DESIGN.md §3):
 ``pad_stack`` is the shared shard-stacking helper: pad every field to
 the across-shard max shape and stack with a leading shard dim — used by
 ``pack_blocks_sharded`` (doc-aligned scan) and
-``serve.engine.build_shard_arrays`` (two-phase search).
+``serve.api.build_shard_arrays`` (every engine's sharded search).
 """
 
 from __future__ import annotations

@@ -32,6 +32,7 @@ __all__ = [
     "score_packed",
     "score_packed_batch",
     "decode_doc_rows",
+    "score_candidate_rows",
 ]
 
 
@@ -297,28 +298,87 @@ def make_doc_aligned_scan(
 # ---------------------------------------------------------------------------
 # per-document row layout (serve-engine rescoring path)
 # ---------------------------------------------------------------------------
-# Candidate re-scoring in the batched Seismic engine gathers a fixed-
+# Candidate re-scoring in the batched serve engines gathers a fixed-
 # capacity row per candidate document (built by ``layout.pack_rows``).
-# Rows are either raw components (uncompressed) or a (ctrl, data) stream
-# pair — DotVByte or StreamVByte — decoded on the fly; the decode is
-# identical to the block path but row gaps carry their absolute first
-# component, so a plain cumsum rebuilds the ids.
+# Rows are either raw components (uncompressed) or a codec stream —
+# (ctrl, data) for DotVByte/StreamVByte, (words, widths) for bitpack —
+# decoded on the fly; the decode is identical to the block path but row
+# gaps carry their absolute first component, so a plain cumsum rebuilds
+# the ids.
+
+#: row-form fields every codec shares (vals/nnz); everything else in a
+#: ``pack_rows`` output is codec payload (``<stream>_rows``)
+_ROW_COMMON_KEYS = ("vals_rows", "nnz_rows", "comps_rows")
 
 
-def decode_doc_rows(codec: str, ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> jnp.ndarray:
-    """ctrl u8 [N, L/8 | L/4], data u8 [N, DP] → absolute comps i32 [N, L].
+def decode_doc_rows(codec: str, payload, l_max: int | None = None) -> jnp.ndarray:
+    """Row-payload streams → absolute comps i32 [N, L].
 
-    Row gaps are encoded with the first gap absolute (per-doc alignment);
-    padding gaps are 0 with value 0, the usual neutral trick."""
-    if codec == "streamvbyte":
-        gaps = decode_gaps_streamvbyte(ctrl_rows, data_rows)
-    else:
-        gaps = decode_gaps_dotvbyte(ctrl_rows, data_rows)
+    Dispatches through the layout registry (``layout.get_layout``), so
+    ANY codec registered in core/layout.py decodes rows with zero edits
+    here: ``payload`` maps the codec's ``<stream>_rows`` fields (as
+    emitted by ``layout.pack_rows`` — ctrl/data for the byte codecs,
+    words/widths for bitpack) to the gathered arrays; ``l_max`` is the
+    row capacity (needed by fixed-width codecs). Row gaps are encoded
+    with the first gap absolute (per-doc alignment), so a plain cumsum
+    rebuilds the ids; padding gaps are 0 with value 0, the usual
+    neutral trick.
+
+    Back-compat: the PR-2 positional form ``decode_doc_rows(codec,
+    ctrl_rows, data_rows)`` still works (DeprecationWarning)."""
+    if not hasattr(payload, "items"):  # legacy (codec, ctrl, data) form
+        import warnings
+
+        warnings.warn(
+            "decode_doc_rows(codec, ctrl_rows, data_rows) is deprecated; "
+            "pass a payload mapping of <stream>_rows arrays",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        payload, l_max = {"ctrl_rows": payload, "data_rows": l_max}, None
+    from .layout import get_layout
+
+    lc = get_layout(codec)
+    if lc.decode_free:
+        raise ValueError(
+            f"codec {codec!r} is decode-free; rows store absolute components"
+        )
+    streams = {
+        (k[: -len("_rows")] if k.endswith("_rows") else k): v
+        for k, v in payload.items()
+    }
+    gaps = lc.decode(streams, 0 if l_max is None else int(l_max))
     return jnp.cumsum(gaps, axis=1)
 
 
 def decode_doc_rows_dotvbyte(ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> jnp.ndarray:
-    return decode_doc_rows("dotvbyte", ctrl_rows, data_rows)
+    return decode_doc_rows("dotvbyte", {"ctrl_rows": ctrl_rows, "data_rows": data_rows})
+
+
+def score_candidate_rows(
+    codec: str, arrays, docs: jnp.ndarray, q: jnp.ndarray, scale: float
+) -> jnp.ndarray:
+    """Gather the packed rows of ``docs`` and score them exactly.
+
+    The ONE candidate-rescoring path shared by every serve engine
+    (DESIGN.md §7): ``arrays`` holds the row form produced by
+    ``layout.pack_rows`` under any registered codec — possibly
+    alongside engine-specific fields, which are ignored. Sentinel doc
+    ids gather the all-zero row and score 0; mask them afterwards."""
+    from .layout import get_layout
+
+    vals = jnp.take(arrays["vals_rows"], docs, axis=0)
+    nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
+    if get_layout(codec).decode_free:  # absolute components stored raw
+        comps = jnp.take(arrays["comps_rows"], docs, axis=0)
+    else:
+        payload = {
+            k: jnp.take(arrays[k], docs, axis=0)
+            for k in arrays
+            if k.endswith("_rows") and k not in _ROW_COMMON_KEYS
+        }
+        comps = decode_doc_rows(codec, payload, l_max=vals.shape[-1])
+    return score_doc_rows(q, comps, vals, nnz, scale)
 
 
 def score_doc_rows(

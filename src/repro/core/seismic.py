@@ -22,8 +22,9 @@ index — this is where the decode speed of the components codec shows up,
 and why the paper optimises it.
 
 This module is the host-side (numpy) reference engine with faithful
-heap semantics; the batched static-shape TPU serving path lives in
-``repro.serve.engine``.
+heap semantics; the batched static-shape TPU serving path is the
+``seismic`` entry of the engine registry (``repro.serve.engines.
+seismic``, served through ``repro.serve.api`` — DESIGN.md §7).
 """
 
 from __future__ import annotations

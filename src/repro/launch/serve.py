@@ -1,12 +1,22 @@
-"""Serving launcher: build an ANNS index over a synthetic MsMarco-like
-collection and serve batched queries through the static TPU engines.
+"""Serving launcher: build (or load) an ANNS index over a synthetic
+MsMarco-like collection and serve batched queries through the unified
+``repro.serve.api`` Retriever surface.
 
 ``python -m repro.launch.serve --engine seismic --codec dotvbyte
 --n-docs 20000 --n-queries 64`` builds the collection + index, runs
-batched searches, and reports recall@10 + latency; ``--engine hnsw`` serves the
-same collection through the graph engine (DESIGN.md §5) instead, and
-``--engine both`` compares them head to head. ``--compare-codecs``
-sweeps every component codec (the quickstart of the serving stack).
+batched searches, and reports recall@10 + latency. Engine choices come
+straight from the registry (plus ``both`` = seismic+hnsw and ``all`` =
+every registered engine, ``flat`` included); codec choices come from
+``repro.core.layout.available_layouts()``, so a newly registered
+engine or codec reaches this CLI with zero edits. ``--compare-codecs``
+sweeps every serving codec over the same host index.
+
+The build/serve split (DESIGN.md §7): ``--save-index DIR`` writes one
+artifact per engine×codec under ``DIR/<engine>-<codec>/`` (manifest +
+packed arrays + the top-k of this run); ``--load-index DIR`` skips the
+build, serves from the artifacts, and — when the saved top-k is
+present — verifies the reopened index returns byte-identical results
+(the ``make serve-roundtrip`` smoke).
 
 The HNSW host build is a few ms per document — prefer ``--n-docs``
 in the low thousands when sweeping the graph engine interactively.
@@ -15,13 +25,10 @@ in the low thousands when sweeping the graph engine interactively.
 from __future__ import annotations
 
 import argparse
+import pathlib
 import time
 
-import jax.numpy as jnp
 import numpy as np
-
-
-ENGINE_CODECS = ("uncompressed", "dotvbyte", "streamvbyte")
 
 
 def _report(name, codec, k, recs, dt_us, col, extra=""):
@@ -36,12 +43,24 @@ def _report(name, codec, k, recs, dt_us, col, extra=""):
 
 
 def main() -> None:
+    from repro.core.layout import available_layouts
+    from repro.serve.api import available_engines
+
+    engines_known = available_engines()
+    codecs_known = available_layouts()
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--encoder", choices=["splade", "lilsr"], default="splade")
-    ap.add_argument("--engine", choices=["seismic", "hnsw", "both"], default="seismic")
-    ap.add_argument("--codec", default="dotvbyte", choices=list(ENGINE_CODECS))
+    ap.add_argument("--engine", choices=[*engines_known, "both", "all"],
+                    default="seismic",
+                    help="a registered engine, 'both' (seismic+hnsw) or 'all'")
+    ap.add_argument("--codec", default="dotvbyte", choices=codecs_known)
     ap.add_argument("--compare-codecs", action="store_true",
-                    help="sweep every engine codec over the same index")
+                    help="sweep every registered serving codec over the same index")
+    ap.add_argument("--save-index", metavar="DIR", default=None,
+                    help="save each built index artifact under DIR/<engine>-<codec>/")
+    ap.add_argument("--load-index", metavar="DIR", default=None,
+                    help="serve from artifacts under DIR instead of building")
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--n-queries", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -51,12 +70,12 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=64, help="HNSW nodes expanded per query")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.save_index and args.load_index:
+        ap.error("--save-index and --load-index are mutually exclusive")
 
-    from repro.core.hnsw import HNSWIndex, HNSWParams
-    from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
+    from repro.core.seismic import exact_top_k, recall_at_k
     from repro.data.synthetic import generate_collection, lilsr_config, splade_config
-    from repro.serve.engine import BatchedSeismic, EngineConfig
-    from repro.serve.graph_engine import BatchedHNSW, GraphConfig
+    from repro.serve.api import Retriever, RetrieverConfig, open_retriever
 
     cfg_fn = splade_config if args.encoder == "splade" else lilsr_config
     print(f"generating {args.n_docs}-doc synthetic {args.encoder} collection…")
@@ -64,44 +83,79 @@ def main() -> None:
                               value_format="f16")
     print(f"(nnz/doc={col.fwd.total_nnz/col.fwd.n_docs:.0f})")
 
-    engines = ("seismic", "hnsw") if args.engine == "both" else (args.engine,)
-    indexes = {}
-    if "seismic" in engines:
-        t0 = time.time()
-        indexes["seismic"] = SeismicIndex.build(
-            col.fwd, SeismicParams(n_postings=2000, block_size=64)
-        )
-        print(f"Seismic: {indexes['seismic'].n_blocks} blocks in {time.time()-t0:.1f}s")
-    if "hnsw" in engines:
-        t0 = time.time()
-        indexes["hnsw"] = HNSWIndex.build(col.fwd, HNSWParams(m=16, ef_construction=48))
-        print(f"HNSW: {indexes['hnsw'].n_edges} edges in {time.time()-t0:.1f}s")
+    if args.engine == "both":
+        engines = ("seismic", "hnsw")
+    elif args.engine == "all":
+        engines = tuple(engines_known)
+    else:
+        engines = (args.engine,)
+    codecs = codecs_known if args.compare_codecs else (args.codec,)
+
+    search_params = {
+        "seismic": dict(cut=args.cut, block_budget=512, n_probe=args.n_probe,
+                        n_postings=2000, block_size=64),
+        "hnsw": dict(beam=args.beam, iters=args.iters, n_seeds=8,
+                     m=16, ef_construction=48),
+        "flat": {},
+    }
+
+    # host indexes build once per engine; codecs sweep over them
+    host_indexes: dict[str, object] = {}
+    if not args.load_index:
+        from repro.serve.api import get_engine
+
+        for name in engines:
+            impl = get_engine(name)
+            if not hasattr(impl, "host_index"):
+                continue
+            t0 = time.time()
+            cfg = RetrieverConfig(engine=name, k=args.k,
+                                  params=search_params.get(name, {}))
+            host_indexes[name] = impl.host_index(col.fwd, cfg)
+            print(f"{name}: host index built in {time.time()-t0:.1f}s")
 
     Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
     truth = [exact_top_k(col.fwd, Q[i], args.k)[0] for i in range(col.n_queries)]
-    codecs = ENGINE_CODECS if args.compare_codecs else (args.codec,)
+
+    roundtrip_checked = 0
     for name in engines:
         for codec in codecs:
-            if name == "seismic":
-                engine = BatchedSeismic(
-                    indexes[name],
-                    EngineConfig(cut=args.cut, block_budget=512, n_probe=args.n_probe,
-                                 k=args.k, codec=codec),
-                )
+            cfg = RetrieverConfig(engine=name, codec=codec, k=args.k,
+                                  params=search_params.get(name, {}))
+            if args.load_index:
+                art = pathlib.Path(args.load_index) / f"{name}-{codec}"
+                retriever = open_retriever(art)
+            elif name in host_indexes:
+                retriever = Retriever.from_host_index(host_indexes[name], cfg)
             else:
-                engine = BatchedHNSW(
-                    indexes[name],
-                    GraphConfig(beam=args.beam, iters=args.iters, n_seeds=8,
-                                k=args.k, codec=codec),
-                )
-            ids, scores = engine.search_batch(jnp.asarray(Q))  # compile
+                retriever = Retriever.build(col.fwd, cfg)
+            ids, scores = retriever.search(Q)  # compile
             t0 = time.time()
-            ids, scores = engine.search_batch(jnp.asarray(Q))
+            ids, scores = retriever.search(Q)
             ids = np.asarray(ids)
             dt = time.time() - t0
 
             recs = [recall_at_k(truth[i], ids[i]) for i in range(col.n_queries)]
-            _report(name, codec, args.k, recs, 1e6 * dt / col.n_queries, col)
+            extra = ""
+            if args.save_index:
+                art = pathlib.Path(args.save_index) / f"{name}-{codec}"
+                retriever.save(art)
+                np.savez(art / "topk.npz", ids=ids, scores=np.asarray(scores))
+                extra = f" saved→{art}"
+            if args.load_index:
+                ref = pathlib.Path(args.load_index) / f"{name}-{codec}" / "topk.npz"
+                if ref.is_file():
+                    with np.load(ref) as npz:
+                        assert np.array_equal(npz["ids"], ids), (
+                            f"{name}/{codec}: reopened top-k ids differ from the "
+                            f"build-time run")
+                        assert np.array_equal(npz["scores"], np.asarray(scores)), (
+                            f"{name}/{codec}: reopened top-k scores differ")
+                    roundtrip_checked += 1
+                    extra = " roundtrip=byte-identical"
+            _report(name, codec, args.k, recs, 1e6 * dt / col.n_queries, col, extra)
+    if args.load_index:
+        print(f"serve-roundtrip OK: {roundtrip_checked} artifact(s) byte-identical")
 
 
 if __name__ == "__main__":

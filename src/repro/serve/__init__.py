@@ -1,0 +1,3 @@
+"""Serving layer: the engine-agnostic ``Retriever`` API (``api``), the
+registered engines (``engines``), and the deprecated per-engine shims
+(``engine``, ``graph_engine``). See DESIGN.md §7."""

@@ -1,0 +1,519 @@
+"""One ``Retriever`` API (DESIGN.md §7): engine registry, build/serve
+split, and on-disk index artifacts.
+
+The paper's thesis is that forward-index compression is common to all
+algorithmic flavors of sparse ANNS; this module is where that becomes
+an API contract. Every serving engine is a registry entry —
+
+    @register_engine("seismic")
+    class SeismicEngine(EngineImpl): ...
+
+— implementing the ``EngineImpl`` protocol (host-side array build,
+pure static-shape ``search_one``, dry-run array specs, shard build)
+over one shared ``RetrieverConfig`` (engine, codec, k, shard count,
+engine params). The engine-agnostic surface is then:
+
+* ``Retriever.build(fwd, cfg)`` — host-side index construction
+  (collection → engine arrays under any codec registered in
+  ``core/layout.py``);
+* ``retriever.search(Q, k)`` — the jit'd static-shape batched search;
+* ``retriever.save(path)`` / ``open_retriever(path)`` — the artifact
+  lifecycle: a manifest (engine/codec/params/format version) plus an
+  npz payload of the packed arrays, so a serving process loads
+  pre-packed arrays without re-encoding anything;
+* ``build_shard_arrays`` / ``make_sharded_search`` — ONE generic
+  sharded-search driver (DESIGN.md §4): per-shard ``search_one``,
+  local→global id map, O(k) all-gather merge; engines only declare
+  whether the merge must dedupe doc ids.
+
+Three engines ship registered: ``seismic`` (two-phase block probe),
+``hnsw`` (static beam search) and ``flat`` (exact full scan — proof
+the registry is open, and the recall oracle). The per-engine wrapper
+classes in ``repro.serve.engine`` / ``repro.serve.graph_engine`` are
+deprecated shims over this module, kept for one release.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from functools import partial
+from typing import Any, Callable, Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout
+from repro.core.forward_index import VALUE_FORMATS, ForwardIndex
+
+__all__ = [
+    "RetrieverConfig",
+    "EngineImpl",
+    "register_engine",
+    "get_engine",
+    "available_engines",
+    "Retriever",
+    "open_retriever",
+    "ArtifactError",
+    "MANIFEST_VERSION",
+    "build_shard_arrays",
+    "make_sharded_search",
+    "row_array_specs",
+]
+
+#: bumped whenever the artifact layout changes incompatibly; loading a
+#: mismatching artifact fails loudly rather than mis-decoding arrays
+MANIFEST_VERSION = 1
+_MANIFEST_FORMAT = "repro.serve.retriever"
+_MANIFEST_FILE = "manifest.json"
+_ARRAYS_FILE = "arrays.npz"
+
+
+class ArtifactError(ValueError):
+    """A saved index artifact is missing, corrupt, or incompatible."""
+
+
+# ---------------------------------------------------------------------------
+# config + engine registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrieverConfig:
+    """Engine-agnostic serving configuration.
+
+    ``params`` carries the engine-specific knobs (build AND search
+    time); unknown keys are rejected against the engine's declared
+    defaults, so typos fail at construction rather than silently
+    serving defaults."""
+
+    engine: str = "seismic"
+    codec: str = "uncompressed"
+    k: int = 10
+    batch_size: int | None = None  # optional static query-batch hint
+    n_shards: int = 1  # index shards for the sharded path
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def replace(self, **kw) -> "RetrieverConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class EngineImpl:
+    """Protocol every registered engine implements.
+
+    An engine is a *pure-function view* of an index: host-side numpy
+    array construction (``build_arrays`` / ``arrays_from_index`` /
+    ``shard_build``) plus one static-shape ``search_one`` that serves
+    the jit'd batched path, the dry-run (ShapeDtypeStruct arrays, via
+    ``array_specs``) and the generic sharded driver unmodified."""
+
+    name: str = "abstract"
+    #: engine knob defaults; ``RetrieverConfig.params`` overrides
+    defaults: Dict[str, Any] = {}
+    #: True when one document can be reported by several index shards
+    #: (the generic sharded merge then dedupes by doc id)
+    dedupe_merge: bool = False
+
+    # -- config plumbing ------------------------------------------------
+    def params(self, cfg: RetrieverConfig) -> Dict[str, Any]:
+        unknown = set(cfg.params) - set(self.defaults)
+        if unknown:
+            raise ValueError(
+                f"unknown {self.name!r} engine params {sorted(unknown)}; "
+                f"known: {sorted(self.defaults)}"
+            )
+        return {**self.defaults, **cfg.params}
+
+    # -- host-side build ------------------------------------------------
+    def build_arrays(self, fwd: ForwardIndex, cfg: RetrieverConfig) -> Dict[str, np.ndarray]:
+        """Collection → engine arrays (numpy), via the host index."""
+        raise NotImplementedError
+
+    # -- serving --------------------------------------------------------
+    def search_one(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, q):
+        """One dense query → (ids [k], scores [k]). Pure, static-shape."""
+        raise NotImplementedError
+
+    def array_specs(self, cfg: RetrieverConfig, **dims) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for the engine arrays (dry-run)."""
+        raise NotImplementedError
+
+    # -- sharded build --------------------------------------------------
+    def shard_build(self, fwd: ForwardIndex, cfg: RetrieverConfig, n_shards: int):
+        """→ (per-shard array dicts, idmaps, n_docs_local, pad_values).
+
+        ``idmaps[s]`` is i32 [n_docs_local + 1] mapping shard-local doc
+        ids to global ones (sentinel → global n_docs); ``pad_values``
+        feeds ``layout.pad_stack``."""
+        raise NotImplementedError
+
+
+_ENGINES: Dict[str, Callable[[], EngineImpl]] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: make an ``EngineImpl`` servable by name."""
+
+    def deco(factory: Callable[[], EngineImpl]):
+        _ENGINES[name] = factory
+        return factory
+
+    return deco
+
+
+def _ensure_builtin_engines() -> None:
+    from . import engines  # noqa: F401  (registers seismic/hnsw/flat)
+
+
+def get_engine(name: str) -> EngineImpl:
+    _ensure_builtin_engines()
+    try:
+        return _ENGINES[name]()
+    except KeyError:
+        raise ValueError(
+            f"no registered engine {name!r}; have {sorted(_ENGINES)}"
+        ) from None
+
+
+def available_engines() -> list[str]:
+    _ensure_builtin_engines()
+    return sorted(_ENGINES)
+
+
+def row_array_specs(
+    codec: str,
+    *,
+    n_docs: int,
+    l_max: int,
+    d_max: int,
+    value_dtype=jnp.float16,
+    bitpack_bits: int = 16,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs of the packed row form under ``codec`` — the
+    candidate-rescoring arrays every engine shares (dry-run sizing)."""
+    sds = jax.ShapeDtypeStruct
+    arrays = {
+        "vals_rows": sds((n_docs + 1, l_max), value_dtype),
+        "nnz_rows": sds((n_docs + 1,), jnp.int32),
+    }
+    if codec == "uncompressed":
+        arrays["comps_rows"] = sds((n_docs + 1, l_max), jnp.int32)
+    elif codec == "bitpack":
+        arrays["words_rows"] = sds(
+            (n_docs + 1, (l_max * bitpack_bits + 31) // 32), jnp.uint32
+        )
+        arrays["widths_rows"] = sds((n_docs + 1,), jnp.int32)
+    else:  # (ctrl, data) byte-stream codecs
+        group = layout.get_layout(codec).block_multiple
+        arrays["ctrl_rows"] = sds((n_docs + 1, l_max // group), jnp.uint8)
+        arrays["data_rows"] = sds((n_docs + 1, d_max), jnp.uint8)
+    return arrays
+
+
+# ---------------------------------------------------------------------------
+# the Retriever surface
+# ---------------------------------------------------------------------------
+
+
+class Retriever:
+    """Engine- and codec-agnostic serving handle.
+
+    Holds the static device arrays of ONE engine×codec index plus the
+    jit'd batched search. Construct with ``Retriever.build`` (host-side
+    build from a ForwardIndex), ``Retriever.from_host_index`` (reuse an
+    already-built ``SeismicIndex``/``HNSWIndex`` across codecs), or
+    ``open_retriever`` (load a saved artifact, no re-encoding)."""
+
+    def __init__(
+        self,
+        cfg: RetrieverConfig,
+        arrays: Mapping[str, np.ndarray],
+        *,
+        n_docs: int,
+        dim: int,
+        value_scale: float,
+        value_format: str,
+    ):
+        self.impl = get_engine(cfg.engine)
+        layout.get_layout(cfg.codec)  # raises listing the known codecs
+        self.impl.params(cfg)  # rejects unknown engine knobs early
+        self.cfg = cfg
+        self.n_docs = int(n_docs)
+        self.dim = int(dim)
+        self.value_scale = float(value_scale)
+        self.value_format = value_format
+        self.arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+        self._search = jax.jit(
+            jax.vmap(
+                partial(
+                    self.impl.search_one,
+                    cfg,
+                    self.n_docs,
+                    self.value_scale,
+                    self.arrays,
+                )
+            )
+        )
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def build(cls, fwd: ForwardIndex, cfg: RetrieverConfig) -> "Retriever":
+        """Host-side index construction: collection → servable arrays."""
+        impl = get_engine(cfg.engine)
+        layout.get_layout(cfg.codec)
+        return cls(
+            cfg,
+            impl.build_arrays(fwd, cfg),
+            n_docs=fwd.n_docs,
+            dim=fwd.dim,
+            value_scale=float(fwd.value_format.scale),
+            value_format=fwd.value_format.name,
+        )
+
+    @classmethod
+    def from_host_index(cls, index, cfg: RetrieverConfig) -> "Retriever":
+        """Wrap an already-built host index (``SeismicIndex`` /
+        ``HNSWIndex``) — sweeping codecs over one build, the shims'
+        path. ``cfg``'s build-time params are ignored."""
+        impl = get_engine(cfg.engine)
+        if not hasattr(impl, "arrays_from_index"):
+            raise ValueError(
+                f"engine {cfg.engine!r} has no host-index form; use Retriever.build"
+            )
+        fwd = index.fwd
+        return cls(
+            cfg,
+            impl.arrays_from_index(index, cfg),
+            n_docs=fwd.n_docs,
+            dim=fwd.dim,
+            value_scale=float(fwd.value_format.scale),
+            value_format=fwd.value_format.name,
+        )
+
+    # -- serving ----------------------------------------------------------
+    def search(self, Q, k: int | None = None):
+        """[nq, dim] dense queries → (ids [nq, k], scores [nq, k]).
+
+        ``k`` defaults to ``cfg.k`` (the static top-k the search graph
+        was traced with); any smaller k is a free slice."""
+        ids, scores = self._search(jnp.asarray(Q))
+        if k is None or k == self.cfg.k:
+            return ids, scores
+        if k > self.cfg.k:
+            raise ValueError(
+                f"k={k} exceeds the static cfg.k={self.cfg.k}; rebuild the "
+                f"Retriever with a larger cfg.k"
+            )
+        return ids[:, :k], scores[:, :k]
+
+    # kept for engine-class drop-in compatibility (deprecated shims)
+    def search_batch(self, Q):
+        return self.search(Q)
+
+    # -- artifact lifecycle ----------------------------------------------
+    def save(self, path) -> pathlib.Path:
+        """Write the index artifact: ``manifest.json`` + ``arrays.npz``.
+
+        The npz payload holds the packed codec arrays exactly as served,
+        so ``open_retriever`` performs zero re-encoding."""
+        path = pathlib.Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        host = {k: np.asarray(v) for k, v in self.arrays.items()}
+        manifest = {
+            "format": _MANIFEST_FORMAT,
+            "version": MANIFEST_VERSION,
+            "engine": self.cfg.engine,
+            "codec": self.cfg.codec,
+            "k": self.cfg.k,
+            "n_shards": self.cfg.n_shards,
+            "params": dict(self.cfg.params),
+            "n_docs": self.n_docs,
+            "dim": self.dim,
+            "value_scale": self.value_scale,
+            "value_format": self.value_format,
+            "arrays": {
+                k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                for k, v in host.items()
+            },
+        }
+        with open(path / _MANIFEST_FILE, "w", encoding="utf-8") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        np.savez_compressed(path / _ARRAYS_FILE, **host)
+        return path
+
+
+def open_retriever(path) -> Retriever:
+    """Load a saved index artifact into a servable ``Retriever``.
+
+    Validates the manifest (format magic, version, engine/codec names,
+    per-array dtype/shape) before touching the payload — an
+    incompatible or tampered artifact raises ``ArtifactError`` instead
+    of mis-decoding."""
+    path = pathlib.Path(path)
+    mf = path / _MANIFEST_FILE
+    if not mf.is_file():
+        raise ArtifactError(f"no {_MANIFEST_FILE} under {path}")
+    try:
+        manifest = json.loads(mf.read_text(encoding="utf-8"))
+    except json.JSONDecodeError as e:
+        raise ArtifactError(f"corrupt manifest at {mf}: {e}") from None
+    if manifest.get("format") != _MANIFEST_FORMAT:
+        raise ArtifactError(
+            f"{mf} is not a {_MANIFEST_FORMAT} artifact "
+            f"(format={manifest.get('format')!r})"
+        )
+    version = manifest.get("version")
+    if version != MANIFEST_VERSION:
+        raise ArtifactError(
+            f"artifact version {version!r} incompatible with this build "
+            f"(expected {MANIFEST_VERSION}); rebuild the index"
+        )
+    engine, codec = manifest["engine"], manifest["codec"]
+    if engine not in available_engines():
+        raise ArtifactError(
+            f"artifact engine {engine!r} is not registered; have "
+            f"{available_engines()}"
+        )
+    if codec not in layout.available_layouts():
+        raise ArtifactError(
+            f"artifact codec {codec!r} is not registered; have "
+            f"{layout.available_layouts()}"
+        )
+    if manifest["value_format"] not in VALUE_FORMATS:
+        raise ArtifactError(
+            f"unknown value_format {manifest['value_format']!r}; have "
+            f"{sorted(VALUE_FORMATS)}"
+        )
+    with np.load(path / _ARRAYS_FILE) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    spec = manifest["arrays"]
+    if set(spec) != set(arrays):
+        raise ArtifactError(
+            f"array payload mismatch: manifest lists {sorted(spec)}, "
+            f"npz holds {sorted(arrays)}"
+        )
+    for k, meta in spec.items():
+        got = arrays[k]
+        if str(got.dtype) != meta["dtype"] or list(got.shape) != meta["shape"]:
+            raise ArtifactError(
+                f"array {k!r} is {got.dtype}{list(got.shape)}, manifest "
+                f"says {meta['dtype']}{meta['shape']}"
+            )
+    cfg = RetrieverConfig(
+        engine=engine,
+        codec=codec,
+        k=int(manifest["k"]),
+        n_shards=int(manifest.get("n_shards", 1)),
+        params=manifest.get("params", {}),
+    )
+    return Retriever(
+        cfg,
+        arrays,
+        n_docs=manifest["n_docs"],
+        dim=manifest["dim"],
+        value_scale=manifest["value_scale"],
+        value_format=manifest["value_format"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# generic sharded driver (DESIGN.md §4 / §7)
+# ---------------------------------------------------------------------------
+
+
+def build_shard_arrays(
+    fwd: ForwardIndex,
+    cfg: RetrieverConfig,
+    n_shards: int | None = None,
+    *,
+    host_index=None,
+):
+    """Partition a collection into self-contained per-shard sub-indexes
+    and stack their engine arrays with a leading shard dim.
+
+    Returns (stacked jnp arrays, idmap [n_shards, n_docs_local+1],
+    n_docs_local). How the split happens is the engine's business
+    (Seismic: blocks round-robin + doc ownership; graph/flat:
+    contiguous doc ranges); the stacking is shared ``pad_stack``.
+
+    Pass ``host_index`` to reuse an already-built host index instead
+    of rebuilding it inside the shard split (engines that partition by
+    doc range rebuild per-range structures regardless and ignore it)."""
+    impl = get_engine(cfg.engine)
+    n_shards = n_shards or cfg.n_shards
+    if host_index is not None and hasattr(impl, "shard_from_index"):
+        dicts, idmaps, n_docs_local, pad_values = impl.shard_from_index(
+            host_index, cfg, n_shards
+        )
+    else:
+        dicts, idmaps, n_docs_local, pad_values = impl.shard_build(fwd, cfg, n_shards)
+    stacked = {
+        k: jnp.asarray(v) for k, v in layout.pad_stack(dicts, pad_values).items()
+    }
+    return stacked, jnp.asarray(np.stack(idmaps)), n_docs_local
+
+
+def make_sharded_search(
+    mesh,
+    cfg: RetrieverConfig,
+    n_docs_local: int,
+    n_docs_global: int,
+    value_scale: float,
+    *,
+    index_axis: str = "model",
+    query_axes: tuple[str, ...] = ("data",),
+):
+    """ONE distributed search driver for every registered engine.
+
+    The index is pre-partitioned into ``mesh.shape[index_axis]``
+    self-contained sub-indexes (arrays carry a leading shard dim,
+    sharded over ``index_axis``; ``idmap`` maps local → global doc
+    ids, sentinel → n_docs_global). Queries shard over ``query_axes``
+    and replicate across index shards; each device runs the engine's
+    ``search_one`` on its shard, then an O(k) all-gather + top-k merge
+    produces the global result — deduping by doc id first iff the
+    engine declares ``dedupe_merge`` (a Seismic document's blocks
+    scatter across shards; graph/flat doc ranges are disjoint).
+    Collective bytes per query: 8·k·n_shards."""
+    from jax.sharding import PartitionSpec as P
+
+    impl = get_engine(cfg.engine)
+
+    def local(arrays, idmap, Q):
+        arrays = jax.tree.map(lambda a: a[0], arrays)  # drop shard dim
+        idmap = idmap[0]
+        ids, scores = jax.vmap(
+            partial(impl.search_one, cfg, n_docs_local, value_scale, arrays)
+        )(Q)
+        gids = jnp.take(idmap, ids)  # [nq_local, k] global ids
+        ag_s = jax.lax.all_gather(scores, index_axis)  # [S, nq, k]
+        ag_i = jax.lax.all_gather(gids, index_axis)
+        S, nq, k = ag_s.shape
+        flat_s = ag_s.transpose(1, 0, 2).reshape(nq, S * k)
+        flat_i = ag_i.transpose(1, 0, 2).reshape(nq, S * k)
+        if impl.dedupe_merge:
+            # the same doc can be reported by several shards; dedupe by
+            # id (sort, mask repeats) before the final top-k
+            order = jnp.argsort(flat_i, axis=1)
+            si = jnp.take_along_axis(flat_i, order, axis=1)
+            ss = jnp.take_along_axis(flat_s, order, axis=1)
+            dup = jnp.concatenate(
+                [jnp.zeros((nq, 1), bool), si[:, 1:] == si[:, :-1]], axis=1
+            )
+            flat_i = si
+            flat_s = jnp.where(dup | (si >= n_docs_global), -jnp.inf, ss)
+        else:
+            flat_s = jnp.where(flat_i >= n_docs_global, -jnp.inf, flat_s)
+        top_s, pos = jax.lax.top_k(flat_s, cfg.k)
+        return jnp.take_along_axis(flat_i, pos, axis=1), top_s
+
+    qa = query_axes or None
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(index_axis), P(index_axis), P(qa, None)),
+        out_specs=(P(qa, None), P(qa, None)),
+        check_vma=False,
+    )

@@ -1,305 +1,86 @@
-"""Batched, static-shape Seismic serving engine (TPU adaptation).
+"""DEPRECATED shim — the batched Seismic engine now lives behind the
+engine registry in ``repro.serve.api`` (DESIGN.md §7).
 
-The host-side reference (repro.core.seismic) has faithful heap-and-
-early-exit semantics but data-dependent control flow. TPUs want static
-shapes and batches, so serving uses the standard two-phase static
-relaxation of the same algorithm:
+Everything here delegates to ``api.Retriever`` /
+``api.get_engine("seismic")`` and is kept for ONE release so external
+callers of the PR-1/PR-2 surface keep working. New code should use:
 
-  phase 1  for each query: gather the blocks of its top-``cut``
-           components (≤ ``block_budget``), score every summary
-           (gather + FMA), take the top-``n_probe`` blocks — this
-           replaces the heap_factor pruning test with a fixed probe
-           budget (the Seismic papers' own batching trick);
-  phase 2  gather the ≤ n_probe·block_size candidate documents, dedupe
-           (sort by id, mask repeats), re-score *exactly* against the
-           forward index rows — uncompressed, DotVByte- or StreamVByte-
-           decoded (any codec registered in core/layout.py), the paper's
-           hot path — and take the global top-k.
-
-``search_one_fn`` is a *pure* function of (arrays, query) so the same
-code serves the jit'd production path, the multi-pod dry-run
-(ShapeDtypeStruct arrays), and the tests. Distribution (DESIGN.md §4):
-index arrays row-shard over the flat mesh; queries shard over ``data``;
-per-shard top-k merges with an O(k) all-gather.
+    from repro.serve.api import Retriever, RetrieverConfig
+    r = Retriever.build(fwd, RetrieverConfig(engine="seismic", codec=...))
+    ids, scores = r.search(Q)
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from . import api
+from .api import RetrieverConfig
 
-from repro.core import layout
-from repro.core.scoring import decode_doc_rows, score_doc_rows
-from repro.core.seismic import SeismicIndex
-
-__all__ = ["BatchedSeismic", "EngineConfig", "search_one_fn", "engine_array_specs"]
-
-#: codecs with a (ctrl, data) row stream decoded on the fly
-_STREAM_CODECS = ("dotvbyte", "streamvbyte")
+__all__ = ["BatchedSeismic", "EngineConfig", "search_one_fn", "engine_array_specs",
+           "make_sharded_search", "build_shard_arrays"]
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    cut: int = 8  # query components probed
-    block_budget: int = 512  # max candidate blocks per query (phase 1)
-    n_probe: int = 64  # blocks exactly re-scored (phase 2)
+    """Legacy Seismic search config; superseded by ``RetrieverConfig``."""
+
+    cut: int = 8
+    block_budget: int = 512
+    n_probe: int = 64
     k: int = 10
-    codec: str = "uncompressed"  # "uncompressed" | "dotvbyte" | "streamvbyte"
+    codec: str = "uncompressed"
 
-
-def search_one_fn(cfg: EngineConfig, n_docs: int, value_scale: float, arrays: dict, q):
-    """One dense query → (ids [k], scores [k]). Pure and static-shape.
-
-    arrays: cbs/cbl [dim], sum_comps/sum_vals [n_blocks, s_max],
-    block_docs [n_blocks, bs_max], vals_rows [N+1, l_max],
-    nnz_rows [N+1], and comps_rows | (ctrl_rows, data_rows)."""
-    # top-cut query components
-    qv, qc = jax.lax.top_k(jnp.abs(q), cfg.cut)
-    live = qv > 0
-    # candidate blocks: fixed budget round-robin over the cut comps
-    starts = arrays["cbs"][qc]  # [cut]
-    lens = jnp.where(live, arrays["cbl"][qc], 0)
-    per = cfg.block_budget // cfg.cut
-    offs = jnp.arange(per)[None, :]  # [1, per]
-    cand = starts[:, None] + offs  # [cut, per]
-    valid = offs < lens[:, None]
-    cand = jnp.where(valid, cand, -1).reshape(-1)  # [budget]
-
-    # phase 1: summary upper bounds
-    sc = jnp.take(arrays["sum_comps"], jnp.maximum(cand, 0), axis=0)
-    sv = jnp.take(arrays["sum_vals"], jnp.maximum(cand, 0), axis=0)
-    est = (jnp.take(q, sc, axis=0) * sv).sum(-1)
-    est = jnp.where(cand >= 0, est, -jnp.inf)
-    _, probe = jax.lax.top_k(est, cfg.n_probe)
-    probe_blocks = jnp.take(cand, probe)
-
-    # phase 2: gather candidate docs, dedupe, exact re-score
-    docs = jnp.take(arrays["block_docs"], jnp.maximum(probe_blocks, 0), axis=0)
-    docs = jnp.where((probe_blocks >= 0)[:, None], docs, n_docs).reshape(-1)
-    docs = jnp.sort(docs)
-    dup = jnp.concatenate([jnp.zeros(1, bool), docs[1:] == docs[:-1]])
-    docs = jnp.where(dup, n_docs, docs)
-
-    vals = jnp.take(arrays["vals_rows"], docs, axis=0)
-    nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
-    if cfg.codec in _STREAM_CODECS:
-        ctrl = jnp.take(arrays["ctrl_rows"], docs, axis=0)
-        data = jnp.take(arrays["data_rows"], docs, axis=0)
-        comps = decode_doc_rows(cfg.codec, ctrl, data)
-    else:
-        comps = jnp.take(arrays["comps_rows"], docs, axis=0)
-    scores = score_doc_rows(q, comps, vals, nnz, value_scale)
-    scores = jnp.where(docs < n_docs, scores, -jnp.inf)
-    top_s, idx = jax.lax.top_k(scores, cfg.k)
-    return jnp.take(docs, idx), top_s
-
-
-def engine_array_specs(
-    cfg: EngineConfig,
-    *,
-    dim: int,
-    n_docs: int,
-    n_blocks: int,
-    s_max: int,
-    bs_max: int,
-    l_max: int,
-    d_max: int,
-    value_dtype=jnp.float16,
-) -> dict:
-    """ShapeDtypeStruct stand-ins for the engine arrays (dry-run)."""
-    sds = jax.ShapeDtypeStruct
-    arrays = {
-        "cbs": sds((dim,), jnp.int32),
-        "cbl": sds((dim,), jnp.int32),
-        "sum_comps": sds((n_blocks, s_max), jnp.int32),
-        "sum_vals": sds((n_blocks, s_max), jnp.float32),
-        "block_docs": sds((n_blocks, bs_max), jnp.int32),
-        "vals_rows": sds((n_docs + 1, l_max), value_dtype),
-        "nnz_rows": sds((n_docs + 1,), jnp.int32),
-    }
-    if cfg.codec in _STREAM_CODECS:
-        ctrl_group = 8 if cfg.codec == "dotvbyte" else 4
-        arrays["ctrl_rows"] = sds((n_docs + 1, l_max // ctrl_group), jnp.uint8)
-        arrays["data_rows"] = sds((n_docs + 1, d_max), jnp.uint8)
-    else:
-        arrays["comps_rows"] = sds((n_docs + 1, l_max), jnp.int32)
-    return arrays
-
-
-class BatchedSeismic:
-    """Static-array view of a SeismicIndex + jit'd batched search."""
-
-    def __init__(self, index: SeismicIndex, cfg: EngineConfig):
-        if cfg.codec != "uncompressed" and cfg.codec not in _STREAM_CODECS:
-            raise ValueError(
-                f"engine codec must be one of {('uncompressed', *_STREAM_CODECS)}, "
-                f"got {cfg.codec!r}"
-            )
-        self.cfg = cfg
-        self.dim = index.dim
-        self.n_docs = index.fwd.n_docs
-        self.value_scale = float(index.fwd.value_format.scale)
-        self.arrays = self._build_arrays(index)
-        self._search = jax.jit(
-            jax.vmap(
-                partial(search_one_fn, cfg, self.n_docs, self.value_scale, self.arrays)
-            )
+    def to_retriever(self) -> RetrieverConfig:
+        return RetrieverConfig(
+            engine="seismic",
+            codec=self.codec,
+            k=self.k,
+            params={"cut": self.cut, "block_budget": self.block_budget,
+                    "n_probe": self.n_probe},
         )
 
-    # ------------------------------------------------------------------
-    def _build_arrays(self, index: SeismicIndex) -> dict:
-        cfg = self.cfg
-        fwd = index.fwd
-        n_blocks = index.n_blocks
 
-        s_len = np.diff(index.summary_indptr)
-        s_max = int(max(s_len.max(initial=1), 1))
-        sum_comps = np.zeros((n_blocks, s_max), dtype=np.int32)
-        sum_vals = np.zeros((n_blocks, s_max), dtype=np.float32)
-        for b in range(n_blocks):
-            s, e = int(index.summary_indptr[b]), int(index.summary_indptr[b + 1])
-            sum_comps[b, : e - s] = index.summary_comps[s:e]
-            sum_vals[b, : e - s] = (
-                index.summary_vals[s:e].astype(np.float32) * index.params.summary_scale
-            )
-
-        b_len = np.diff(index.block_doc_indptr)
-        bs_max = int(max(b_len.max(initial=1), 1))
-        block_docs = np.full((n_blocks, bs_max), self.n_docs, dtype=np.int32)
-        for b in range(n_blocks):
-            s, e = int(index.block_doc_indptr[b]), int(index.block_doc_indptr[b + 1])
-            block_docs[b, : e - s] = index.block_docs[s:e]
-
-        arrays = {
-            "cbs": jnp.asarray(index.comp_block_indptr[:-1].astype(np.int32)),
-            "cbl": jnp.asarray(np.diff(index.comp_block_indptr).astype(np.int32)),
-            "sum_comps": jnp.asarray(sum_comps),
-            "sum_vals": jnp.asarray(sum_vals),
-            "block_docs": jnp.asarray(block_docs),
-        }
-        # per-doc rescoring rows under the configured codec — one shared
-        # layout implementation for every codec (core/layout.py)
-        rows = layout.pack_rows(fwd, codec=cfg.codec)
-        arrays.update({k: jnp.asarray(v) for k, v in rows.arrays().items()})
-        return arrays
-
-    # ------------------------------------------------------------------
-    def search_batch(self, Q: jnp.ndarray):
-        """[nq, dim] dense queries → (ids [nq, k], scores [nq, k])."""
-        return self._search(Q)
-
-
-def make_sharded_search(
-    mesh,
-    cfg: EngineConfig,
-    n_docs_local: int,
-    n_docs_global: int,
-    value_scale: float,
-    *,
-    index_axis: str = "model",
-    query_axes: tuple[str, ...] = ("data",),
-):
-    """Distributed two-phase search (DESIGN.md §4).
-
-    The index is pre-partitioned into ``mesh.shape[index_axis]``
-    self-contained sub-indexes (arrays carry a leading shard dim,
-    sharded over ``index_axis``; ``idmap`` [n_shards, n_docs_local+1]
-    maps local → global doc ids, sentinel → n_docs_global). Queries
-    shard over ``query_axes`` and replicate across index shards; each
-    device searches its shard, then an O(k) all-gather + top-k merge
-    produces the global result. Collective bytes per query: 8·k·n_shards."""
-    from jax.sharding import PartitionSpec as P
-
-    def local(arrays, idmap, Q):
-        arrays = jax.tree.map(lambda a: a[0], arrays)  # drop shard dim
-        idmap = idmap[0]
-        ids, scores = jax.vmap(
-            partial(search_one_fn, cfg, n_docs_local, value_scale, arrays)
-        )(Q)
-        gids = jnp.take(idmap, ids)  # [nq_local, k] global ids
-        # merge across index shards: all-gather per-shard top-k
-        ag_s = jax.lax.all_gather(scores, index_axis)  # [S, nq, k]
-        ag_i = jax.lax.all_gather(gids, index_axis)
-        S, nq, k = ag_s.shape
-        flat_s = ag_s.transpose(1, 0, 2).reshape(nq, S * k)
-        flat_i = ag_i.transpose(1, 0, 2).reshape(nq, S * k)
-        # a document's blocks scatter across shards → the same doc can be
-        # reported by several shards; dedupe by id before the final top-k
-        order = jnp.argsort(flat_i, axis=1)
-        si = jnp.take_along_axis(flat_i, order, axis=1)
-        ss = jnp.take_along_axis(flat_s, order, axis=1)
-        dup = jnp.concatenate(
-            [jnp.zeros((nq, 1), bool), si[:, 1:] == si[:, :-1]], axis=1
-        )
-        ss = jnp.where(dup | (si >= n_docs_global), -jnp.inf, ss)
-        top_s, pos = jax.lax.top_k(ss, cfg.k)
-        top_i = jnp.take_along_axis(si, pos, axis=1)
-        return top_i, top_s
-
-    qa = query_axes or None
-    return jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(index_axis), P(index_axis), P(qa, None)),
-        out_specs=(P(qa, None), P(qa, None)),
-        check_vma=False,
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.serve.engine.{old} is deprecated; use {new}",
+        DeprecationWarning,
+        stacklevel=3,
     )
 
 
-def build_shard_arrays(index: SeismicIndex, cfg: EngineConfig, n_shards: int):
-    """Partition a SeismicIndex into ``n_shards`` self-contained
-    sub-indexes (blocks round-robin, docs by ownership) and stack their
-    engine arrays with a leading shard dim. Returns (arrays, idmap,
-    n_docs_local)."""
-    full = BatchedSeismic(index, cfg)
-    A = full.arrays
-    n_blocks = int(A["block_docs"].shape[0])
-    dim = index.dim
+def search_one_fn(cfg: EngineConfig, n_docs: int, value_scale: float, arrays: dict, q):
+    return api.get_engine("seismic").search_one(
+        cfg.to_retriever(), n_docs, value_scale, arrays, q
+    )
 
-    shard_arrays, idmaps, docs_local_max = [], [], 0
-    shard_docs: list[np.ndarray] = []
-    for s in range(n_shards):
-        blocks = np.arange(s, n_blocks, n_shards)
-        docs = np.unique(np.asarray(A["block_docs"])[blocks])
-        docs = docs[docs < full.n_docs]
-        shard_docs.append(docs)
-        docs_local_max = max(docs_local_max, len(docs))
 
-    for s in range(n_shards):
-        blocks = np.arange(s, n_blocks, n_shards)
-        docs = shard_docs[s]
-        g2l = np.full(full.n_docs + 1, docs_local_max, dtype=np.int32)
-        g2l[docs] = np.arange(len(docs), dtype=np.int32)
-        # comp → local block ranges: blocks of comp c in this shard are
-        # contiguous in the round-robin order
-        cbs = np.asarray(A["cbs"])
-        cbl = np.asarray(A["cbl"])
-        lcbs = (cbs - s + n_shards - 1) // n_shards
-        lcbl = (cbs + cbl - s + n_shards - 1) // n_shards - lcbs
-        sub = {
-            "cbs": lcbs.astype(np.int32),
-            "cbl": np.maximum(lcbl, 0).astype(np.int32),
-            "sum_comps": np.asarray(A["sum_comps"])[blocks],
-            "sum_vals": np.asarray(A["sum_vals"])[blocks],
-            "block_docs": g2l[np.asarray(A["block_docs"])[blocks]],
-        }
-        row_keys = [k for k in ("vals_rows", "nnz_rows", "comps_rows", "ctrl_rows", "data_rows") if k in A]
-        pad_rows = np.concatenate([docs, np.full(docs_local_max - len(docs) + 1, full.n_docs)])
-        for k in row_keys:
-            sub[k] = np.asarray(A[k])[pad_rows]
-        shard_arrays.append(sub)
-        idmap = np.full(docs_local_max + 1, full.n_docs, dtype=np.int32)
-        idmap[: len(docs)] = docs
-        idmaps.append(idmap)
+def engine_array_specs(cfg: EngineConfig, **dims) -> dict:
+    return api.get_engine("seismic").array_specs(cfg.to_retriever(), **dims)
 
-    stacked = {
-        k: jnp.asarray(v)
-        for k, v in layout.pad_stack(
-            shard_arrays, pad_values={"block_docs": docs_local_max}
-        ).items()
-    }
-    return stacked, jnp.asarray(np.stack(idmaps)), docs_local_max
+
+class BatchedSeismic(api.Retriever):
+    """Legacy wrapper: SeismicIndex + EngineConfig → ``api.Retriever``."""
+
+    def __init__(self, index, cfg: EngineConfig):
+        _warn("BatchedSeismic", "api.Retriever.from_host_index")
+        r = api.Retriever.from_host_index(index, cfg.to_retriever())
+        self.__dict__.update(r.__dict__)
+        self.legacy_cfg = cfg
+
+
+def make_sharded_search(mesh, cfg: EngineConfig, n_docs_local, n_docs_global,
+                        value_scale, *, index_axis="model", query_axes=("data",)):
+    _warn("make_sharded_search", "api.make_sharded_search")
+    return api.make_sharded_search(
+        mesh, cfg.to_retriever(), n_docs_local, n_docs_global, value_scale,
+        index_axis=index_axis, query_axes=query_axes,
+    )
+
+
+def build_shard_arrays(index, cfg: EngineConfig, n_shards: int):
+    _warn("build_shard_arrays", "api.build_shard_arrays")
+    return api.build_shard_arrays(
+        index.fwd, cfg.to_retriever(), n_shards, host_index=index
+    )

@@ -1,0 +1,11 @@
+"""Built-in engine registrations for ``repro.serve.api`` (DESIGN.md §7).
+
+Importing this package registers the three shipped engines — the
+inverted-index ``seismic`` two-phase probe, the graph-based ``hnsw``
+beam search, and the exact ``flat`` full scan (the recall oracle that
+also proves the registry is open). ``api.get_engine`` imports it
+lazily, so consumers never need to."""
+
+from . import flat, hnsw, seismic  # noqa: F401
+
+__all__ = ["seismic", "hnsw", "flat"]

@@ -1,0 +1,84 @@
+"""Flat registry entry: exact full scan over the packed row form.
+
+The trivial third engine (DESIGN.md §7): no pruning structure at all —
+every query scores every document's row and takes the global top-k.
+It exists for two reasons: it proves the ``register_engine`` registry
+is open (an engine is just arrays + a pure ``search_one``), and it is
+the *recall oracle* — its top-k under any codec is the exact answer
+the approximate engines are measured against, computed on device
+through the very same decode path they use.
+
+O(N·L) per query, so serve it on small collections (tests, smoke
+gates, truth generation) — that is its job.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout
+from repro.core.forward_index import ForwardIndex
+from repro.core.scoring import score_candidate_rows
+
+from ..api import EngineImpl, RetrieverConfig, register_engine, row_array_specs
+
+__all__ = ["FlatEngine"]
+
+
+@register_engine("flat")
+class FlatEngine(EngineImpl):
+    name = "flat"
+    dedupe_merge = False  # contiguous doc ranges are disjoint
+    defaults: dict = {}  # nothing to tune — that is the point
+
+    # -- host-side build ------------------------------------------------
+    def build_arrays(self, fwd: ForwardIndex, cfg: RetrieverConfig):
+        return layout.pack_rows(fwd, codec=cfg.codec).arrays()
+
+    # -- serving --------------------------------------------------------
+    def search_one(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, q):
+        """One dense query → (ids [k], scores [k]): score ALL rows."""
+        docs = jnp.arange(arrays["nnz_rows"].shape[0], dtype=jnp.int32)
+        scores = score_candidate_rows(cfg.codec, arrays, docs, q, value_scale)
+        scores = jnp.where(docs < n_docs, scores, -jnp.inf)
+        top_s, idx = jax.lax.top_k(scores, cfg.k)
+        return jnp.take(docs, idx), top_s
+
+    def array_specs(
+        self,
+        cfg: RetrieverConfig,
+        *,
+        n_docs: int,
+        l_max: int,
+        d_max: int,
+        value_dtype=jnp.float16,
+        **_ignored,
+    ):
+        return row_array_specs(
+            cfg.codec, n_docs=n_docs, l_max=l_max, d_max=d_max,
+            value_dtype=value_dtype,
+        )
+
+    # -- sharded build --------------------------------------------------
+    def shard_build(self, fwd: ForwardIndex, cfg: RetrieverConfig, n_shards: int):
+        """Contiguous doc ranges, rows padded to a common local size."""
+        import numpy as np
+
+        n = fwd.n_docs
+        docs_local = (n + n_shards - 1) // n_shards
+        dicts, idmaps = [], []
+        for s in range(n_shards):
+            lo, hi = s * docs_local, min((s + 1) * docs_local, n)
+            sub_docs = [fwd.doc(d) for d in range(lo, hi)]
+            n_real = len(sub_docs)
+            while len(sub_docs) < docs_local:
+                sub_docs.append((np.zeros(0, np.uint32), np.zeros(0, np.float32)))
+            padded = ForwardIndex.from_docs(
+                sub_docs, fwd.dim, value_format=fwd.value_format.name
+            )
+            dicts.append(layout.pack_rows(padded, codec=cfg.codec).arrays())
+            idmap = np.full(docs_local + 1, n, dtype=np.int32)
+            idmap[:n_real] = np.arange(lo, hi, dtype=np.int32)
+            idmaps.append(idmap)
+        return dicts, idmaps, docs_local, {}

@@ -1,0 +1,195 @@
+"""HNSW registry entry: batched, static-shape beam search over the
+graph built by ``repro.core.hnsw`` (DESIGN.md §5).
+
+The hierarchy collapses to the base-layer fixed-degree adjacency
+``adj [N+1, M]`` plus ``n_seeds`` query-independent entry hubs; the
+heap becomes a fixed-width beam: each of ``iters`` ``lax.fori_loop``
+steps expands the best not-yet-expanded beam node, gathers its M
+neighbours, masks the already-seen ones with a visited bitmask
+``[N+1]``, scores the rest exactly through the shared packed row form
+(``scoring.score_candidate_rows`` — every codec registered in
+core/layout.py works unmodified), and top-k-merges them back into the
+beam. This is the paper's hot path on a graph access pattern: one row
+decoded per visited node, no block reuse to amortise against.
+
+Distribution (DESIGN.md §4): documents split into contiguous ranges,
+one self-contained sub-graph per range; ranges are disjoint so the
+generic merge needs no dedupe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout
+from repro.core.forward_index import ForwardIndex
+from repro.core.hnsw import HNSWIndex, HNSWParams
+from repro.core.scoring import score_candidate_rows
+
+from ..api import EngineImpl, RetrieverConfig, register_engine, row_array_specs
+
+__all__ = ["HNSWEngine"]
+
+
+@register_engine("hnsw")
+class HNSWEngine(EngineImpl):
+    name = "hnsw"
+    dedupe_merge = False  # contiguous doc ranges are disjoint
+    defaults = {
+        # search-time (static beam)
+        "beam": 64,  # beam width (the static ef)
+        "iters": 64,  # nodes expanded (fori_loop trip count)
+        "n_seeds": 8,  # query-independent entry hubs
+        # build-time (host HNSWIndex)
+        "m": 16,
+        "m0": None,
+        "ef_construction": 64,
+        "seed": 0,
+    }
+
+    def params(self, cfg: RetrieverConfig):
+        p = super().params(cfg)
+        if p["n_seeds"] > p["beam"]:
+            raise ValueError("n_seeds must not exceed beam width")
+        return p
+
+    # -- host-side build ------------------------------------------------
+    def host_params(self, cfg: RetrieverConfig) -> HNSWParams:
+        p = self.params(cfg)
+        return HNSWParams(
+            m=p["m"], m0=p["m0"], ef_construction=p["ef_construction"], seed=p["seed"]
+        )
+
+    def host_index(self, fwd, cfg: RetrieverConfig) -> HNSWIndex:
+        return HNSWIndex.build(fwd, self.host_params(cfg))
+
+    def build_arrays(self, fwd, cfg: RetrieverConfig):
+        return self.arrays_from_index(self.host_index(fwd, cfg), cfg)
+
+    def arrays_from_index(self, index: HNSWIndex, cfg: RetrieverConfig):
+        p = self.params(cfg)
+        arrays = {
+            "adj": index.adjacency(0),
+            "seeds": index.seed_nodes(p["n_seeds"]),
+        }
+        arrays.update(layout.pack_rows(index.fwd, codec=cfg.codec).arrays())
+        return arrays
+
+    # -- serving --------------------------------------------------------
+    def search_one(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, q):
+        """One dense query → (ids [k], scores [k]). Pure and static-shape.
+
+        arrays: adj [N+1, M], seeds [n_seeds], plus the packed row form.
+        Sentinel id ``n_docs`` gathers the all-zero row / all-sentinel
+        adjacency row and scores −inf, so padding is self-absorbing."""
+        p = self.params(cfg)
+        beam, iters = p["beam"], p["iters"]
+
+        def score_docs(docs):
+            return score_candidate_rows(cfg.codec, arrays, docs, q, value_scale)
+
+        seeds = arrays["seeds"]  # i32 [n_seeds], sentinel-padded
+        live = seeds < n_docs
+        ids = jnp.concatenate(
+            [seeds, jnp.full((beam - seeds.shape[0],), n_docs, jnp.int32)]
+        )
+        scores = jnp.concatenate(
+            [
+                jnp.where(live, score_docs(seeds), -jnp.inf),
+                jnp.full((beam - seeds.shape[0],), -jnp.inf),
+            ]
+        )
+        expanded = ids >= n_docs  # sentinel slots never expand
+        visited = jnp.zeros(n_docs + 1, bool).at[seeds].set(True)
+
+        def body(_, carry):
+            ids, scores, expanded, visited = carry
+            # best not-yet-expanded beam node (−inf everywhere ⇒ harmless
+            # re-pick of slot 0: its neighbours are all visited/sentinel)
+            b = jnp.argmax(jnp.where(expanded, -jnp.inf, scores))
+            v = ids[b]
+            expanded = expanded.at[b].set(True)
+            nbrs = jnp.take(arrays["adj"], v, axis=0)  # [M]
+            fresh = (nbrs < n_docs) & ~visited[nbrs]
+            nbrs = jnp.where(fresh, nbrs, n_docs)
+            visited = visited.at[nbrs].set(True)
+            ns = jnp.where(fresh, score_docs(nbrs), -jnp.inf)
+            # top-k merge of beam ∪ neighbours (ids unique by visited-mask)
+            all_ids = jnp.concatenate([ids, nbrs])
+            all_s = jnp.concatenate([scores, ns])
+            all_e = jnp.concatenate([expanded, ~fresh])
+            top_s, idx = jax.lax.top_k(all_s, beam)
+            return jnp.take(all_ids, idx), top_s, jnp.take(all_e, idx), visited
+
+        ids, scores, _, _ = jax.lax.fori_loop(
+            0, iters, body, (ids, scores, expanded, visited)
+        )
+        top_s, idx = jax.lax.top_k(scores, cfg.k)
+        return jnp.take(ids, idx), top_s
+
+    def array_specs(
+        self,
+        cfg: RetrieverConfig,
+        *,
+        n_docs: int,
+        degree: int,
+        l_max: int,
+        d_max: int,
+        value_dtype=jnp.float16,
+    ):
+        p = self.params(cfg)
+        sds = jax.ShapeDtypeStruct
+        arrays = {
+            "adj": sds((n_docs + 1, degree), jnp.int32),
+            "seeds": sds((p["n_seeds"],), jnp.int32),
+        }
+        arrays.update(
+            row_array_specs(
+                cfg.codec, n_docs=n_docs, l_max=l_max, d_max=d_max,
+                value_dtype=value_dtype,
+            )
+        )
+        return arrays
+
+    # -- sharded build --------------------------------------------------
+    def shard_build(self, fwd: ForwardIndex, cfg: RetrieverConfig, n_shards: int):
+        """Split documents into contiguous ranges; build one
+        self-contained sub-graph per range (range-LOCAL ids)."""
+        p = self.params(cfg)
+        hp = self.host_params(cfg)
+        n = fwd.n_docs
+        docs_local = (n + n_shards - 1) // n_shards
+        dicts, idmaps = [], []
+        for s in range(n_shards):
+            lo, hi = s * docs_local, min((s + 1) * docs_local, n)
+            sub_docs = [fwd.doc(d) for d in range(lo, hi)]
+            n_real = len(sub_docs)
+            sub = ForwardIndex.from_docs(
+                sub_docs, fwd.dim, value_format=fwd.value_format.name
+            )
+            index = HNSWIndex.build(sub, hp)
+            # embed the sub-graph into the padded local id space: rows
+            # past n_real stay all-sentinel, unreachable by search
+            adj = np.full(
+                (docs_local + 1, hp.degree(0)), docs_local, dtype=np.int32
+            )
+            adj[:n_real] = index.adjacency(0, sentinel=docs_local)[:n_real]
+            # tail padding: empty docs, so row arrays reach docs_local+1
+            while len(sub_docs) < docs_local:
+                sub_docs.append((np.zeros(0, np.uint32), np.zeros(0, np.float32)))
+            padded = ForwardIndex.from_docs(
+                sub_docs, fwd.dim, value_format=fwd.value_format.name
+            )
+            dicts.append(
+                {
+                    "adj": adj,
+                    "seeds": index.seed_nodes(p["n_seeds"], sentinel=docs_local),
+                    **layout.pack_rows(padded, codec=cfg.codec).arrays(),
+                }
+            )
+            idmap = np.full(docs_local + 1, n, dtype=np.int32)
+            idmap[:n_real] = np.arange(lo, hi, dtype=np.int32)
+            idmaps.append(idmap)
+        return dicts, idmaps, docs_local, {"adj": docs_local, "seeds": docs_local}

@@ -1,283 +1,86 @@
-"""Batched, static-shape HNSW serving engine (TPU adaptation).
+"""DEPRECATED shim — the batched HNSW engine now lives behind the
+engine registry in ``repro.serve.api`` (DESIGN.md §7).
 
-The host-side reference (repro.core.hnsw) has faithful heap-and-early-
-exit semantics but data-dependent control flow. Serving uses the static
-beam-search relaxation (DESIGN.md §5):
+Everything here delegates to ``api.Retriever`` /
+``api.get_engine("hnsw")`` and is kept for ONE release so external
+callers of the PR-2 surface keep working. New code should use:
 
-* the hierarchy collapses to the base-layer fixed-degree adjacency
-  ``adj [N+1, M]`` plus ``n_seeds`` query-independent entry hubs (the
-  global entry point and the highest-level nodes);
-* the heap becomes a fixed-width beam: each of ``iters`` loop steps
-  (``lax.fori_loop``) expands the best not-yet-expanded beam node,
-  gathers its M neighbours, masks the already-seen ones with a visited
-  bitmask ``[N+1]``, scores the rest exactly, and top-k-merges them
-  back into the beam;
-* candidate scoring gathers the candidate's ROW of the packed row form
-  (``layout.pack_rows``) and decodes it on the fly with whatever codec
-  is configured — ``scoring.decode_doc_rows`` — so every codec
-  registered in core/layout.py works unmodified. This is the paper's
-  hot path on a graph access pattern: one row decoded per visited
-  node, no block reuse to amortise against.
-
-``search_one_fn`` is a *pure* function of (arrays, query), mirroring
-``repro.serve.engine.search_one_fn``: the same code serves the jit'd
-production path, dry-run ShapeDtypeStructs, and the tests.
-Distribution (DESIGN.md §4): documents split into contiguous ranges,
-one self-contained sub-graph per range, arrays row-sharded over the
-flat mesh; per-shard top-k merges with an O(k) all-gather.
+    from repro.serve.api import Retriever, RetrieverConfig
+    r = Retriever.build(fwd, RetrieverConfig(engine="hnsw", codec=...))
+    ids, scores = r.search(Q)
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import layout
 from repro.core.forward_index import ForwardIndex
-from repro.core.hnsw import HNSWIndex, HNSWParams
-from repro.core.scoring import decode_doc_rows, score_doc_rows
+from repro.core.hnsw import HNSWParams
 
-__all__ = [
-    "BatchedHNSW",
-    "GraphConfig",
-    "search_one_fn",
-    "graph_array_specs",
-    "make_sharded_search",
-    "build_shard_arrays",
-]
+from . import api
+from .api import RetrieverConfig
 
-#: codecs with a (ctrl, data) row stream decoded on the fly
-_STREAM_CODECS = ("dotvbyte", "streamvbyte")
+__all__ = ["BatchedHNSW", "GraphConfig", "search_one_fn", "graph_array_specs",
+           "make_sharded_search", "build_shard_arrays"]
 
 
 @dataclasses.dataclass(frozen=True)
 class GraphConfig:
-    beam: int = 64  # beam width (the static ef)
-    iters: int = 64  # nodes expanded (fori_loop trip count)
-    n_seeds: int = 8  # query-independent entry hubs
+    """Legacy HNSW search config; superseded by ``RetrieverConfig``."""
+
+    beam: int = 64
+    iters: int = 64
+    n_seeds: int = 8
     k: int = 10
-    codec: str = "uncompressed"  # "uncompressed" | "dotvbyte" | "streamvbyte"
+    codec: str = "uncompressed"
+
+    def to_retriever(self, params: HNSWParams | None = None) -> RetrieverConfig:
+        knobs = {"beam": self.beam, "iters": self.iters, "n_seeds": self.n_seeds}
+        if params is not None:
+            knobs.update(m=params.m, m0=params.m0,
+                         ef_construction=params.ef_construction, seed=params.seed)
+        return RetrieverConfig(engine="hnsw", codec=self.codec, k=self.k, params=knobs)
+
+
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.serve.graph_engine.{old} is deprecated; use {new}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def search_one_fn(cfg: GraphConfig, n_docs: int, value_scale: float, arrays: dict, q):
-    """One dense query → (ids [k], scores [k]). Pure and static-shape.
-
-    arrays: adj [N+1, M], seeds [n_seeds], vals_rows [N+1, L],
-    nnz_rows [N+1], and comps_rows | (ctrl_rows, data_rows).
-    Sentinel id ``n_docs`` gathers the all-zero row / all-sentinel
-    adjacency row and scores −inf, so padding is self-absorbing."""
-
-    def score_docs(docs):
-        vals = jnp.take(arrays["vals_rows"], docs, axis=0)
-        nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
-        if cfg.codec in _STREAM_CODECS:
-            ctrl = jnp.take(arrays["ctrl_rows"], docs, axis=0)
-            data = jnp.take(arrays["data_rows"], docs, axis=0)
-            comps = decode_doc_rows(cfg.codec, ctrl, data)
-        else:
-            comps = jnp.take(arrays["comps_rows"], docs, axis=0)
-        return score_doc_rows(q, comps, vals, nnz, value_scale)
-
-    seeds = arrays["seeds"]  # i32 [n_seeds], sentinel-padded
-    live = seeds < n_docs
-    ids = jnp.concatenate(
-        [seeds, jnp.full((cfg.beam - seeds.shape[0],), n_docs, jnp.int32)]
-    )
-    scores = jnp.concatenate(
-        [
-            jnp.where(live, score_docs(seeds), -jnp.inf),
-            jnp.full((cfg.beam - seeds.shape[0],), -jnp.inf),
-        ]
-    )
-    expanded = ids >= n_docs  # sentinel slots never expand
-    visited = jnp.zeros(n_docs + 1, bool).at[seeds].set(True)
-
-    def body(_, carry):
-        ids, scores, expanded, visited = carry
-        # best not-yet-expanded beam node (−inf everywhere ⇒ harmless
-        # re-pick of slot 0: its neighbours are all visited or sentinel)
-        b = jnp.argmax(jnp.where(expanded, -jnp.inf, scores))
-        v = ids[b]
-        expanded = expanded.at[b].set(True)
-        nbrs = jnp.take(arrays["adj"], v, axis=0)  # [M]
-        fresh = (nbrs < n_docs) & ~visited[nbrs]
-        nbrs = jnp.where(fresh, nbrs, n_docs)
-        visited = visited.at[nbrs].set(True)
-        ns = jnp.where(fresh, score_docs(nbrs), -jnp.inf)
-        # top-k merge of beam ∪ neighbours (ids unique by visited-mask)
-        all_ids = jnp.concatenate([ids, nbrs])
-        all_s = jnp.concatenate([scores, ns])
-        all_e = jnp.concatenate([expanded, ~fresh])
-        top_s, idx = jax.lax.top_k(all_s, cfg.beam)
-        return jnp.take(all_ids, idx), top_s, jnp.take(all_e, idx), visited
-
-    ids, scores, _, _ = jax.lax.fori_loop(
-        0, cfg.iters, body, (ids, scores, expanded, visited)
-    )
-    top_s, idx = jax.lax.top_k(scores, cfg.k)
-    return jnp.take(ids, idx), top_s
-
-
-def graph_array_specs(
-    cfg: GraphConfig,
-    *,
-    n_docs: int,
-    degree: int,
-    l_max: int,
-    d_max: int,
-    value_dtype=jnp.float16,
-) -> dict:
-    """ShapeDtypeStruct stand-ins for the engine arrays (dry-run)."""
-    sds = jax.ShapeDtypeStruct
-    arrays = {
-        "adj": sds((n_docs + 1, degree), jnp.int32),
-        "seeds": sds((cfg.n_seeds,), jnp.int32),
-        "vals_rows": sds((n_docs + 1, l_max), value_dtype),
-        "nnz_rows": sds((n_docs + 1,), jnp.int32),
-    }
-    if cfg.codec in _STREAM_CODECS:
-        ctrl_group = 8 if cfg.codec == "dotvbyte" else 4
-        arrays["ctrl_rows"] = sds((n_docs + 1, l_max // ctrl_group), jnp.uint8)
-        arrays["data_rows"] = sds((n_docs + 1, d_max), jnp.uint8)
-    else:
-        arrays["comps_rows"] = sds((n_docs + 1, l_max), jnp.int32)
-    return arrays
-
-
-class BatchedHNSW:
-    """Static-array view of an HNSWIndex + jit'd batched beam search."""
-
-    def __init__(self, index: HNSWIndex, cfg: GraphConfig):
-        if cfg.codec != "uncompressed" and cfg.codec not in _STREAM_CODECS:
-            raise ValueError(
-                f"engine codec must be one of {('uncompressed', *_STREAM_CODECS)}, "
-                f"got {cfg.codec!r}"
-            )
-        if cfg.n_seeds > cfg.beam:
-            raise ValueError("n_seeds must not exceed beam width")
-        self.cfg = cfg
-        self.dim = index.dim
-        self.n_docs = index.fwd.n_docs
-        self.value_scale = float(index.fwd.value_format.scale)
-        self.arrays = self._build_arrays(index)
-        self._search = jax.jit(
-            jax.vmap(
-                partial(search_one_fn, cfg, self.n_docs, self.value_scale, self.arrays)
-            )
-        )
-
-    def _build_arrays(self, index: HNSWIndex) -> dict:
-        arrays = {
-            "adj": jnp.asarray(index.adjacency(0)),
-            "seeds": jnp.asarray(index.seed_nodes(self.cfg.n_seeds)),
-        }
-        rows = layout.pack_rows(index.fwd, codec=self.cfg.codec)
-        arrays.update({k: jnp.asarray(v) for k, v in rows.arrays().items()})
-        return arrays
-
-    def search_batch(self, Q):
-        """[nq, dim] dense queries → (ids [nq, k], scores [nq, k])."""
-        return self._search(jnp.asarray(Q))
-
-
-def make_sharded_search(
-    mesh,
-    cfg: GraphConfig,
-    n_docs_local: int,
-    n_docs_global: int,
-    value_scale: float,
-    *,
-    index_axis: str = "model",
-    query_axes: tuple[str, ...] = ("data",),
-):
-    """Distributed graph search (DESIGN.md §4 / §5).
-
-    Each of ``mesh.shape[index_axis]`` shards owns a contiguous doc
-    range with its own self-contained sub-graph (arrays carry a leading
-    shard dim; ``idmap`` [n_shards, n_docs_local+1] maps local → global
-    ids, sentinel → n_docs_global). Queries shard over ``query_axes``
-    and replicate across index shards; doc ranges are disjoint so the
-    merge is a plain all-gather + top-k, no dedupe. Collective bytes
-    per query: 8·k·n_shards."""
-    from jax.sharding import PartitionSpec as P
-
-    def local(arrays, idmap, Q):
-        arrays = jax.tree.map(lambda a: a[0], arrays)  # drop shard dim
-        idmap = idmap[0]
-        ids, scores = jax.vmap(
-            partial(search_one_fn, cfg, n_docs_local, value_scale, arrays)
-        )(Q)
-        gids = jnp.take(idmap, ids)  # [nq_local, k] global ids
-        ag_s = jax.lax.all_gather(scores, index_axis)  # [S, nq, k]
-        ag_i = jax.lax.all_gather(gids, index_axis)
-        S, nq, k = ag_s.shape
-        flat_s = ag_s.transpose(1, 0, 2).reshape(nq, S * k)
-        flat_i = ag_i.transpose(1, 0, 2).reshape(nq, S * k)
-        flat_s = jnp.where(flat_i >= n_docs_global, -jnp.inf, flat_s)
-        top_s, pos = jax.lax.top_k(flat_s, cfg.k)
-        return jnp.take_along_axis(flat_i, pos, axis=1), top_s
-
-    qa = query_axes or None
-    return jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(index_axis), P(index_axis), P(qa, None)),
-        out_specs=(P(qa, None), P(qa, None)),
-        check_vma=False,
+    return api.get_engine("hnsw").search_one(
+        cfg.to_retriever(), n_docs, value_scale, arrays, q
     )
 
 
-def build_shard_arrays(
-    fwd: ForwardIndex,
-    cfg: GraphConfig,
-    n_shards: int,
-    params: HNSWParams = HNSWParams(),
-):
-    """Split documents into ``n_shards`` contiguous ranges, build one
-    self-contained HNSW sub-graph per range (range-LOCAL ids), and
-    ``pad_stack`` the engine arrays with a leading shard dim. Returns
-    (arrays, idmap, n_docs_local)."""
-    n = fwd.n_docs
-    docs_local = (n + n_shards - 1) // n_shards
-    dicts, idmaps = [], []
-    for s in range(n_shards):
-        lo, hi = s * docs_local, min((s + 1) * docs_local, n)
-        sub_docs = [fwd.doc(d) for d in range(lo, hi)]
-        n_real = len(sub_docs)
-        sub = ForwardIndex.from_docs(sub_docs, fwd.dim, value_format=fwd.value_format.name)
-        index = HNSWIndex.build(sub, params)
-        # embed the sub-graph into the padded local id space: rows past
-        # n_real stay all-sentinel (= docs_local), unreachable by search
-        adj = np.full(
-            (docs_local + 1, params.degree(0)), docs_local, dtype=np.int32
-        )
-        adj[:n_real] = index.adjacency(0, sentinel=docs_local)[:n_real]
-        # tail padding: empty docs, so the row arrays reach docs_local+1
-        while len(sub_docs) < docs_local:
-            sub_docs.append((np.zeros(0, np.uint32), np.zeros(0, np.float32)))
-        padded = ForwardIndex.from_docs(
-            sub_docs, fwd.dim, value_format=fwd.value_format.name
-        )
-        rows = layout.pack_rows(padded, codec=cfg.codec)
-        dicts.append(
-            {
-                "adj": adj,
-                "seeds": index.seed_nodes(cfg.n_seeds, sentinel=docs_local),
-                **rows.arrays(),
-            }
-        )
-        idmap = np.full(docs_local + 1, n, dtype=np.int32)
-        idmap[:n_real] = np.arange(lo, hi, dtype=np.int32)
-        idmaps.append(idmap)
+def graph_array_specs(cfg: GraphConfig, **dims) -> dict:
+    return api.get_engine("hnsw").array_specs(cfg.to_retriever(), **dims)
 
-    stacked = {
-        k: jnp.asarray(v)
-        for k, v in layout.pad_stack(
-            dicts, pad_values={"adj": docs_local, "seeds": docs_local}
-        ).items()
-    }
-    return stacked, jnp.asarray(np.stack(idmaps)), docs_local
+
+class BatchedHNSW(api.Retriever):
+    """Legacy wrapper: HNSWIndex + GraphConfig → ``api.Retriever``."""
+
+    def __init__(self, index, cfg: GraphConfig):
+        _warn("BatchedHNSW", "api.Retriever.from_host_index")
+        r = api.Retriever.from_host_index(index, cfg.to_retriever())
+        self.__dict__.update(r.__dict__)
+        self.legacy_cfg = cfg
+
+
+def make_sharded_search(mesh, cfg: GraphConfig, n_docs_local, n_docs_global,
+                        value_scale, *, index_axis="model", query_axes=("data",)):
+    _warn("make_sharded_search", "api.make_sharded_search")
+    return api.make_sharded_search(
+        mesh, cfg.to_retriever(), n_docs_local, n_docs_global, value_scale,
+        index_axis=index_axis, query_axes=query_axes,
+    )
+
+
+def build_shard_arrays(fwd: ForwardIndex, cfg: GraphConfig, n_shards: int,
+                       params: HNSWParams = HNSWParams()):
+    _warn("build_shard_arrays", "api.build_shard_arrays")
+    return api.build_shard_arrays(fwd, cfg.to_retriever(params), n_shards)

@@ -99,19 +99,22 @@ def test_sharded_engine_matches_local():
         import numpy as np, jax, jax.numpy as jnp
         from repro.launch.mesh import make_debug_mesh
         from repro.data.synthetic import SyntheticConfig, generate_collection
-        from repro.core.seismic import SeismicIndex, SeismicParams
-        from repro.serve.engine import (BatchedSeismic, EngineConfig,
-                                        build_shard_arrays, make_sharded_search)
+        from repro.serve.api import (Retriever, RetrieverConfig,
+                                     build_shard_arrays, make_sharded_search)
         mesh = make_debug_mesh((2, 4), ("data", "model"))
         col = generate_collection(SyntheticConfig(
             name="t", dim=2048, n_docs=600, n_queries=8,
             doc_nnz_mean=60.0, query_nnz_mean=16.0, seed=0))
-        idx = SeismicIndex.build(col.fwd, SeismicParams(n_postings=300, block_size=16))
-        ecfg = EngineConfig(cut=8, block_budget=256, n_probe=48, k=10, codec="dotvbyte")
-        local = BatchedSeismic(idx, ecfg)
+        from repro.serve.api import get_engine
+        ecfg = RetrieverConfig(engine="seismic", codec="dotvbyte", k=10,
+                               params=dict(cut=8, block_budget=256, n_probe=48,
+                                           n_postings=300, block_size=16))
+        idx = get_engine("seismic").host_index(col.fwd, ecfg)
+        local = Retriever.from_host_index(idx, ecfg)
         Q = np.stack([col.query_dense(i) for i in range(8)])
-        ids_l, sc_l = local.search_batch(jnp.asarray(Q))
-        arrays, idmap, n_local = build_shard_arrays(idx, ecfg, n_shards=4)
+        ids_l, sc_l = local.search(jnp.asarray(Q))
+        arrays, idmap, n_local = build_shard_arrays(col.fwd, ecfg, n_shards=4,
+                                                    host_index=idx)
         with jax.set_mesh(mesh):
             fn = make_sharded_search(mesh, ecfg, n_local, col.fwd.n_docs, 1.0,
                                      index_axis="model", query_axes=("data",))
@@ -136,18 +139,18 @@ def test_sharded_graph_engine_matches_local():
         import numpy as np, jax, jax.numpy as jnp
         from repro.launch.mesh import make_debug_mesh
         from repro.data.synthetic import SyntheticConfig, generate_collection
-        from repro.core.hnsw import HNSWParams
         from repro.core.seismic import exact_top_k, recall_at_k
-        from repro.serve.graph_engine import (GraphConfig, build_shard_arrays,
-                                              make_sharded_search)
+        from repro.serve.api import (RetrieverConfig, build_shard_arrays,
+                                     make_sharded_search)
         mesh = make_debug_mesh((2, 4), ("data", "model"))
         col = generate_collection(SyntheticConfig(
             name="t", dim=2048, n_docs=400, n_queries=8,
             doc_nnz_mean=60.0, query_nnz_mean=16.0, seed=0))
-        gcfg = GraphConfig(beam=48, iters=48, n_seeds=4, k=10, codec="streamvbyte")
+        gcfg = RetrieverConfig(engine="hnsw", codec="streamvbyte", k=10,
+                               params=dict(beam=48, iters=48, n_seeds=4,
+                                           m=8, ef_construction=32))
         Q = np.stack([col.query_dense(i) for i in range(8)])
-        arrays, idmap, n_local = build_shard_arrays(
-            col.fwd, gcfg, n_shards=4, params=HNSWParams(m=8, ef_construction=32))
+        arrays, idmap, n_local = build_shard_arrays(col.fwd, gcfg, n_shards=4)
         with jax.set_mesh(mesh):
             fn = make_sharded_search(mesh, gcfg, n_local, col.fwd.n_docs, 1.0,
                                      index_axis="model", query_axes=("data",))

@@ -9,9 +9,10 @@ import numpy as np
 import pytest
 
 from repro.core.hnsw import HNSWIndex, HNSWParams
+from repro.core.layout import available_layouts
 from repro.core.seismic import exact_top_k, recall_at_k
 from repro.data.synthetic import SyntheticConfig, generate_collection
-from repro.serve.graph_engine import BatchedHNSW, GraphConfig
+from repro.serve.api import Retriever, RetrieverConfig
 
 PARAMS = HNSWParams(m=16, ef_construction=48, seed=0)
 
@@ -63,11 +64,15 @@ def test_graph_degree_bounds(collection, index):
             assert int(index.levels[node]) >= layer
 
 
-@pytest.mark.parametrize("codec", ["uncompressed", "dotvbyte", "streamvbyte"])
+@pytest.mark.parametrize("codec", available_layouts())
 def test_batched_engine_recall(collection, index, codec):
-    eng = BatchedHNSW(index, GraphConfig(beam=64, iters=64, n_seeds=8, k=10, codec=codec))
+    eng = Retriever.from_host_index(
+        index,
+        RetrieverConfig(engine="hnsw", codec=codec, k=10,
+                        params=dict(beam=64, iters=64, n_seeds=8)),
+    )
     Q = np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
-    ids, scores = eng.search_batch(Q)
+    ids, scores = eng.search(Q)
     recs = []
     for i in range(collection.n_queries):
         true_ids, _ = exact_top_k(collection.fwd, Q[i], 10)
@@ -88,9 +93,12 @@ def test_batched_engine_codec_invariance(collection, index):
     codec decodes the candidates — the paper's claim on algorithm #2."""
     Q = np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
     res = [
-        BatchedHNSW(index, GraphConfig(beam=64, iters=64, n_seeds=8, k=10, codec=c))
-        .search_batch(Q)
-        for c in ("uncompressed", "dotvbyte", "streamvbyte")
+        Retriever.from_host_index(
+            index,
+            RetrieverConfig(engine="hnsw", codec=c,
+                            params=dict(beam=64, iters=64, n_seeds=8)),
+        ).search(Q)
+        for c in available_layouts()
     ]
     for i in range(1, len(res)):
         assert np.array_equal(np.asarray(res[0][0]), np.asarray(res[i][0]))
@@ -130,6 +138,8 @@ def test_empty_and_tiny_index():
     q[7] = 1.0
     ids, scores = idx.search(q, k=1)
     assert ids.tolist() == [0] and scores[0] == pytest.approx(2.0)
-    eng = BatchedHNSW(idx, GraphConfig(beam=8, iters=4, n_seeds=2, k=1))
-    ids, scores = eng.search_batch(q[None, :])
+    eng = Retriever.from_host_index(
+        idx, RetrieverConfig(engine="hnsw", k=1,
+                             params=dict(beam=8, iters=4, n_seeds=2)))
+    ids, scores = eng.search(q[None, :])
     assert np.asarray(ids)[0, 0] == 0

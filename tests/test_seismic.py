@@ -1,11 +1,13 @@
-"""Seismic reference engine + batched TPU engine tests."""
+"""Seismic reference engine + batched TPU engine tests (served through
+the unified ``repro.serve.api`` Retriever, DESIGN.md §7)."""
 
 import numpy as np
 import pytest
 
+from repro.core.layout import available_layouts
 from repro.core.seismic import SeismicIndex, SeismicParams, exact_top_k, recall_at_k
 from repro.data.synthetic import SyntheticConfig, generate_collection
-from repro.serve.engine import BatchedSeismic, EngineConfig
+from repro.serve.api import Retriever, RetrieverConfig
 
 
 @pytest.fixture(scope="module")
@@ -65,11 +67,15 @@ def test_index_bytes_accounting(collection, index):
     assert unc["forward_components"] == 2 * collection.fwd.total_nnz
 
 
-@pytest.mark.parametrize("codec", ["uncompressed", "dotvbyte", "streamvbyte"])
+@pytest.mark.parametrize("codec", available_layouts())
 def test_batched_engine_recall(collection, index, codec):
-    eng = BatchedSeismic(index, EngineConfig(cut=12, block_budget=768, n_probe=96, k=10, codec=codec))
+    eng = Retriever.from_host_index(
+        index,
+        RetrieverConfig(engine="seismic", codec=codec, k=10,
+                        params=dict(cut=12, block_budget=768, n_probe=96)),
+    )
     Q = np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
-    ids, scores = eng.search_batch(Q)
+    ids, scores = eng.search(Q)
     recs = []
     for i in range(collection.n_queries):
         true_ids, _ = exact_top_k(collection.fwd, Q[i], 10)
@@ -84,11 +90,17 @@ def test_batched_engine_recall(collection, index, codec):
 
 
 def test_batched_engine_codec_parity(collection, index):
-    """Components compression is lossless: every stream codec returns the
-    exact same top-k as the uncompressed rows."""
-    cfgs = [EngineConfig(codec=c) for c in ("uncompressed", "dotvbyte", "streamvbyte")]
+    """Components compression is lossless: every registered layout codec
+    (bitpack included) returns the exact same top-k as the uncompressed
+    rows."""
+    codecs = ["uncompressed"] + [c for c in available_layouts() if c != "uncompressed"]
     Q = np.stack([collection.query_dense(i) for i in range(4)])
-    res = [BatchedSeismic(index, c).search_batch(Q) for c in cfgs]
+    res = [
+        Retriever.from_host_index(
+            index, RetrieverConfig(engine="seismic", codec=c)
+        ).search(Q)
+        for c in codecs
+    ]
     for i in range(1, len(res)):
         assert np.array_equal(np.asarray(res[0][0]), np.asarray(res[i][0]))
         np.testing.assert_allclose(

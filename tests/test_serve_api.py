@@ -1,0 +1,185 @@
+"""Unified Retriever API tests (DESIGN.md §7): engine registry,
+artifact lifecycle, codec parity through the one serving surface.
+
+Covers the ISSUE-3 acceptance criteria: save→open round-trip yields
+identical top-k for every engine×codec pair (bitpack and the flat
+engine included), unknown engine/codec names raise listing the known
+ones, and a manifest version mismatch fails loudly rather than
+mis-decoding."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.layout import available_layouts
+from repro.core.seismic import exact_top_k, recall_at_k
+from repro.data.synthetic import SyntheticConfig, generate_collection
+from repro.serve.api import (
+    MANIFEST_VERSION,
+    ArtifactError,
+    Retriever,
+    RetrieverConfig,
+    available_engines,
+    get_engine,
+    open_retriever,
+)
+
+#: per-engine knobs sized for the tiny test collection
+ENGINE_PARAMS = {
+    "seismic": dict(cut=8, block_budget=256, n_probe=48, n_postings=300,
+                    block_size=16),
+    "hnsw": dict(beam=48, iters=48, n_seeds=4, m=8, ef_construction=32),
+    "flat": {},
+}
+
+
+@pytest.fixture(scope="module")
+def collection():
+    cfg = SyntheticConfig(
+        name="test", dim=1024, n_docs=300, n_queries=6,
+        doc_nnz_mean=40.0, query_nnz_mean=12.0, seed=0,
+    )
+    return generate_collection(cfg, value_format="f16")
+
+
+@pytest.fixture(scope="module")
+def queries(collection):
+    return np.stack([collection.query_dense(i) for i in range(collection.n_queries)])
+
+
+@pytest.fixture(scope="module")
+def host_indexes(collection):
+    """One host build per engine; codecs sweep over it."""
+    out = {}
+    for name in available_engines():
+        impl = get_engine(name)
+        if hasattr(impl, "host_index"):
+            cfg = RetrieverConfig(engine=name, params=ENGINE_PARAMS[name])
+            out[name] = impl.host_index(collection.fwd, cfg)
+    return out
+
+
+def _retriever(collection, host_indexes, engine, codec, k=10):
+    cfg = RetrieverConfig(engine=engine, codec=codec, k=k,
+                          params=ENGINE_PARAMS[engine])
+    if engine in host_indexes:
+        return Retriever.from_host_index(host_indexes[engine], cfg)
+    return Retriever.build(collection.fwd, cfg)
+
+
+def test_registry_is_complete():
+    assert {"seismic", "hnsw", "flat"} <= set(available_engines())
+
+
+@pytest.mark.parametrize("engine", ["seismic", "hnsw", "flat"])
+@pytest.mark.parametrize("codec", available_layouts())
+def test_save_open_round_trip(collection, queries, host_indexes, tmp_path,
+                              engine, codec):
+    """The acceptance criterion: a saved artifact reopened in a fresh
+    Retriever returns byte-identical top-k to the in-memory build, for
+    every registered engine×codec pair."""
+    r = _retriever(collection, host_indexes, engine, codec)
+    ids, scores = r.search(queries)
+    art = r.save(tmp_path / f"{engine}-{codec}")
+    r2 = open_retriever(art)
+    assert r2.cfg == r.cfg
+    assert (r2.n_docs, r2.dim, r2.value_format) == (r.n_docs, r.dim, r.value_format)
+    ids2, scores2 = r2.search(queries)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids2))
+    assert np.array_equal(np.asarray(scores), np.asarray(scores2))
+
+
+@pytest.mark.parametrize("engine", ["seismic", "hnsw", "flat"])
+def test_bitpack_topk_parity(collection, queries, host_indexes, engine):
+    """bitpack is served (not just registered): identical top-k to the
+    uncompressed rows on every engine."""
+    base = _retriever(collection, host_indexes, engine, "uncompressed")
+    packed = _retriever(collection, host_indexes, engine, "bitpack")
+    ids_u, sc_u = base.search(queries)
+    ids_b, sc_b = packed.search(queries)
+    assert np.array_equal(np.asarray(ids_u), np.asarray(ids_b))
+    np.testing.assert_allclose(np.asarray(sc_u), np.asarray(sc_b), rtol=1e-5)
+
+
+def test_flat_is_exact_oracle(collection, queries, host_indexes):
+    """The flat engine's top-k is the exact answer — the on-device
+    recall oracle matches the numpy ground truth."""
+    r = _retriever(collection, host_indexes, "flat", "streamvbyte")
+    ids, scores = r.search(queries)
+    for i in range(collection.n_queries):
+        true_ids, true_scores = exact_top_k(collection.fwd, queries[i], 10)
+        assert recall_at_k(true_ids, np.asarray(ids[i])) == 1.0
+        np.testing.assert_allclose(
+            np.sort(np.asarray(scores[i])), np.sort(true_scores), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_search_k_slicing(collection, queries, host_indexes):
+    r = _retriever(collection, host_indexes, "flat", "uncompressed")
+    ids, scores = r.search(queries, k=3)
+    assert ids.shape == scores.shape == (collection.n_queries, 3)
+    with pytest.raises(ValueError, match="static cfg.k"):
+        r.search(queries, k=99)
+
+
+def test_unknown_engine_lists_known(collection):
+    with pytest.raises(ValueError, match=r"flat.*hnsw.*seismic"):
+        Retriever.build(collection.fwd, RetrieverConfig(engine="faiss"))
+
+
+def test_unknown_codec_lists_known(collection):
+    with pytest.raises(ValueError, match=r"bitpack.*streamvbyte"):
+        Retriever.build(collection.fwd,
+                        RetrieverConfig(engine="flat", codec="zstd"))
+
+
+def test_unknown_engine_param_rejected(collection):
+    with pytest.raises(ValueError, match="unknown 'seismic' engine params"):
+        Retriever.build(collection.fwd,
+                        RetrieverConfig(engine="seismic", params={"cutt": 8}))
+
+
+def test_manifest_version_mismatch_fails_loudly(collection, host_indexes,
+                                                tmp_path):
+    r = _retriever(collection, host_indexes, "flat", "uncompressed")
+    art = r.save(tmp_path / "vmm")
+    mf = art / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    manifest["version"] = MANIFEST_VERSION + 1
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(ArtifactError, match="incompatible"):
+        open_retriever(art)
+
+
+def test_tampered_array_shape_fails_loudly(collection, host_indexes, tmp_path):
+    """dtype/shape drift between manifest and payload must not silently
+    mis-decode."""
+    r = _retriever(collection, host_indexes, "flat", "streamvbyte")
+    art = r.save(tmp_path / "tamper")
+    mf = art / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    manifest["arrays"]["nnz_rows"]["shape"] = [1]
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(ArtifactError, match="nnz_rows"):
+        open_retriever(art)
+
+
+def test_missing_artifact_raises(tmp_path):
+    with pytest.raises(ArtifactError, match="manifest.json"):
+        open_retriever(tmp_path / "nowhere")
+
+
+def test_sharded_driver_matches_local_flat(collection, queries):
+    """Generic sharded build path (single-device degenerate mesh): the
+    flat engine through api.build_shard_arrays keeps disjoint ranges
+    mapping back to global ids."""
+    from repro.serve.api import build_shard_arrays
+
+    cfg = RetrieverConfig(engine="flat", codec="dotvbyte", k=10)
+    arrays, idmap, n_local = build_shard_arrays(collection.fwd, cfg, n_shards=4)
+    assert idmap.shape == (4, n_local + 1)
+    gids = np.asarray(idmap)[:, :-1].reshape(-1)
+    gids = gids[gids < collection.fwd.n_docs]
+    assert np.array_equal(np.sort(gids), np.arange(collection.fwd.n_docs))
+    assert arrays["vals_rows"].shape[0] == 4

@@ -14,6 +14,10 @@ Verifies, with zero third-party deps:
    the Makefile.
 3. the documentation spine exists (README.md, DESIGN.md,
    EXPERIMENTS.md).
+4. the deprecated per-engine class names (superseded by the
+   ``repro.serve.api`` Retriever, DESIGN.md §7) appear nowhere outside
+   their shim modules — code and docs must not grow new dependencies
+   on a surface scheduled for removal.
 
 Exit status is the number of dangling references (0 = pass).
 """
@@ -36,6 +40,15 @@ HEADING_RE = re.compile(r"^#+\s*§([A-Za-z0-9][A-Za-z0-9_-]*)", re.M)
 FENCE_RE = re.compile(r"```.*?```", re.S)
 MAKE_RE = re.compile(r"\bmake\s+([a-z][\w-]*)")
 TARGET_RE = re.compile(r"^([a-z][\w-]*):", re.M)
+
+#: per-engine classes superseded by repro.serve.api (DESIGN.md §7);
+#: referencing them anywhere but their shim modules fails the gate
+DEPRECATED_RE = re.compile(r"\b(BatchedSeismic|BatchedHNSW)\b")
+DEPRECATED_ALLOW = {
+    "src/repro/serve/engine.py",
+    "src/repro/serve/graph_engine.py",
+    "tools/docs_check.py",  # this file names them to ban them
+}
 
 
 def headings(doc: pathlib.Path) -> set[str]:
@@ -78,6 +91,22 @@ def check_sections(ids: dict[str, set[str]]) -> list[str]:
     return errors
 
 
+def check_deprecated_names() -> list[str]:
+    errors = []
+    for path in scan_files():
+        rel = str(path.relative_to(ROOT))
+        if rel in DEPRECATED_ALLOW:
+            continue
+        text = path.read_text(encoding="utf-8")
+        for m in DEPRECATED_RE.finditer(text):
+            line = text.count("\n", 0, m.start()) + 1
+            errors.append(
+                f"{rel}:{line}: deprecated name {m.group(1)} referenced outside "
+                f"its shim module (use repro.serve.api)"
+            )
+    return errors
+
+
 def check_make_targets() -> list[str]:
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
     makefile = (ROOT / "Makefile").read_text(encoding="utf-8")
@@ -101,6 +130,7 @@ def main() -> int:
     ids = {d: headings(ROOT / d) for d in DOC_NAMES}
     errors += check_sections(ids)
     errors += check_make_targets()
+    errors += check_deprecated_names()
     if errors:
         print("\n".join(errors))
         print(f"docs-check: {len(errors)} dangling cross-reference(s)")
