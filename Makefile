@@ -7,7 +7,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 ROUNDTRIP_DIR ?= /tmp/repro-serve-roundtrip
 ROUNDTRIP_ARGS = --engine all --compare-codecs --n-docs 400 --n-queries 8 --seed 0
 
-.PHONY: test check bench bench-fast docs-check serve-roundtrip clean
+.PHONY: test check bench bench-fast docs-check serve-roundtrip kernel-parity clean
 
 test:            ## tier-1 suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -21,7 +21,10 @@ serve-roundtrip: ## artifact lifecycle smoke: build→save, then load→search i
 	$(PY) -m repro.launch.serve $(ROUNDTRIP_ARGS) --load-index $(ROUNDTRIP_DIR)
 	rm -rf $(ROUNDTRIP_DIR)
 
-check: docs-check serve-roundtrip ## tier-1 suite + tiny Table-1/2/3 benchmark pass + docs audit + artifact smoke
+kernel-parity:   ## fused Pallas kernels (interpret) vs jnp: block scan, rows rescoring, backend="pallas" top-k, HBM accounting — all codecs
+	$(PY) tools/kernel_parity.py
+
+check: docs-check serve-roundtrip kernel-parity ## tier-1 suite + tiny Table-1/2/3+kernel benchmark pass + docs audit + artifact + parity smokes
 	$(PY) -m benchmarks.run --quick
 
 bench:           ## full benchmark sweep (slow)

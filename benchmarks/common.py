@@ -12,12 +12,15 @@ measures single-thread Rust+SIMD, so absolute values differ; the
 
 from __future__ import annotations
 
+import json
+import pathlib
+import subprocess
 import time
-from typing import Callable
+from typing import Callable, Iterable
 
 import numpy as np
 
-__all__ = ["timeit_us", "Row", "emit"]
+__all__ = ["timeit_us", "Row", "emit", "git_sha", "write_bench_json"]
 
 
 def timeit_us(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
@@ -43,3 +46,69 @@ def emit(rows: list[Row]) -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r.csv())
+
+
+def git_sha() -> str:
+    """Short sha of HEAD, ``-dirty``-suffixed when the tree has
+    uncommitted changes — snapshots are typically generated pre-commit,
+    and the suffix keeps `git log -p BENCH_*.json` honest about it."""
+    try:
+        return subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=pathlib.Path(__file__).resolve().parent.parent,
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _parse_derived(derived: str) -> dict:
+    """``key=value;key=value`` derived strings → a dict (numbers become
+    floats); free-text derived stays under ``"note"``."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            if part:
+                out["note"] = part
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def write_bench_json(
+    path, rows: Iterable[Row], *, sha: str | None = None,
+    meta: dict | None = None,
+) -> None:
+    """Machine-readable benchmark snapshot (``BENCH_*.json``).
+
+    Schema (one file per benchmark family, tracked across PRs so the
+    perf trajectory is diffable): ``{"schema", "git_sha", "rows":
+    [{"name", "us", "derived": {…}}]}`` — ``us`` is the best-of-repeats
+    wall-clock per call, ``derived`` the parsed secondary metrics
+    (HBM bytes, recall, per-query amortised µs, …). ``meta`` merges
+    extra provenance keys (e.g. the run ``mode``: collection sizes
+    differ between quick/fast/full, so trajectories only compare
+    like-for-like)."""
+    payload = {
+        "schema": "repro.bench.v1",
+        **(meta or {}),
+        "git_sha": sha if sha is not None else git_sha(),
+        "rows": [
+            {
+                # non-finite → null: bare NaN/Infinity tokens are not JSON
+                "us": round(r.us, 1) if np.isfinite(r.us) else None,
+                "name": r.name,
+                "derived": {
+                    k: (v if not isinstance(v, float) or np.isfinite(v) else None)
+                    for k, v in _parse_derived(r.derived).items()
+                },
+            }
+            for r in rows
+        ],
+    }
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n", encoding="utf-8")

@@ -1,21 +1,89 @@
 """Kernel microbenchmarks + HBM-payload accounting.
 
-Wall-times are CPU (jnp path jit-compiled; the Pallas kernel itself runs
-interpret=True here, so its number measures the *semantics*, not Mosaic
-codegen). The ``derived`` column carries the quantity that transfers to
-TPU: bytes the scoring pass streams from HBM per scan — the memory-
-roofline numerator the §Perf iterations drive down."""
+Wall-times are CPU (jnp path jit-compiled; the Pallas kernels run
+interpret=True here, so their numbers measure the *semantics*, not
+Mosaic codegen). The ``derived`` column carries the quantity that
+transfers to TPU: bytes the scoring pass streams from HBM — the
+memory-roofline numerator the §Perf iterations drive down.
+
+Three families:
+
+* ``kernel/jnp_scan`` / ``kernel/pallas_interpret`` — the full block
+  scan per codec (now including StreamVByte, EXPERIMENTS.md §Perf);
+* ``kernel/rescoring`` — the serve engines' phase-2 candidate path:
+  jnp take→decode→dot vs the fused scalar-prefetch rows kernel.
+  Derived ``hbm_bytes_per_q`` counts what each path streams per query:
+  the fused kernel reads the encoded candidate payload once and writes
+  C scores; the jnp chain additionally materialises the gathered
+  payload and the decoded i32 components + products in HBM. The fused
+  number must be strictly smaller — ``make kernel-parity`` asserts it;
+* ``kernel/batch_sweep`` — decode-once/score-many amortisation: the
+  query-batched kernels at nq ∈ {1, 8, 64} with per-query amortised µs
+  in ``derived``.
+"""
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import layout
 from repro.core.forward_index import pack_forward_index
-from repro.core.scoring import score_packed
+from repro.core.scoring import score_candidate_rows, score_packed
 from repro.data.synthetic import generate_collection, splade_config
-from repro.kernels.ops import score_bitpack_bucketed, score_dotvbyte
+from repro.kernels.ops import (
+    score_bitpack_bucketed,
+    score_dotvbyte,
+    score_dotvbyte_batch,
+    score_streamvbyte,
+    score_streamvbyte_batch,
+)
+from repro.kernels.registry import get_kernels
 
 from .common import Row, timeit_us
+
+#: candidate-set size for the rescoring family (a Seismic phase-2
+#: probe of 64 blocks × 16-doc blocks lands in this regime)
+N_CANDIDATES = 256
+
+#: codecs measured end to end (must all be registered layouts)
+SCAN_CODECS = ("uncompressed", "dotvbyte", "streamvbyte", "bitpack")
+RESCORE_CODECS = ("uncompressed", "dotvbyte", "streamvbyte", "bitpack")
+
+
+def rows_payload_bytes(arrays, codec: str, n_cand: int) -> int:
+    """Encoded bytes the rescoring of ``n_cand`` rows must read from
+    HBM: the codec payload + values + nnz of the gathered rows (per-row
+    widths as stored, padding included — that is what actually DMAs)."""
+    per_row = arrays["vals_rows"].shape[1] * arrays["vals_rows"].dtype.itemsize
+    per_row += 4  # nnz i32
+    if codec == "uncompressed":
+        per_row += arrays["comps_rows"].shape[1] * 4
+    elif codec == "bitpack":
+        per_row += arrays["words_rows"].shape[1] * 4 + 4
+    else:
+        per_row += arrays["ctrl_rows"].shape[1] + arrays["data_rows"].shape[1]
+    return per_row * n_cand
+
+
+def rows_hbm_bytes(arrays, codec: str, n_cand: int, *, fused: bool) -> int:
+    """HBM bytes one query's candidate rescoring streams.
+
+    fused  — read payload once, write n_cand f32 scores; decoded
+             components live and die in VMEM;
+    jnp    — the take→decode→dot chain: the gather writes the payload
+             back to HBM, the decode writes i32 components (skipped
+             for the decode-free uncompressed layout, whose gathered
+             comps_rows ARE the components), the dot reads them and
+             writes products before the reduction.
+    """
+    payload = rows_payload_bytes(arrays, codec, n_cand)
+    if fused:
+        return payload + n_cand * 4
+    L = arrays["vals_rows"].shape[1]
+    comps = 0 if codec == "uncompressed" else n_cand * L * 4  # decoded i32
+    prod = n_cand * L * 4  # qv·vals products before the row reduction
+    return payload * 2 + comps + prod + n_cand * 4
 
 
 def run(n_docs: int = 2000) -> list[Row]:
@@ -23,7 +91,8 @@ def run(n_docs: int = 2000) -> list[Row]:
     q = col.query_dense(0)
     rows: list[Row] = []
 
-    for codec in ("uncompressed", "dotvbyte", "bitpack"):
+    # --- block-scan family ---------------------------------------------
+    for codec in SCAN_CODECS:
         packed = pack_forward_index(col.fwd, codec=codec)
         us = timeit_us(lambda p=packed: score_packed(q, p).block_until_ready())
         rows.append(
@@ -35,6 +104,10 @@ def run(n_docs: int = 2000) -> list[Row]:
     us = timeit_us(lambda: np.asarray(score_dotvbyte(q, pd, interpret=True)), repeats=1)
     rows.append(Row("kernel/pallas_interpret/dotvbyte", us, "semantic-check-only"))
 
+    ps = pack_forward_index(col.fwd, codec="streamvbyte")
+    us = timeit_us(lambda: np.asarray(score_streamvbyte(q, ps, interpret=True)), repeats=1)
+    rows.append(Row("kernel/pallas_interpret/streamvbyte", us, "semantic-check-only"))
+
     pb = pack_forward_index(col.fwd, codec="bitpack")
     tight = sum(
         ((pb.block_size * int(w) + 31) // 32) * 4 for w in pb.widths
@@ -45,6 +118,74 @@ def run(n_docs: int = 2000) -> list[Row]:
         Row("kernel/pallas_interpret/bitpack_bucketed", us,
             f"tight_words_mb={tight/2**20:.2f};padded_words_mb={padded/2**20:.2f}")
     )
+
+    # --- candidate-rescoring family: jnp chain vs fused rows kernel ----
+    rng = np.random.default_rng(0)
+    n = col.fwd.n_docs
+    cand = np.sort(rng.choice(n, size=min(N_CANDIDATES, n), replace=False)).astype(np.int32)
+    scale = float(col.fwd.value_format.scale)
+    qj = jnp.asarray(q)
+    dj = jnp.asarray(cand)
+    for codec in RESCORE_CODECS:
+        arrays = {k: jnp.asarray(v) for k, v in layout.pack_rows(col.fwd, codec=codec).arrays().items()}
+        us = timeit_us(
+            lambda a=arrays, c=codec: score_candidate_rows(
+                c, a, dj, qj, scale, backend="jnp"
+            ).block_until_ready()
+        )
+        rows.append(
+            Row(f"kernel/rescoring/jnp/{codec}", us,
+                f"hbm_bytes_per_q={rows_hbm_bytes(arrays, codec, len(cand), fused=False)}")
+        )
+        fused = get_kernels(codec).rows_scores
+        us = timeit_us(
+            lambda a=arrays, f=fused: np.asarray(f(a, dj, qj, scale, True)), repeats=1
+        )
+        rows.append(
+            Row(f"kernel/rescoring/pallas_interpret/{codec}", us,
+                f"hbm_bytes_per_q={rows_hbm_bytes(arrays, codec, len(cand), fused=True)}")
+        )
+
+    # --- decode-once/score-many query-batch sweep ----------------------
+    Q = np.stack([col.query_dense(i % col.n_queries) for i in range(64)])
+    sweep_docs = min(n_docs, 800)
+    if sweep_docs < n_docs:
+        sub = generate_collection(
+            splade_config(n_docs=sweep_docs, n_queries=4), value_format="f16"
+        )
+    else:
+        sub = col
+    pd_s = pack_forward_index(sub.fwd, codec="dotvbyte")
+    ps_s = pack_forward_index(sub.fwd, codec="streamvbyte")
+    arrays_s = {
+        k: jnp.asarray(v)
+        for k, v in layout.pack_rows(sub.fwd, codec="streamvbyte").arrays().items()
+    }
+    cand_s = jnp.asarray(
+        np.sort(rng.choice(sub.fwd.n_docs, size=min(N_CANDIDATES, sub.fwd.n_docs), replace=False)).astype(np.int32)
+    )
+    scale_s = float(sub.fwd.value_format.scale)
+    svb_rows_batch = get_kernels("streamvbyte").rows_scores_batch
+    for nq in (1, 8, 64):
+        Qn = Q[:nq]
+        us = timeit_us(
+            lambda: np.asarray(score_dotvbyte_batch(Qn, pd_s, interpret=True)), repeats=1
+        )
+        rows.append(Row(f"kernel/batch_sweep/dotvbyte_scan/nq{nq}", us,
+                        f"us_per_query={us/nq:.1f}"))
+        us = timeit_us(
+            lambda: np.asarray(score_streamvbyte_batch(Qn, ps_s, interpret=True)), repeats=1
+        )
+        rows.append(Row(f"kernel/batch_sweep/streamvbyte_scan/nq{nq}", us,
+                        f"us_per_query={us/nq:.1f}"))
+        us = timeit_us(
+            lambda: np.asarray(
+                svb_rows_batch(arrays_s, cand_s, jnp.asarray(Qn), scale_s, True)
+            ),
+            repeats=1,
+        )
+        rows.append(Row(f"kernel/batch_sweep/streamvbyte_rows/nq{nq}", us,
+                        f"us_per_query={us/nq:.1f}"))
     return rows
 
 

@@ -1,12 +1,18 @@
 """Benchmark entry point — one section per paper table + kernel/roofline
-extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py).
+extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)
+and snapshots the kernel + serving families to machine-readable
+``BENCH_kernels.json`` / ``BENCH_serve.json`` at the repo root
+(schema: name, µs, parsed derived metrics, git sha — see
+``common.write_bench_json``) so the perf trajectory is diffable across
+PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --fast     # reduced sizes
     PYTHONPATH=src python -m benchmarks.run --only table1
     PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke: tier-1
                                                        # pytest + tiny
-                                                       # Table-1/2/3 pass
+                                                       # Table-1/2/3 +
+                                                       # kernel pass
 """
 
 from __future__ import annotations
@@ -17,7 +23,23 @@ import subprocess
 import sys
 import time
 
-from .common import emit
+from .common import emit, write_bench_json
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _snapshot(kernel_rows, serve_rows, mode: str) -> None:
+    """Write the committed snapshots. ``mode`` (quick/fast/full) is
+    recorded in the payload so the perf trajectory is only compared
+    like-for-like; a family is only (over)written when its sections
+    ran completely — a partial ``--only`` run never drops rows from a
+    committed file."""
+    if kernel_rows:
+        write_bench_json(os.path.join(_ROOT, "BENCH_kernels.json"), kernel_rows,
+                         meta={"mode": mode})
+    if serve_rows:
+        write_bench_json(os.path.join(_ROOT, "BENCH_serve.json"), serve_rows,
+                         meta={"mode": mode})
 
 
 def _quick_smoke() -> int:
@@ -37,12 +59,14 @@ def _quick_smoke() -> int:
     if proc.returncode:
         return proc.returncode
 
-    from . import table1_codecs, table2_seismic, table3_graph
+    from . import kernel_bench, table1_codecs, table2_seismic, table3_graph
 
-    print("# tiny table1/table2/table3…", file=sys.stderr, flush=True)
+    print("# tiny table1/table2/table3 + kernels…", file=sys.stderr, flush=True)
     rows = table1_codecs.run(n_docs=400, n_queries=2, rgb_iters=2)
-    rows += table2_seismic.run(n_docs=400, n_queries=4)
-    rows += table3_graph.run(n_docs=400, n_queries=4)
+    serve_rows = table2_seismic.run(n_docs=400, n_queries=4)
+    serve_rows += table3_graph.run(n_docs=400, n_queries=4)
+    kernel_rows = kernel_bench.run(n_docs=300)
+    rows += serve_rows + kernel_rows
     emit(rows)
     # a NaN latency means no sweep point reached the accuracy level —
     # the codec/accuracy regression class this gate exists to catch
@@ -51,6 +75,9 @@ def _quick_smoke() -> int:
     if bad:
         print(f"# quick smoke FAILED: unmet accuracy rows: {bad}", file=sys.stderr)
         return 1
+    # snapshot only after the gate passes — a failing run must not
+    # overwrite the committed trajectory with regression numbers
+    _snapshot(kernel_rows, serve_rows, mode="quick")
     print(f"# quick smoke OK ({len(rows)} rows)", file=sys.stderr)
     return 0
 
@@ -68,13 +95,16 @@ def main() -> None:
         sys.exit(_quick_smoke())
 
     rows = []
+    by_section: dict[str, list] = {}
     t0 = time.time()
 
     def section(name, fn):
         if args.only and args.only != name:
             return
         print(f"# running {name}…", file=sys.stderr, flush=True)
-        rows.extend(fn())
+        got = fn()
+        by_section[name] = got
+        rows.extend(got)
 
     from . import kernel_bench, roofline, table1_codecs, table2_seismic, table3_graph
 
@@ -90,6 +120,13 @@ def main() -> None:
         section("kernel", lambda: kernel_bench.run())
     section("roofline", roofline.run)
 
+    serve_complete = "table2" in by_section and "table3" in by_section
+    _snapshot(
+        by_section.get("kernel", []),
+        by_section.get("table2", []) + by_section.get("table3", [])
+        if serve_complete else [],
+        mode="fast" if args.fast else "full",
+    )
     emit(rows)
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)
 

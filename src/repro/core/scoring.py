@@ -221,13 +221,12 @@ def _score_packed(
     return combine_block_scores(prod, seg, doc_ids, n_docs)
 
 
-def score_packed(q_dense, packed: PackedBlocks) -> jnp.ndarray:
-    """Scores of every document for one dense query. [n_docs] f32."""
+def _packed_device_args(packed: PackedBlocks):
+    """The (arrays, static-kwargs) pair ``_score_packed`` consumes."""
     zero_u8 = np.zeros((packed.n_blocks, 1), dtype=np.uint8)
     zero_u32 = np.zeros((packed.n_blocks, 1), dtype=np.uint32)
     zero_i32 = np.zeros((packed.n_blocks,), dtype=np.int32)
-    return _score_packed(
-        jnp.asarray(q_dense, dtype=jnp.float32),
+    arrays = (
         jnp.asarray(packed.seg),
         jnp.asarray(packed.start_pos),
         jnp.asarray(packed.start_abs),
@@ -242,16 +241,33 @@ def score_packed(q_dense, packed: PackedBlocks) -> jnp.ndarray:
             if packed.comps is not None
             else np.zeros(packed.seg.shape, dtype=np.int32)
         ),
+    )
+    static = dict(
         codec=packed.codec,
         block_size=packed.block_size,
         n_docs=packed.n_docs,
         scale=float(packed.value_format.scale),
     )
+    return arrays, static
+
+
+def score_packed(q_dense, packed: PackedBlocks) -> jnp.ndarray:
+    """Scores of every document for one dense query. [n_docs] f32."""
+    arrays, static = _packed_device_args(packed)
+    return _score_packed(jnp.asarray(q_dense, dtype=jnp.float32), *arrays, **static)
 
 
 def score_packed_batch(Q, packed: PackedBlocks) -> jnp.ndarray:
-    """Scores for a batch of dense queries. [n_queries, n_docs]."""
-    return jnp.stack([score_packed(q, packed) for q in Q])
+    """Scores for a batch of dense queries. [n_queries, n_docs].
+
+    One ``vmap`` over the jit'd scorer — a single dispatch per batch
+    (the decode is still re-traced per query inside the batched graph;
+    the *fused* decode-once path is the batched kernel in
+    ``repro.kernels``)."""
+    arrays, static = _packed_device_args(packed)
+    return jax.vmap(lambda q: _score_packed(q, *arrays, **static))(
+        jnp.asarray(Q, dtype=jnp.float32)
+    )
 
 
 def make_doc_aligned_scan(
@@ -355,8 +371,17 @@ def decode_doc_rows_dotvbyte(ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> 
     return decode_doc_rows("dotvbyte", {"ctrl_rows": ctrl_rows, "data_rows": data_rows})
 
 
+#: codecs already warned about missing fused rows kernels (warn once)
+_NO_ROWS_KERNEL_WARNED: set = set()
+
+
 def score_candidate_rows(
-    codec: str, arrays, docs: jnp.ndarray, q: jnp.ndarray, scale: float
+    codec: str,
+    arrays,
+    docs: jnp.ndarray,
+    q: jnp.ndarray,
+    scale: float,
+    backend: str = "jnp",
 ) -> jnp.ndarray:
     """Gather the packed rows of ``docs`` and score them exactly.
 
@@ -364,7 +389,36 @@ def score_candidate_rows(
     (DESIGN.md §7): ``arrays`` holds the row form produced by
     ``layout.pack_rows`` under any registered codec — possibly
     alongside engine-specific fields, which are ignored. Sentinel doc
-    ids gather the all-zero row and score 0; mask them afterwards."""
+    ids gather the all-zero row and score 0; mask them afterwards.
+
+    ``backend`` selects the execution path (DESIGN.md §3): ``"jnp"``
+    is the take→decode→dot reference below; ``"pallas"`` dispatches to
+    the codec's fused rows kernel from ``repro.kernels.registry``
+    (scalar-prefetch HBM→VMEM row gather, decode and dot in VMEM —
+    decoded components never touch HBM), falling back to jnp with a
+    one-time warning when the codec has no registered rows kernel.
+    Both paths return identical scores (asserted by the parity suite
+    and ``make kernel-parity``)."""
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(
+            f"unknown scoring backend {backend!r}; have ['jnp', 'pallas']"
+        )
+    if backend == "pallas":
+        from repro.kernels.registry import rows_scorer
+
+        fn = rows_scorer(codec)
+        if fn is not None:
+            return fn(arrays, docs, q, scale)
+        if codec not in _NO_ROWS_KERNEL_WARNED:
+            import warnings
+
+            _NO_ROWS_KERNEL_WARNED.add(codec)
+            warnings.warn(
+                f"codec {codec!r} has no fused rows kernel registered; "
+                f"serving backend='pallas' through the jnp path",
+                RuntimeWarning,
+                stacklevel=2,
+            )
     from .layout import get_layout
 
     vals = jnp.take(arrays["vals_rows"], docs, axis=0)

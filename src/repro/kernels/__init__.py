@@ -1,29 +1,57 @@
 """Pallas TPU kernels for the forward-index scoring hot path.
 
-``dotvbyte_dot``  — the paper's DotVByte, TPU-adapted (DESIGN.md §3)
-``bitpack_dot``   — beyond-paper fixed-width codec, runtime + bucketed
-``ops``           — jit wrappers (padding, interpret-mode, combine)
-``ref``           — pure-jnp oracles each kernel is asserted against
+``dotvbyte_dot``    — the paper's DotVByte, TPU-adapted (DESIGN.md §3)
+``streamvbyte_dot`` — the paper's headline byte codec, fused the same way
+``bitpack_dot``     — beyond-paper fixed-width codec, runtime + bucketed
+``rows_dot``        — generic fused candidate-row rescoring (scalar-
+                      prefetch HBM→VMEM gather + decode + dot), every codec
+``registry``        — codec → ``KernelSet`` registry; the dispatch point
+                      ``RetrieverConfig(backend="pallas")`` routes through
+``ops``             — jit wrappers (padding, interpret-mode, combine)
+``ref``             — pure-jnp oracles each kernel is asserted against
 """
 
 from .bitpack_dot import bitpack_block_scores, bitpack_block_scores_w
-from .dotvbyte_dot import dotvbyte_block_scores
+from .dotvbyte_dot import dotvbyte_block_scores, dotvbyte_block_scores_batch
 from .ops import (
     default_interpret,
     score_bitpack,
     score_bitpack_bucketed,
     score_dotvbyte,
+    score_dotvbyte_batch,
+    score_streamvbyte,
+    score_streamvbyte_batch,
 )
-from .ref import bitpack_block_scores_ref, dotvbyte_block_scores_ref
+from .ref import (
+    bitpack_block_scores_ref,
+    dotvbyte_block_scores_ref,
+    streamvbyte_block_scores_ref,
+)
+from .registry import KernelSet, available_kernels, get_kernels, register_kernels
+from .rows_dot import rows_scores, rows_scores_batch
+from .streamvbyte_dot import streamvbyte_block_scores, streamvbyte_block_scores_batch
 
 __all__ = [
     "bitpack_block_scores",
     "bitpack_block_scores_w",
     "dotvbyte_block_scores",
+    "dotvbyte_block_scores_batch",
+    "streamvbyte_block_scores",
+    "streamvbyte_block_scores_batch",
+    "rows_scores",
+    "rows_scores_batch",
+    "KernelSet",
+    "register_kernels",
+    "get_kernels",
+    "available_kernels",
     "default_interpret",
+    "score_dotvbyte",
+    "score_dotvbyte_batch",
+    "score_streamvbyte",
+    "score_streamvbyte_batch",
     "score_bitpack",
     "score_bitpack_bucketed",
-    "score_dotvbyte",
     "bitpack_block_scores_ref",
     "dotvbyte_block_scores_ref",
+    "streamvbyte_block_scores_ref",
 ]

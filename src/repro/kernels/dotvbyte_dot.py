@@ -33,22 +33,29 @@ from jax.experimental import pallas as pl
 __all__ = ["dotvbyte_block_scores", "dotvbyte_block_scores_batch"]
 
 
-def _kernel(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
+def _decode(ctrl_ref, data_ref):
+    """One row's (ctrl, data) refs → gaps i32 [T]: control bits → byte
+    offsets (exclusive prefix sum = the "scroll" amounts) → dual byte
+    gather. Shared by the block kernels here and ``rows_dot``."""
     T8 = ctrl_ref.shape[1]
     T = T8 * 8
-    D = sp_ref.shape[1]
-
-    # --- decode: control bits → byte offsets → gaps ---------------------
     ctrl = ctrl_ref[0, :].astype(jnp.int32)  # [T/8]
     bits = (ctrl[:, None] >> jax.lax.broadcasted_iota(jnp.int32, (1, 8), 1)) & 1
     bits = bits.reshape(T)  # LSB-first, one bit per value
     lens = bits + 1
     ends = jnp.cumsum(lens)
-    starts = ends - lens  # exclusive prefix sum = the "scroll" amounts
+    starts = ends - lens
     data = data_ref[0, :].astype(jnp.int32)  # [DP]
     lo = jnp.take(data, starts, axis=0)
     hi = jnp.take(data, starts + 1, axis=0) * bits
-    gaps = lo + (hi << 8)
+    return lo + (hi << 8)
+
+
+def _kernel(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
+    T8 = ctrl_ref.shape[1]
+    T = T8 * 8
+    D = sp_ref.shape[1]
+    gaps = _decode(ctrl_ref, data_ref)
 
     # --- segmented rebase: gaps → absolute components --------------------
     seg = seg_ref[0, :].astype(jnp.int32)  # [T] (i8 in the slim layout)
@@ -75,14 +82,7 @@ def _kernel_batch(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, 
     T8 = ctrl_ref.shape[1]
     T = T8 * 8
     D = sp_ref.shape[1]
-    ctrl = ctrl_ref[0, :].astype(jnp.int32)
-    bits = (ctrl[:, None] >> jax.lax.broadcasted_iota(jnp.int32, (1, 8), 1)) & 1
-    bits = bits.reshape(T)
-    lens = bits + 1
-    ends = jnp.cumsum(lens)
-    starts = ends - lens
-    data = data_ref[0, :].astype(jnp.int32)
-    gaps = jnp.take(data, starts, axis=0) + (jnp.take(data, starts + 1, axis=0) * bits << 8)
+    gaps = _decode(ctrl_ref, data_ref)
     seg = seg_ref[0, :].astype(jnp.int32)
     t = jnp.cumsum(gaps)
     segc = jnp.clip(seg, 0, D - 1)

@@ -15,12 +15,16 @@ from repro.core.forward_index import PackedBlocks
 from repro.core.scoring import scatter_block_scores
 
 from .bitpack_dot import bitpack_block_scores, bitpack_block_scores_w
-from .dotvbyte_dot import dotvbyte_block_scores
+from .dotvbyte_dot import dotvbyte_block_scores, dotvbyte_block_scores_batch
+from .streamvbyte_dot import streamvbyte_block_scores, streamvbyte_block_scores_batch
 
 __all__ = [
     "default_interpret",
     "pad_to",
     "score_dotvbyte",
+    "score_dotvbyte_batch",
+    "score_streamvbyte",
+    "score_streamvbyte_batch",
     "score_bitpack",
     "score_bitpack_bucketed",
 ]
@@ -41,10 +45,25 @@ def pad_to(x: np.ndarray, multiple: int, axis: int = -1) -> np.ndarray:
     return np.pad(x, widths)
 
 
+def pad_query_lanes(q: jnp.ndarray) -> jnp.ndarray:
+    """Zero-pad the dense query's trailing axis to a 128 multiple —
+    jit-traceable, any rank (the registry's rows-kernel entries run it
+    on traced values inside the serve graph)."""
+    pad = (-q.shape[-1]) % 128
+    if pad == 0:
+        return q
+    return jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+
+
+def _padded_queries(Q, dim: int) -> jnp.ndarray:
+    """Host-side batch form: truncate to ``dim``, then one whole-batch
+    lane pad: [nq, ≥dim] → [nq, round_up(dim, 128)]."""
+    Q = jnp.asarray(np.asarray(Q, dtype=np.float32)[:, :dim])
+    return pad_query_lanes(Q)
+
+
 def _padded_query(q_dense, dim: int) -> jnp.ndarray:
-    q = np.zeros(((dim + 127) // 128) * 128, dtype=np.float32)
-    q[:dim] = np.asarray(q_dense, dtype=np.float32)[:dim]
-    return jnp.asarray(q)
+    return _padded_queries(np.asarray(q_dense, dtype=np.float32)[None, :], dim)[0]
 
 
 def score_dotvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = None):
@@ -65,6 +84,73 @@ def score_dotvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = None)
         interpret=interp,
     )
     return scatter_block_scores(block, jnp.asarray(packed.doc_ids), packed.n_docs)
+
+
+def _combine_batch(block, doc_ids, n_docs: int):
+    """[B, nq, D] per-block batch scores → [nq, n_docs] global scores."""
+    return jax.vmap(lambda blk: scatter_block_scores(blk, doc_ids, n_docs))(
+        block.transpose(1, 0, 2)
+    )
+
+
+def score_dotvbyte_batch(Q, packed: PackedBlocks, interpret: bool | None = None):
+    """Decode-once/score-many fused path for a query batch: [nq, n_docs]."""
+    assert packed.codec == "dotvbyte"
+    interp = default_interpret() if interpret is None else interpret
+    Qp = _padded_queries(Q, packed.dim)
+    data = pad_to(packed.data, 128, axis=1)
+    block = dotvbyte_block_scores_batch(
+        Qp,
+        jnp.asarray(packed.ctrl),
+        jnp.asarray(data),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+        scale=float(packed.value_format.scale),
+        interpret=interp,
+    )
+    return _combine_batch(block, jnp.asarray(packed.doc_ids), packed.n_docs)
+
+
+def score_streamvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+    """Full fused-kernel StreamVByte scoring path: [n_docs] f32."""
+    assert packed.codec == "streamvbyte"
+    interp = default_interpret() if interpret is None else interpret
+    q = _padded_query(q_dense, packed.dim)
+    data = pad_to(packed.data, 128, axis=1)
+    block = streamvbyte_block_scores(
+        q,
+        jnp.asarray(packed.ctrl),
+        jnp.asarray(data),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+        scale=float(packed.value_format.scale),
+        interpret=interp,
+    )
+    return scatter_block_scores(block, jnp.asarray(packed.doc_ids), packed.n_docs)
+
+
+def score_streamvbyte_batch(Q, packed: PackedBlocks, interpret: bool | None = None):
+    """Decode-once/score-many fused StreamVByte path: [nq, n_docs]."""
+    assert packed.codec == "streamvbyte"
+    interp = default_interpret() if interpret is None else interpret
+    Qp = _padded_queries(Q, packed.dim)
+    data = pad_to(packed.data, 128, axis=1)
+    block = streamvbyte_block_scores_batch(
+        Qp,
+        jnp.asarray(packed.ctrl),
+        jnp.asarray(data),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+        scale=float(packed.value_format.scale),
+        interpret=interp,
+    )
+    return _combine_batch(block, jnp.asarray(packed.doc_ids), packed.n_docs)
 
 
 def score_bitpack(q_dense, packed: PackedBlocks, interpret: bool | None = None):

@@ -16,10 +16,15 @@ from repro.core.scoring import (
     components_from_gaps,
     decode_gaps_bitpack,
     decode_gaps_dotvbyte,
+    decode_gaps_streamvbyte,
     dequantise_values,
 )
 
-__all__ = ["dotvbyte_block_scores_ref", "bitpack_block_scores_ref"]
+__all__ = [
+    "dotvbyte_block_scores_ref",
+    "streamvbyte_block_scores_ref",
+    "bitpack_block_scores_ref",
+]
 
 
 def _onehot_reduce(prod: jnp.ndarray, seg: jnp.ndarray, D: int) -> jnp.ndarray:
@@ -30,6 +35,14 @@ def _onehot_reduce(prod: jnp.ndarray, seg: jnp.ndarray, D: int) -> jnp.ndarray:
 @jax.jit
 def dotvbyte_block_scores_ref(q, ctrl, data, seg, start_pos, start_abs, vals, scale=1.0):
     gaps = decode_gaps_dotvbyte(ctrl, data)
+    comps = components_from_gaps(gaps, seg, start_pos, start_abs)
+    prod = block_products(q, comps, dequantise_values(vals, scale), seg)
+    return _onehot_reduce(prod, seg, start_pos.shape[1])
+
+
+@jax.jit
+def streamvbyte_block_scores_ref(q, ctrl, data, seg, start_pos, start_abs, vals, scale=1.0):
+    gaps = decode_gaps_streamvbyte(ctrl, data)
     comps = components_from_gaps(gaps, seg, start_pos, start_abs)
     prod = block_products(q, comps, dequantise_values(vals, scale), seg)
     return _onehot_reduce(prod, seg, start_pos.shape[1])

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused candidate-row gather + decode + rescore.
+
+The serve engines' phase-2 hot path (DESIGN.md §7) re-scores a static
+set of candidate documents against the packed row form ``[N+1, L]``
+(``layout.pack_rows``). The pure-jnp path (``scoring.score_candidate_
+rows``) is a take→decode→dot chain whose intermediates — the gathered
+codec payload AND the decoded i32 components — materialise in HBM.
+
+This kernel keeps the whole chain fused (DESIGN.md §3): the candidate
+doc ids arrive as a *scalar-prefetch* operand, so the grid ``index_map``
+itself performs the HBM→VMEM row gather — grid step ``i`` DMAs exactly
+the rows of document ``docs[i]`` into VMEM, where they are decoded
+(streamvbyte / dotvbyte / bitpack) and dotted against the VMEM-resident
+query batch in one step. Decoded components never touch HBM; per-query
+HBM traffic is the encoded candidate payload + Q + C scores.
+
+  docs (scalar prefetch) ──index_map──► row DMA HBM→VMEM
+  row payload ──codec decode──► gaps ──cumsum──► absolute components
+  components ──gather q──► qv ──FMA vals·mask──► Σ ──► scores[i]
+
+Row-gap convention: the first gap IS the absolute component
+(per-document alignment), so a plain cumsum rebuilds the ids; the
+sentinel row N is all-zero and scores exactly 0 (callers mask it).
+
+All four registered codecs have a rows kernel; the query-batched
+variants decode each candidate row ONCE and score the whole resident
+query batch (decode-once-score-many on the rescoring path). Single-
+query calls compose with ``jax.vmap`` — the batching rule lifts the
+query axis into the grid — which is how the jit'd vmapped
+``Retriever.search`` serves ``backend="pallas"`` unmodified.
+
+Validated against the jnp oracle in interpret mode (CPU-only
+container); the scalar-prefetch row DMA is the op to watch under real
+Mosaic lowering (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .bitpack_dot import _decode_fixed
+from .dotvbyte_dot import _decode as _decode_dotvbyte
+from .streamvbyte_dot import _decode as _decode_streamvbyte
+
+__all__ = ["rows_scores", "rows_scores_batch"]
+
+
+# ---------------------------------------------------------------------------
+# per-codec row decoders: payload refs → absolute components i32 [L]
+# (the ctrl→gaps decodes are the SAME helpers the block kernels run —
+# row gaps just cumsum directly because the first gap is absolute)
+# ---------------------------------------------------------------------------
+
+
+def _comps_uncompressed(refs, L):
+    (comps_ref,) = refs
+    return comps_ref[0, :]
+
+
+def _comps_dotvbyte(refs, L):
+    ctrl_ref, data_ref = refs
+    return jnp.cumsum(_decode_dotvbyte(ctrl_ref, data_ref))
+
+
+def _comps_streamvbyte(refs, L):
+    ctrl_ref, data_ref = refs
+    return jnp.cumsum(_decode_streamvbyte(ctrl_ref, data_ref))
+
+
+def _comps_bitpack(refs, L):
+    words_ref, widths_ref = refs
+    # pad one word for the straddle read (same trick as bitpack_dot)
+    words = jnp.concatenate([words_ref[0, :], jnp.zeros((1,), jnp.uint32)])
+    gaps = _decode_fixed(words, widths_ref[0, 0], L)
+    return jnp.cumsum(gaps)
+
+
+_DECODERS = {
+    "uncompressed": _comps_uncompressed,
+    "dotvbyte": _comps_dotvbyte,
+    "streamvbyte": _comps_streamvbyte,
+    "bitpack": _comps_bitpack,
+}
+
+
+def _kernel(docs_ref, q_ref, vals_ref, nnz_ref, *rest, scale: float, codec: str):
+    *payload_refs, out_ref = rest
+    L = vals_ref.shape[1]
+    comps = _DECODERS[codec](payload_refs, L)
+    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
+    mask = jax.lax.iota(jnp.int32, L) < nnz_ref[0, 0]
+    Q = q_ref[...]  # [nq, V] resident across the whole grid
+    qv = jnp.take(Q, comps, axis=1)  # [nq, L]
+    out_ref[0, :] = (qv * (vals * mask)[None, :]).sum(axis=1)  # [nq]
+
+
+def _payload_streams(codec: str, arrays) -> list[jnp.ndarray]:
+    """Ordered codec payload streams of the packed row form, shaped for
+    (1, width) blocks (scalar-per-row fields become [N+1, 1])."""
+    if codec == "uncompressed":
+        return [arrays["comps_rows"]]
+    if codec == "bitpack":
+        return [arrays["words_rows"], arrays["widths_rows"][:, None]]
+    return [arrays["ctrl_rows"], arrays["data_rows"]]
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "scale", "interpret"))
+def rows_scores_batch(
+    codec: str,
+    Q: jnp.ndarray,  # [nq, vocab_pad] f32
+    docs: jnp.ndarray,  # i32 [C] candidate doc ids (sentinel = row N)
+    vals_rows: jnp.ndarray,  # [N+1, L] storage dtype
+    nnz_rows: jnp.ndarray,  # i32 [N+1]
+    *payload,  # codec streams, see _payload_streams
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused rescoring of C candidate rows against a query batch.
+
+    Returns scores f32 [nq, C]. ``docs`` is consumed as scalar prefetch:
+    the grid index_map gathers row ``docs[i]`` HBM→VMEM at step ``i``.
+    """
+    C = docs.shape[0]
+    nq, V = Q.shape
+    L = vals_rows.shape[1]
+    gathered = lambda width: pl.BlockSpec((1, width), lambda i, docs: (docs[i], 0))
+    in_specs = [
+        pl.BlockSpec((nq, V), lambda i, docs: (0, 0)),  # Q resident
+        gathered(L),  # vals
+        gathered(1),  # nnz
+    ] + [gathered(p.shape[1]) for p in payload]
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, codec=codec),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(C,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, nq), lambda i, docs: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((C, nq), jnp.float32),
+        interpret=interpret,
+    )(docs.astype(jnp.int32), Q, vals_rows, nnz_rows[:, None], *payload)
+    return out.T
+
+
+def rows_scores(
+    codec: str,
+    q: jnp.ndarray,  # [vocab_pad] f32
+    docs: jnp.ndarray,
+    vals_rows: jnp.ndarray,
+    nnz_rows: jnp.ndarray,
+    *payload,
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-query fused rescoring → scores f32 [C]."""
+    return rows_scores_batch(
+        codec, q[None, :], docs, vals_rows, nnz_rows, *payload,
+        scale=scale, interpret=interpret,
+    )[0]

@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: fused StreamVByte decode + gather + inner product.
+
+StreamVByte (Lemire et al.) is the paper's headline general-purpose
+codec: 2-bit controls, four gaps per control byte, 1–4 data bytes per
+gap — full 32-bit gap range with byte-aligned decode. The TPU
+adaptation keeps the same fusion discipline as ``dotvbyte_dot``:
+
+  2-bit codes ──unpack──► per-value byte counts ──prefix-sum──► offsets
+  offsets ──up-to-4 byte-gathers (masked by code)──► gaps
+  gaps ──segmented cumsum──► components ──gather q──► qv ──FMA──► prod
+  prod ──one-hot MXU matmul──► per-block document scores
+
+Everything for one packed block lives in VMEM for one grid step;
+decoded gaps/components never touch HBM. The batched variant decodes
+each block ONCE and scores the whole VMEM-resident query batch against
+it (decode-once-score-many, EXPERIMENTS.md §Perf opt3 — the fused
+analogue).
+
+Grid: one step per packed block; block shapes are (1, X) rows of the
+packed arrays (T % 128 == 0 ⇒ T/4 % 32 == 0). The data stream carries
+a 3-byte over-read pad (layout ``_byte_scatter``) so the 4-byte gather
+never reads out of bounds.
+
+Validated against ``repro.kernels.ref`` in interpret mode (CPU-only
+container); like DotVByte, the data-dependent byte gather is the op to
+watch under real Mosaic lowering (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["streamvbyte_block_scores", "streamvbyte_block_scores_batch"]
+
+
+def _decode(ctrl_ref, data_ref):
+    """One block's (ctrl, data) refs → gaps i32 [T]."""
+    T4 = ctrl_ref.shape[1]
+    T = T4 * 4
+    ctrl = ctrl_ref[0, :].astype(jnp.int32)  # [T/4]
+    codes = (ctrl[:, None] >> (2 * jax.lax.broadcasted_iota(jnp.int32, (1, 4), 1))) & 0x3
+    codes = codes.reshape(T)  # quad-local value i ↔ bits 2i..2i+1
+    lens = codes + 1
+    ends = jnp.cumsum(lens)
+    starts = ends - lens
+    data = data_ref[0, :].astype(jnp.int32)  # [DP], ≥ 3-byte over-read
+    gaps = jnp.take(data, starts, axis=0)
+    gaps = gaps | (jnp.take(data, starts + 1, axis=0) * (codes >= 1)) << 8
+    gaps = gaps | (jnp.take(data, starts + 2, axis=0) * (codes >= 2)) << 16
+    gaps = gaps | (jnp.take(data, starts + 3, axis=0) * (codes >= 3)) << 24
+    return gaps
+
+
+def _rebase(gaps, seg_ref, sp_ref, sa_ref, D):
+    """Gaps → absolute components via the out-of-band block absolutes."""
+    seg = seg_ref[0, :].astype(jnp.int32)  # i8 in the slim layout
+    t = jnp.cumsum(gaps)
+    segc = jnp.clip(seg, 0, D - 1)
+    tp = jnp.take(t, sp_ref[0, :], axis=0)
+    comp = jnp.where(seg >= 0, jnp.take(sa_ref[0, :], segc) + t - jnp.take(tp, segc), 0)
+    return seg, comp
+
+
+def _kernel(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
+    T = ctrl_ref.shape[1] * 4
+    D = sp_ref.shape[1]
+    gaps = _decode(ctrl_ref, data_ref)
+    seg, comp = _rebase(gaps, seg_ref, sp_ref, sa_ref, D)
+    q = q_ref[0, :]
+    qv = jnp.take(q, comp, axis=0)
+    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
+    prod = qv * vals * (seg >= 0).astype(jnp.float32)  # [T]
+    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
+        jnp.float32
+    )
+    out_ref[0, :] = jnp.dot(prod[None, :], onehot, preferred_element_type=jnp.float32)[0]
+
+
+def _kernel_batch(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
+    """Decode ONCE per block, score every VMEM-resident query against it."""
+    T = ctrl_ref.shape[1] * 4
+    D = sp_ref.shape[1]
+    gaps = _decode(ctrl_ref, data_ref)
+    seg, comp = _rebase(gaps, seg_ref, sp_ref, sa_ref, D)
+    Q = q_ref[...]  # [nq, V] resident across the whole grid
+    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
+    w = vals * (seg >= 0).astype(jnp.float32)
+    qv = jnp.take(Q, comp, axis=1)  # [nq, T]
+    prod = qv * w[None, :]
+    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
+        jnp.float32
+    )
+    out_ref[0] = jnp.dot(prod, onehot, preferred_element_type=jnp.float32)  # [nq, D]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def streamvbyte_block_scores(
+    q: jnp.ndarray,  # [vocab_pad] f32, vocab_pad % 128 == 0
+    ctrl: jnp.ndarray,  # [B, T/4] u8
+    data: jnp.ndarray,  # [B, DP] u8, DP % 128 == 0, ≥ 3 over-read bytes
+    seg: jnp.ndarray,  # [B, T] i32 (or i8, slim layout)
+    start_pos: jnp.ndarray,  # [B, D] i32
+    start_abs: jnp.ndarray,  # [B, D] i32
+    vals: jnp.ndarray,  # [B, T] storage dtype
+    *,
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-block document scores [B, D] (combine with scatter_block_scores)."""
+    B, T4 = ctrl.shape
+    T = T4 * 4
+    D = start_pos.shape[1]
+    DP = data.shape[1]
+    V = q.shape[0]
+    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, V), lambda b: (0, 0)),  # q resident across grid
+            row(T4),
+            row(DP),
+            row(T),
+            row(D),
+            row(D),
+            row(T),
+        ],
+        out_specs=row(D),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(q[None, :], ctrl, data, seg, start_pos, start_abs, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def streamvbyte_block_scores_batch(
+    Q: jnp.ndarray,  # [nq, vocab_pad] f32
+    ctrl: jnp.ndarray,
+    data: jnp.ndarray,
+    seg: jnp.ndarray,
+    start_pos: jnp.ndarray,
+    start_abs: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """[B, nq, D] per-block scores for a query batch (decode once/block)."""
+    B, T4 = ctrl.shape
+    T = T4 * 4
+    D = start_pos.shape[1]
+    DP = data.shape[1]
+    nq, V = Q.shape
+    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel_batch, scale=scale),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((nq, V), lambda b: (0, 0)),
+            row(T4),
+            row(DP),
+            row(T),
+            row(D),
+            row(D),
+            row(T),
+        ],
+        out_specs=pl.BlockSpec((1, nq, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nq, D), jnp.float32),
+        interpret=interpret,
+    )(Q, ctrl, data, seg, start_pos, start_abs, vals)

@@ -87,10 +87,16 @@ class RetrieverConfig:
     ``params`` carries the engine-specific knobs (build AND search
     time); unknown keys are rejected against the engine's declared
     defaults, so typos fail at construction rather than silently
-    serving defaults."""
+    serving defaults.
+
+    ``backend`` selects the candidate-rescoring execution path
+    (DESIGN.md §3): ``"jnp"`` (reference) or ``"pallas"`` (fused
+    kernels from ``repro.kernels.registry`` — identical top-k,
+    asserted by the parity suite and ``make kernel-parity``)."""
 
     engine: str = "seismic"
     codec: str = "uncompressed"
+    backend: str = "jnp"  # "jnp" | "pallas" scoring path
     k: int = 10
     batch_size: int | None = None  # optional static query-batch hint
     n_shards: int = 1  # index shards for the sharded path
@@ -238,6 +244,10 @@ class Retriever:
     ):
         self.impl = get_engine(cfg.engine)
         layout.get_layout(cfg.codec)  # raises listing the known codecs
+        if cfg.backend not in ("jnp", "pallas"):
+            raise ValueError(
+                f"unknown backend {cfg.backend!r}; have ['jnp', 'pallas']"
+            )
         self.impl.params(cfg)  # rejects unknown engine knobs early
         self.cfg = cfg
         self.n_docs = int(n_docs)
@@ -326,6 +336,7 @@ class Retriever:
             "version": MANIFEST_VERSION,
             "engine": self.cfg.engine,
             "codec": self.cfg.codec,
+            "backend": self.cfg.backend,
             "k": self.cfg.k,
             "n_shards": self.cfg.n_shards,
             "params": dict(self.cfg.params),
@@ -404,6 +415,7 @@ def open_retriever(path) -> Retriever:
     cfg = RetrieverConfig(
         engine=engine,
         codec=codec,
+        backend=manifest.get("backend", "jnp"),  # pre-backend artifacts
         k=int(manifest["k"]),
         n_shards=int(manifest.get("n_shards", 1)),
         params=manifest.get("params", {}),

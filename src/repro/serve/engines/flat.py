@@ -40,7 +40,9 @@ class FlatEngine(EngineImpl):
     def search_one(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, q):
         """One dense query → (ids [k], scores [k]): score ALL rows."""
         docs = jnp.arange(arrays["nnz_rows"].shape[0], dtype=jnp.int32)
-        scores = score_candidate_rows(cfg.codec, arrays, docs, q, value_scale)
+        scores = score_candidate_rows(
+            cfg.codec, arrays, docs, q, value_scale, backend=cfg.backend
+        )
         scores = jnp.where(docs < n_docs, scores, -jnp.inf)
         top_s, idx = jax.lax.top_k(scores, cfg.k)
         return jnp.take(docs, idx), top_s

@@ -88,7 +88,9 @@ class HNSWEngine(EngineImpl):
         beam, iters = p["beam"], p["iters"]
 
         def score_docs(docs):
-            return score_candidate_rows(cfg.codec, arrays, docs, q, value_scale)
+            return score_candidate_rows(
+                cfg.codec, arrays, docs, q, value_scale, backend=cfg.backend
+            )
 
         seeds = arrays["seeds"]  # i32 [n_seeds], sentinel-padded
         live = seeds < n_docs

@@ -144,7 +144,9 @@ class SeismicEngine(EngineImpl):
         dup = jnp.concatenate([jnp.zeros(1, bool), docs[1:] == docs[:-1]])
         docs = jnp.where(dup, n_docs, docs)
 
-        scores = score_candidate_rows(cfg.codec, arrays, docs, q, value_scale)
+        scores = score_candidate_rows(
+            cfg.codec, arrays, docs, q, value_scale, backend=cfg.backend
+        )
         scores = jnp.where(docs < n_docs, scores, -jnp.inf)
         top_s, idx = jax.lax.top_k(scores, cfg.k)
         return jnp.take(docs, idx), top_s

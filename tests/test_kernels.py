@@ -1,16 +1,35 @@
 """Per-kernel validation: shape/dtype sweeps, Pallas (interpret=True)
-vs the pure-jnp oracle in repro.kernels.ref, and end-to-end vs the CSR
-numpy ground truth."""
+vs the pure-jnp oracle in repro.kernels.ref, end-to-end vs the CSR
+numpy ground truth, and the fused rows-rescoring kernels vs the jnp
+``score_candidate_rows`` chain (every registry codec, empty-row and
+sentinel-doc-id edge cases included)."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import layout
 from repro.core.forward_index import ForwardIndex, pack_forward_index
+from repro.core.scoring import score_candidate_rows, score_packed, score_packed_batch
 from repro.kernels.bitpack_dot import bitpack_block_scores, bitpack_block_scores_w
 from repro.kernels.dotvbyte_dot import dotvbyte_block_scores
-from repro.kernels.ops import pad_to, score_bitpack, score_bitpack_bucketed, score_dotvbyte
-from repro.kernels.ref import bitpack_block_scores_ref, dotvbyte_block_scores_ref
+from repro.kernels.ops import (
+    pad_to,
+    score_bitpack,
+    score_bitpack_bucketed,
+    score_dotvbyte,
+    score_dotvbyte_batch,
+    score_streamvbyte,
+    score_streamvbyte_batch,
+)
+from repro.kernels.ref import (
+    bitpack_block_scores_ref,
+    dotvbyte_block_scores_ref,
+    streamvbyte_block_scores_ref,
+)
+from repro.kernels.registry import available_kernels, get_kernels
+from repro.kernels.streamvbyte_dot import streamvbyte_block_scores
 
 
 def _collection(rng, n_docs, dim, max_nnz, value_format):
@@ -86,6 +105,29 @@ def test_bitpack_kernel_vs_ref(dim, bs, n_docs, max_nnz, vf):
     np.testing.assert_allclose(np.asarray(kern), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("dim,bs,n_docs,max_nnz,vf", SWEEP)
+def test_streamvbyte_kernel_vs_ref(dim, bs, n_docs, max_nnz, vf):
+    rng = np.random.default_rng(dim * 7 + bs)
+    fwd = _collection(rng, n_docs, dim, max_nnz, vf)
+    packed = pack_forward_index(fwd, codec="streamvbyte", block_size=bs)
+    q = _query(rng, dim)
+    qpad = np.zeros(((dim + 127) // 128) * 128, np.float32)
+    qpad[:dim] = q
+    args = (
+        jnp.asarray(qpad),
+        jnp.asarray(packed.ctrl),
+        jnp.asarray(pad_to(packed.data, 128, axis=1)),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+    )
+    scale = float(packed.value_format.scale)
+    kern = streamvbyte_block_scores(*args, scale=scale, interpret=True)
+    ref = streamvbyte_block_scores_ref(*args, scale=scale)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("vf", ["f32", "f16", "fixedu8"])
 def test_kernel_paths_end_to_end(vf):
     """Kernel wrappers vs numpy CSR ground truth, all value formats."""
@@ -95,15 +137,143 @@ def test_kernel_paths_end_to_end(vf):
     q = _query(rng, dim)
     want = fwd.exact_scores(q)
     pd = pack_forward_index(fwd, codec="dotvbyte")
+    ps = pack_forward_index(fwd, codec="streamvbyte")
     pb = pack_forward_index(fwd, codec="bitpack")
     for name, got in [
         ("dotvbyte", score_dotvbyte(q, pd, interpret=True)),
+        ("streamvbyte", score_streamvbyte(q, ps, interpret=True)),
         ("bitpack", score_bitpack(q, pb, interpret=True)),
         ("bitpack_bucketed", score_bitpack_bucketed(q, pb, interpret=True)),
     ]:
         np.testing.assert_allclose(
             np.asarray(got), want, atol=5e-3, rtol=2e-3, err_msg=name
         )
+
+
+def test_batched_scan_kernels_match_single():
+    """Decode-once/score-many variants == per-query single kernel, and
+    the vmapped ``score_packed_batch`` == stacked ``score_packed``."""
+    rng = np.random.default_rng(17)
+    dim = 4096
+    fwd = _collection(rng, 60, dim, 120, "f16")
+    Q = np.stack([_query(rng, dim) for _ in range(3)])
+    pd = pack_forward_index(fwd, codec="dotvbyte", block_size=128)
+    ps = pack_forward_index(fwd, codec="streamvbyte", block_size=128)
+    for packed, single, batch in [
+        (pd, score_dotvbyte, score_dotvbyte_batch),
+        (ps, score_streamvbyte, score_streamvbyte_batch),
+    ]:
+        got = np.asarray(batch(Q, packed, interpret=True))
+        want = np.stack([np.asarray(single(q, packed, interpret=True)) for q in Q])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    got = np.asarray(score_packed_batch(Q, ps))
+    want = np.stack([np.asarray(score_packed(q, ps)) for q in Q])
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused candidate-row rescoring kernels (registry + rows_dot)
+# ---------------------------------------------------------------------------
+
+
+def _rows_fixture(rng, dim=2048, n_docs=50):
+    """Collection with an empty document; candidate set with the
+    sentinel id, duplicates, and the empty doc — the edge cases the
+    serve engines rely on being neutral."""
+    docs = []
+    for _ in range(n_docs):
+        n = int(rng.integers(1, 90))
+        c = np.sort(rng.choice(dim, size=min(n, dim // 2), replace=False))
+        v = rng.gamma(2.0, 0.5, size=len(c)).astype(np.float32) + 0.05
+        docs.append((c, v))
+    empty_id = len(docs)
+    docs.append((np.zeros(0, np.uint32), np.zeros(0, np.float32)))
+    fwd = ForwardIndex.from_docs(docs, dim, value_format="f16")
+    n = fwd.n_docs
+    cand = np.concatenate(
+        [rng.choice(n, min(24, n), replace=False), [n, empty_id, 3, 3, n]]
+    ).astype(np.int32)
+    return fwd, cand
+
+
+@pytest.mark.parametrize("codec", available_kernels())
+def test_rows_kernel_matches_jnp_chain(codec):
+    rng = np.random.default_rng(sum(codec.encode()))
+    fwd, cand = _rows_fixture(rng)
+    arrays = {k: jnp.asarray(v) for k, v in layout.pack_rows(fwd, codec=codec).arrays().items()}
+    q = _query(rng, fwd.dim)
+    scale = float(fwd.value_format.scale)
+    want = score_candidate_rows(
+        codec, arrays, jnp.asarray(cand), jnp.asarray(q), scale, backend="jnp"
+    )
+    got = get_kernels(codec).rows_scores(
+        arrays, jnp.asarray(cand), jnp.asarray(q), scale, True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    # sentinel and empty rows score exactly 0 on both paths
+    sent = np.asarray(got)[np.asarray(cand) >= fwd.n_docs]
+    np.testing.assert_array_equal(sent, np.zeros_like(sent))
+
+
+@pytest.mark.parametrize("codec", ["streamvbyte", "bitpack"])
+def test_rows_kernel_batch_matches_vmapped_single(codec):
+    """The explicit query-batched rows kernel == vmap of the single-
+    query entry (the form the jit'd Retriever search path uses)."""
+    rng = np.random.default_rng(23)
+    fwd, cand = _rows_fixture(rng)
+    arrays = {k: jnp.asarray(v) for k, v in layout.pack_rows(fwd, codec=codec).arrays().items()}
+    Q = jnp.asarray(np.stack([_query(rng, fwd.dim) for _ in range(4)]))
+    scale = float(fwd.value_format.scale)
+    ks = get_kernels(codec)
+    got = ks.rows_scores_batch(arrays, jnp.asarray(cand), Q, scale, True)
+    want = jax.vmap(
+        lambda q: ks.rows_scores(arrays, jnp.asarray(cand), q, scale, True)
+    )(Q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_registry_surface():
+    """Registry mirrors the layout registry: every layout codec is
+    fused, unknown names raise listing the known ones, and an
+    unregistered codec falls back to jnp with ONE warning."""
+    assert set(available_kernels()) == set(layout.available_layouts())
+    with pytest.raises(ValueError, match=r"bitpack.*streamvbyte"):
+        get_kernels("zstd")
+    # fallback: pallas backend on a codec with no rows kernel
+    from repro.core import scoring
+    from repro.kernels import registry
+
+    rng = np.random.default_rng(3)
+    fwd, cand = _rows_fixture(rng, n_docs=10)
+    arrays = {k: jnp.asarray(v) for k, v in layout.pack_rows(fwd, codec="dotvbyte").arrays().items()}
+    q = jnp.asarray(_query(rng, fwd.dim))
+    scale = float(fwd.value_format.scale)
+    saved_kernels = registry._KERNELS.pop("dotvbyte")
+    saved_warned = set(scoring._NO_ROWS_KERNEL_WARNED)
+    scoring._NO_ROWS_KERNEL_WARNED.clear()
+    try:
+        with pytest.warns(RuntimeWarning, match="no fused rows kernel"):
+            got = score_candidate_rows(
+                "dotvbyte", arrays, jnp.asarray(cand), q, scale, backend="pallas"
+            )
+        import warnings as _w
+
+        with _w.catch_warnings():  # second call: warning already issued
+            _w.simplefilter("error", RuntimeWarning)
+            score_candidate_rows(
+                "dotvbyte", arrays, jnp.asarray(cand), q, scale, backend="pallas"
+            )
+    finally:
+        registry._KERNELS["dotvbyte"] = saved_kernels
+        scoring._NO_ROWS_KERNEL_WARNED.clear()
+        scoring._NO_ROWS_KERNEL_WARNED.update(saved_warned)
+    want = score_candidate_rows(
+        "dotvbyte", arrays, jnp.asarray(cand), q, scale, backend="jnp"
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(ValueError, match="unknown scoring backend"):
+        score_candidate_rows("dotvbyte", arrays, jnp.asarray(cand), q, scale,
+                             backend="mosaic")
 
 
 def test_bucketed_width_kernel_tight_words():
