@@ -1,10 +1,10 @@
 """Benchmark entry point — one section per paper table + kernel/roofline
 extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)
-and snapshots the kernel + serving families to machine-readable
-``BENCH_kernels.json`` / ``BENCH_serve.json`` at the repo root
-(schema: name, µs, parsed derived metrics, git sha — see
-``common.write_bench_json``) so the perf trajectory is diffable across
-PRs.
+and snapshots the kernel + serving + pipeline families to
+machine-readable ``BENCH_kernels.json`` / ``BENCH_serve.json`` /
+``BENCH_pipeline.json`` at the repo root (schema: name, µs, parsed
+derived metrics, git sha — see ``common.write_bench_json``) so the
+perf trajectory is diffable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --fast     # reduced sizes
@@ -28,7 +28,7 @@ from .common import emit, write_bench_json
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _snapshot(kernel_rows, serve_rows, mode: str) -> None:
+def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None) -> None:
     """Write the committed snapshots. ``mode`` (quick/fast/full) is
     recorded in the payload so the perf trajectory is only compared
     like-for-like; a family is only (over)written when its sections
@@ -40,6 +40,9 @@ def _snapshot(kernel_rows, serve_rows, mode: str) -> None:
     if serve_rows:
         write_bench_json(os.path.join(_ROOT, "BENCH_serve.json"), serve_rows,
                          meta={"mode": mode})
+    if pipeline_rows:
+        write_bench_json(os.path.join(_ROOT, "BENCH_pipeline.json"),
+                         pipeline_rows, meta={"mode": mode})
 
 
 def _quick_smoke() -> int:
@@ -59,25 +62,29 @@ def _quick_smoke() -> int:
     if proc.returncode:
         return proc.returncode
 
-    from . import kernel_bench, table1_codecs, table2_seismic, table3_graph
+    from . import (kernel_bench, table1_codecs, table2_seismic, table3_graph,
+                   table4_pipeline)
 
-    print("# tiny table1/table2/table3 + kernels…", file=sys.stderr, flush=True)
+    print("# tiny table1/table2/table3/table4 + kernels…", file=sys.stderr,
+          flush=True)
     rows = table1_codecs.run(n_docs=400, n_queries=2, rgb_iters=2)
     serve_rows = table2_seismic.run(n_docs=400, n_queries=4)
     serve_rows += table3_graph.run(n_docs=400, n_queries=4)
     kernel_rows = kernel_bench.run(n_docs=300)
-    rows += serve_rows + kernel_rows
+    pipeline_rows = table4_pipeline.run(n_docs=400, n_queries=8, n_requests=64)
+    rows += serve_rows + kernel_rows + pipeline_rows
     emit(rows)
     # a NaN latency means no sweep point reached the accuracy level —
-    # the codec/accuracy regression class this gate exists to catch
-    # (at these sizes a healthy build produces zero NaN rows)
+    # or, for the pipeline/amortized-gate rows, that bucketed serving
+    # failed to beat per-query dispatch — the regression classes this
+    # gate exists to catch (a healthy build produces zero NaN rows)
     bad = [r.name for r in rows if r.us != r.us]
     if bad:
         print(f"# quick smoke FAILED: unmet accuracy rows: {bad}", file=sys.stderr)
         return 1
     # snapshot only after the gate passes — a failing run must not
     # overwrite the committed trajectory with regression numbers
-    _snapshot(kernel_rows, serve_rows, mode="quick")
+    _snapshot(kernel_rows, serve_rows, mode="quick", pipeline_rows=pipeline_rows)
     print(f"# quick smoke OK ({len(rows)} rows)", file=sys.stderr)
     return 0
 
@@ -88,7 +95,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tier-1 pytest + tiny table1/table2/table3")
     ap.add_argument("--only", default=None,
-                    choices=["table1", "table2", "table3", "kernel", "roofline"])
+                    choices=["table1", "table2", "table3", "table4", "kernel",
+                             "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -106,17 +114,21 @@ def main() -> None:
         by_section[name] = got
         rows.extend(got)
 
-    from . import kernel_bench, roofline, table1_codecs, table2_seismic, table3_graph
+    from . import (kernel_bench, roofline, table1_codecs, table2_seismic,
+                   table3_graph, table4_pipeline)
 
     if args.fast:
         section("table1", lambda: table1_codecs.run(n_docs=1500, n_queries=2, rgb_iters=3))
         section("table2", lambda: table2_seismic.run(n_docs=1200, n_queries=6))
         section("table3", lambda: table3_graph.run(n_docs=800, n_queries=6))
+        section("table4", lambda: table4_pipeline.run(n_docs=800, n_queries=16,
+                                                      n_requests=128))
         section("kernel", lambda: kernel_bench.run(n_docs=800))
     else:
         section("table1", lambda: table1_codecs.run())
         section("table2", lambda: table2_seismic.run())
         section("table3", lambda: table3_graph.run())
+        section("table4", lambda: table4_pipeline.run())
         section("kernel", lambda: kernel_bench.run())
     section("roofline", roofline.run)
 
@@ -126,6 +138,7 @@ def main() -> None:
         by_section.get("table2", []) + by_section.get("table3", [])
         if serve_complete else [],
         mode="fast" if args.fast else "full",
+        pipeline_rows=by_section.get("table4", []),
     )
     emit(rows)
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)

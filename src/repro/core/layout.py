@@ -15,8 +15,8 @@ Both forms reduce to the same primitive: a 2-D matrix of d-gaps, one
 row per block/document, padded with zeros.  A ``LayoutCodec`` turns
 that matrix into named byte/word streams (and back, in jnp, on
 device).  Registering a codec here makes it available to *every*
-consumer — ``pack_forward_index``, the sharded scan, the batched
-Seismic engine — which is what lets ``EngineConfig(codec=…)`` swap the
+consumer — ``pack_forward_index``, the sharded scan, every registry
+engine — which is what lets ``RetrieverConfig(codec=…)`` swap the
 forward-index wire format without touching the serving code.
 
 Gap conventions (DESIGN.md §3):

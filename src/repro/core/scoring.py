@@ -33,6 +33,7 @@ __all__ = [
     "score_packed_batch",
     "decode_doc_rows",
     "score_candidate_rows",
+    "score_candidate_rows_batch",
 ]
 
 
@@ -375,6 +376,47 @@ def decode_doc_rows_dotvbyte(ctrl_rows: jnp.ndarray, data_rows: jnp.ndarray) -> 
 _NO_ROWS_KERNEL_WARNED: set = set()
 
 
+def _check_rows_backend(backend: str) -> None:
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(
+            f"unknown scoring backend {backend!r}; have ['jnp', 'pallas']"
+        )
+
+
+def _warn_no_rows_kernel(codec: str) -> None:
+    if codec not in _NO_ROWS_KERNEL_WARNED:
+        import warnings
+
+        _NO_ROWS_KERNEL_WARNED.add(codec)
+        warnings.warn(
+            f"codec {codec!r} has no fused rows kernel registered; "
+            f"serving backend='pallas' through the jnp path",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+def _gather_decode_rows(codec: str, arrays, docs: jnp.ndarray):
+    """Gather + decode the packed rows of ``docs`` → (comps, vals,
+    nnz) — the ONE row-materialisation both the single-query and the
+    batched jnp rescoring paths share (so a codec/layout change lands
+    in exactly one place)."""
+    from .layout import get_layout
+
+    vals = jnp.take(arrays["vals_rows"], docs, axis=0)
+    nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
+    if get_layout(codec).decode_free:  # absolute components stored raw
+        comps = jnp.take(arrays["comps_rows"], docs, axis=0)
+    else:
+        payload = {
+            k: jnp.take(arrays[k], docs, axis=0)
+            for k in arrays
+            if k.endswith("_rows") and k not in _ROW_COMMON_KEYS
+        }
+        comps = decode_doc_rows(codec, payload, l_max=vals.shape[-1])
+    return comps, vals, nnz
+
+
 def score_candidate_rows(
     codec: str,
     arrays,
@@ -399,40 +441,49 @@ def score_candidate_rows(
     one-time warning when the codec has no registered rows kernel.
     Both paths return identical scores (asserted by the parity suite
     and ``make kernel-parity``)."""
-    if backend not in ("jnp", "pallas"):
-        raise ValueError(
-            f"unknown scoring backend {backend!r}; have ['jnp', 'pallas']"
-        )
+    _check_rows_backend(backend)
     if backend == "pallas":
         from repro.kernels.registry import rows_scorer
 
         fn = rows_scorer(codec)
         if fn is not None:
             return fn(arrays, docs, q, scale)
-        if codec not in _NO_ROWS_KERNEL_WARNED:
-            import warnings
-
-            _NO_ROWS_KERNEL_WARNED.add(codec)
-            warnings.warn(
-                f"codec {codec!r} has no fused rows kernel registered; "
-                f"serving backend='pallas' through the jnp path",
-                RuntimeWarning,
-                stacklevel=2,
-            )
-    from .layout import get_layout
-
-    vals = jnp.take(arrays["vals_rows"], docs, axis=0)
-    nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
-    if get_layout(codec).decode_free:  # absolute components stored raw
-        comps = jnp.take(arrays["comps_rows"], docs, axis=0)
-    else:
-        payload = {
-            k: jnp.take(arrays[k], docs, axis=0)
-            for k in arrays
-            if k.endswith("_rows") and k not in _ROW_COMMON_KEYS
-        }
-        comps = decode_doc_rows(codec, payload, l_max=vals.shape[-1])
+        _warn_no_rows_kernel(codec)
+    comps, vals, nnz = _gather_decode_rows(codec, arrays, docs)
     return score_doc_rows(q, comps, vals, nnz, scale)
+
+
+def score_candidate_rows_batch(
+    codec: str,
+    arrays,
+    docs: jnp.ndarray,
+    Q: jnp.ndarray,
+    scale: float,
+    backend: str = "jnp",
+) -> jnp.ndarray:
+    """Rescore ONE candidate set against a whole query batch → [nq, C].
+
+    The decode-once/score-many form of ``score_candidate_rows``
+    (DESIGN.md §8): when every query in a batch shares the candidate
+    set (the flat engine's full scan; shard-replicated rescoring), the
+    candidate rows are gathered and decoded once and dotted against
+    every resident query. ``backend="pallas"`` dispatches to the codec's
+    ``rows_scores_batch`` kernel registry entry, which keeps each
+    decoded row in VMEM across the whole query batch; the jnp path
+    hoists the decode out of a ``vmap`` over ``score_doc_rows``, so
+    per-query scores are bitwise those of the single-query path."""
+    _check_rows_backend(backend)
+    if backend == "pallas":
+        from repro.kernels.registry import rows_batch_scorer
+
+        fn = rows_batch_scorer(codec)
+        if fn is not None:
+            return fn(arrays, docs, Q, scale)
+        _warn_no_rows_kernel(codec)
+    comps, vals, nnz = _gather_decode_rows(codec, arrays, docs)
+    # comps/vals/nnz carry no query axis → the decode stays un-batched
+    # under vmap (computed once); only the q-gather + FMA replicate
+    return jax.vmap(lambda q: score_doc_rows(q, comps, vals, nnz, scale))(Q)
 
 
 def score_doc_rows(

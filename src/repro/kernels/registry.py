@@ -54,6 +54,7 @@ __all__ = [
     "get_kernels",
     "available_kernels",
     "rows_scorer",
+    "rows_batch_scorer",
 ]
 
 
@@ -106,6 +107,17 @@ def rows_scorer(codec: str) -> Optional[Callable]:
     if factory is None:
         return None
     return factory().rows_scores
+
+
+def rows_batch_scorer(codec: str) -> Optional[Callable]:
+    """The fused decode-once/score-many rows entry for ``codec`` —
+    one shared candidate set, a resident query batch — or None when
+    unregistered (callers fall back to the jnp batch path — see
+    ``scoring.score_candidate_rows_batch``)."""
+    factory = _KERNELS.get(codec)
+    if factory is None:
+        return None
+    return factory().rows_scores_batch
 
 
 # ---------------------------------------------------------------------------

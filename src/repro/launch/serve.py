@@ -18,6 +18,15 @@ build, serves from the artifacts, and — when the saved top-k is
 present — verifies the reopened index returns byte-identical results
 (the ``make serve-roundtrip`` smoke).
 
+``--pipeline`` switches to the online-serving load generator
+(DESIGN.md §8): a seeded synthetic traffic trace (one request at a
+time, a Zipf-ish repeat-heavy head to exercise the result cache,
+optional ``--trace-qps`` pacing) is driven through the micro-batching
+scheduler; every response is verified byte-identical to a direct
+``Retriever.search`` of the same query, then the ServeStats block
+(QPS, p50/p95/p99, hit rate, bucket occupancy, recompiles) is
+reported — the ``make pipeline-smoke`` gate.
+
 The HNSW host build is a few ms per document — prefer ``--n-docs``
 in the low thousands when sweeping the graph engine interactively.
 """
@@ -42,6 +51,42 @@ def _report(name, codec, k, recs, dt_us, col, extra=""):
     )
 
 
+def _pipeline_loadgen(retriever, Q, args, rng) -> str:
+    """Drive a synthetic traffic trace through the micro-batching
+    scheduler and verify every response against direct search.
+
+    The trace is repeat-heavy (``--repeat-frac`` of requests re-ask one
+    of a few head queries — the shape of real query logs) so the
+    result cache sees hits; ``--trace-qps`` > 0 paces arrivals in real
+    time, 0 means closed-loop back-to-back (deadline dispatches then
+    fire while previous batches compute). Returns the stats summary;
+    raises AssertionError on any parity violation."""
+    from repro.serve.pipeline import ServeStats, synthetic_trace
+
+    trace = synthetic_trace(rng, args.requests, Q.shape[0],
+                            repeat_frac=args.repeat_frac)
+    direct_ids, direct_scores = retriever.search(Q)
+    direct_ids, direct_scores = np.asarray(direct_ids), np.asarray(direct_scores)
+
+    pipe = retriever.pipeline(deadline_us=args.deadline_us,
+                              cache_size=args.cache_size)
+    gap = 1.0 / args.trace_qps if args.trace_qps > 0 else 0.0
+    tickets = []
+    for qi in trace:
+        if gap:
+            time.sleep(gap)
+        pipe.poll()  # fire expired deadlines before admitting
+        tickets.append(pipe.submit(Q[qi]))
+    pipe.flush()
+
+    for qi, t in zip(trace, tickets):
+        assert np.array_equal(t.ids, direct_ids[qi]), (
+            f"pipeline top-k ids diverge from direct search (query {qi})")
+        assert np.array_equal(t.scores, direct_scores[qi]), (
+            f"pipeline top-k scores diverge from direct search (query {qi})")
+    return ServeStats.summary(pipe.snapshot())
+
+
 def main() -> None:
     from repro.core.layout import available_layouts
     from repro.serve.api import available_engines
@@ -61,6 +106,22 @@ def main() -> None:
                          "or the artifact's saved backend under --load-index")
     ap.add_argument("--compare-codecs", action="store_true",
                     help="sweep every registered serving codec over the same index")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="online-serving load generator (DESIGN.md §8): "
+                         "drive a synthetic traffic trace through the "
+                         "micro-batching scheduler, verify parity vs "
+                         "direct search, report ServeStats")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="trace length for --pipeline")
+    ap.add_argument("--deadline-us", type=float, default=1000.0,
+                    help="--pipeline batch-filling deadline (µs)")
+    ap.add_argument("--trace-qps", type=float, default=0.0,
+                    help="--pipeline arrival pacing; 0 = closed-loop")
+    ap.add_argument("--repeat-frac", type=float, default=0.25,
+                    help="--pipeline fraction of requests re-asking a "
+                         "head query (result-cache exercise)")
+    ap.add_argument("--cache-size", type=int, default=1024,
+                    help="--pipeline result-cache capacity (0 disables)")
     ap.add_argument("--save-index", metavar="DIR", default=None,
                     help="save each built index artifact under DIR/<engine>-<codec>/")
     ap.add_argument("--load-index", metavar="DIR", default=None,
@@ -76,6 +137,9 @@ def main() -> None:
     args = ap.parse_args()
     if args.save_index and args.load_index:
         ap.error("--save-index and --load-index are mutually exclusive")
+    if args.pipeline and (args.save_index or args.load_index):
+        ap.error("--pipeline is a serving-loop mode; run it without "
+                 "--save-index/--load-index")
 
     from repro.core.seismic import exact_top_k, recall_at_k
     from repro.data.synthetic import generate_collection, lilsr_config, splade_config
@@ -148,6 +212,12 @@ def main() -> None:
                 retriever = Retriever.from_host_index(host_indexes[name], cfg)
             else:
                 retriever = Retriever.build(col.fwd, cfg)
+            if args.pipeline:
+                rng = np.random.default_rng(args.seed + 1)
+                summary = _pipeline_loadgen(retriever, Q, args, rng)
+                print(f"{name:8s} codec={codec:13s} pipeline parity OK "
+                      f"({args.requests} requests) [{summary}]")
+                continue
             ids, scores = retriever.search(Q)  # compile
             t0 = time.time()
             ids, scores = retriever.search(Q)

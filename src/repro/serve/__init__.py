@@ -1,3 +1,4 @@
 """Serving layer: the engine-agnostic ``Retriever`` API (``api``), the
-registered engines (``engines``), and the deprecated per-engine shims
-(``engine``, ``graph_engine``). See DESIGN.md §7."""
+registered engines (``engines``), and the online serving pipeline —
+plan cache, micro-batching scheduler, result cache, metrics
+(``pipeline``). See DESIGN.md §7–§8."""

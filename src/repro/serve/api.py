@@ -28,9 +28,18 @@ engine params). The engine-agnostic surface is then:
 
 Three engines ship registered: ``seismic`` (two-phase block probe),
 ``hnsw`` (static beam search) and ``flat`` (exact full scan — proof
-the registry is open, and the recall oracle). The per-engine wrapper
-classes in ``repro.serve.engine`` / ``repro.serve.graph_engine`` are
-deprecated shims over this module, kept for one release.
+the registry is open, and the recall oracle).
+
+Execution goes through the online serving pipeline
+(``repro.serve.pipeline``, DESIGN.md §8): ``Retriever`` holds a
+``PlanCache`` — one compiled executable per ``(engine, codec,
+backend, k, bucket)`` — and ``search`` pads any query batch up to its
+smallest covering bucket so arbitrary batch sizes hit a warm plan;
+``search_batch`` reroutes through the micro-batching scheduler
+(deadline coalescing + quantized-query result cache + ServeStats).
+The per-engine wrapper shims of PR-1/PR-2 (``repro.serve.engine``,
+``repro.serve.graph_engine``) were removed after one deprecation
+release.
 """
 
 from __future__ import annotations
@@ -47,6 +56,7 @@ import numpy as np
 
 from repro.core import layout
 from repro.core.forward_index import VALUE_FORMATS, ForwardIndex
+from repro.serve import pipeline as serve_pipeline
 
 __all__ = [
     "RetrieverConfig",
@@ -92,13 +102,18 @@ class RetrieverConfig:
     ``backend`` selects the candidate-rescoring execution path
     (DESIGN.md §3): ``"jnp"`` (reference) or ``"pallas"`` (fused
     kernels from ``repro.kernels.registry`` — identical top-k,
-    asserted by the parity suite and ``make kernel-parity``)."""
+    asserted by the parity suite and ``make kernel-parity``).
+
+    ``batch_size`` is the expected steady-state query-batch size: it
+    joins the pipeline's padding-bucket set (DESIGN.md §8) so that
+    batch shape gets an exact-fit compiled plan instead of rounding up
+    to the next power-of-two bucket."""
 
     engine: str = "seismic"
     codec: str = "uncompressed"
     backend: str = "jnp"  # "jnp" | "pallas" scoring path
     k: int = 10
-    batch_size: int | None = None  # optional static query-batch hint
+    batch_size: int | None = None  # steady-state batch hint → bucket set
     n_shards: int = 1  # index shards for the sharded path
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -141,6 +156,20 @@ class EngineImpl:
     def search_one(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, q):
         """One dense query → (ids [k], scores [k]). Pure, static-shape."""
         raise NotImplementedError
+
+    def search_batch(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, Q):
+        """A query batch → (ids [nq, k], scores [nq, k]) — the unit the
+        pipeline's plan cache compiles (DESIGN.md §8).
+
+        The default is ``vmap(search_one)``: per-query results are
+        independent of batch-mates, which is what makes bucket padding
+        sound. Engines whose candidate sets are query-independent
+        override this with a genuinely batched decode-once/score-many
+        dispatch (``FlatEngine`` → ``scoring.score_candidate_rows_
+        batch`` → the kernel registry's ``rows_scores_batch``)."""
+        return jax.vmap(
+            partial(self.search_one, cfg, n_docs, value_scale, arrays)
+        )(Q)
 
     def array_specs(self, cfg: RetrieverConfig, **dims) -> Dict[str, jax.ShapeDtypeStruct]:
         """ShapeDtypeStruct stand-ins for the engine arrays (dry-run)."""
@@ -248,6 +277,15 @@ class Retriever:
             raise ValueError(
                 f"unknown backend {cfg.backend!r}; have ['jnp', 'pallas']"
             )
+        if cfg.batch_size is not None and (
+            not isinstance(cfg.batch_size, int)
+            or isinstance(cfg.batch_size, bool)
+            or cfg.batch_size < 1
+        ):
+            raise ValueError(
+                f"batch_size must be a positive int or None, got "
+                f"{cfg.batch_size!r}"
+            )
         self.impl.params(cfg)  # rejects unknown engine knobs early
         self.cfg = cfg
         self.n_docs = int(n_docs)
@@ -255,17 +293,11 @@ class Retriever:
         self.value_scale = float(value_scale)
         self.value_format = value_format
         self.arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
-        self._search = jax.jit(
-            jax.vmap(
-                partial(
-                    self.impl.search_one,
-                    cfg,
-                    self.n_docs,
-                    self.value_scale,
-                    self.arrays,
-                )
-            )
-        )
+        # the compile layer (DESIGN.md §8): one executable per
+        # (engine, codec, backend, k, bucket); cfg.batch_size joins the
+        # bucket set so the expected batch shape gets an exact fit
+        self.plans = serve_pipeline.PlanCache(self)
+        self._pipeline: serve_pipeline.Pipeline | None = None
 
     # -- construction ---------------------------------------------------
     @classmethod
@@ -285,8 +317,8 @@ class Retriever:
     @classmethod
     def from_host_index(cls, index, cfg: RetrieverConfig) -> "Retriever":
         """Wrap an already-built host index (``SeismicIndex`` /
-        ``HNSWIndex``) — sweeping codecs over one build, the shims'
-        path. ``cfg``'s build-time params are ignored."""
+        ``HNSWIndex``) — sweeping codecs (or backends) over one build.
+        ``cfg``'s build-time params are ignored."""
         impl = get_engine(cfg.engine)
         if not hasattr(impl, "arrays_from_index"):
             raise ValueError(
@@ -306,9 +338,15 @@ class Retriever:
     def search(self, Q, k: int | None = None):
         """[nq, dim] dense queries → (ids [nq, k], scores [nq, k]).
 
+        Dispatches through the plan cache: ``Q`` pads up to its
+        smallest covering bucket and runs the warm compiled plan for
+        that ``(engine, codec, backend, k, bucket)`` key — padded
+        slots carry the zero query and are sliced off, so results are
+        byte-identical to an exact-shape dispatch (DESIGN.md §8).
+
         ``k`` defaults to ``cfg.k`` (the static top-k the search graph
         was traced with); any smaller k is a free slice."""
-        ids, scores = self._search(jnp.asarray(Q))
+        ids, scores = self.plans.search(jnp.asarray(Q))
         if k is None or k == self.cfg.k:
             return ids, scores
         if k > self.cfg.k:
@@ -318,9 +356,30 @@ class Retriever:
             )
         return ids[:, :k], scores[:, :k]
 
-    # kept for engine-class drop-in compatibility (deprecated shims)
+    def pipeline(self, **kw) -> "serve_pipeline.Pipeline":
+        """The micro-batching scheduler over this retriever
+        (DESIGN.md §8). With no arguments, one default instance is
+        created lazily and reused (it shares this retriever's plan
+        cache); keyword arguments (``buckets``, ``deadline_us``,
+        ``cache_size``, ``clock``) construct a fresh pipeline."""
+        if kw:
+            return serve_pipeline.Pipeline(self, **kw)
+        if self._pipeline is None:
+            self._pipeline = serve_pipeline.Pipeline(self)
+        return self._pipeline
+
     def search_batch(self, Q):
-        return self.search(Q)
+        """Serve a query batch through the micro-batching pipeline:
+        admission (result-cache lookup) → bucket coalescing → plan
+        dispatch → per-query de-multiplex, results in submission
+        order. Byte-identical to ``search`` (the parity suite); the
+        result cache keys at the index's own value-quantization
+        tolerance (``pipeline.quantized_query_key``), so on an
+        f16-valued index two queries within one f16 ulp per component
+        share a cache entry — pass ``cache_size=0`` or
+        ``key_dtype=np.float32`` to ``pipeline(...)`` for strict
+        exactness."""
+        return self.pipeline().search_batch(Q)
 
     # -- artifact lifecycle ----------------------------------------------
     def save(self, path) -> pathlib.Path:
@@ -338,6 +397,7 @@ class Retriever:
             "codec": self.cfg.codec,
             "backend": self.cfg.backend,
             "k": self.cfg.k,
+            "batch_size": self.cfg.batch_size,
             "n_shards": self.cfg.n_shards,
             "params": dict(self.cfg.params),
             "n_docs": self.n_docs,
@@ -417,6 +477,7 @@ def open_retriever(path) -> Retriever:
         codec=codec,
         backend=manifest.get("backend", "jnp"),  # pre-backend artifacts
         k=int(manifest["k"]),
+        batch_size=manifest.get("batch_size"),  # pre-pipeline artifacts
         n_shards=int(manifest.get("n_shards", 1)),
         params=manifest.get("params", {}),
     )

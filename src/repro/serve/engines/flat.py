@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import layout
 from repro.core.forward_index import ForwardIndex
-from repro.core.scoring import score_candidate_rows
+from repro.core.scoring import score_candidate_rows, score_candidate_rows_batch
 
 from ..api import EngineImpl, RetrieverConfig, register_engine, row_array_specs
 
@@ -44,6 +44,22 @@ class FlatEngine(EngineImpl):
             cfg.codec, arrays, docs, q, value_scale, backend=cfg.backend
         )
         scores = jnp.where(docs < n_docs, scores, -jnp.inf)
+        top_s, idx = jax.lax.top_k(scores, cfg.k)
+        return jnp.take(docs, idx), top_s
+
+    def search_batch(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, Q):
+        """Genuinely batched full scan (DESIGN.md §8): every query
+        shares the one candidate set (all rows), so the pipeline's
+        bucketed dispatch decodes each row ONCE and scores the whole
+        resident query batch — ``score_candidate_rows_batch``, the
+        kernel registry's ``rows_scores_batch`` under
+        ``backend="pallas"``. Per-query results are bitwise those of
+        ``vmap(search_one)`` (the parity suite)."""
+        docs = jnp.arange(arrays["nnz_rows"].shape[0], dtype=jnp.int32)
+        scores = score_candidate_rows_batch(
+            cfg.codec, arrays, docs, Q, value_scale, backend=cfg.backend
+        )
+        scores = jnp.where(docs[None, :] < n_docs, scores, -jnp.inf)
         top_s, idx = jax.lax.top_k(scores, cfg.k)
         return jnp.take(docs, idx), top_s
 

@@ -15,6 +15,12 @@ decoded per visited node, no block reuse to amortise against.
 Distribution (DESIGN.md §4): documents split into contiguous ranges,
 one self-contained sub-graph per range; ranges are disjoint so the
 generic merge needs no dedupe.
+
+Batched dispatch (DESIGN.md §8): beam trajectories are query-private
+(each query walks its own frontier), so the pipeline's bucketed plans
+compile the inherited ``EngineImpl.search_batch``
+(``vmap(search_one)``) — the win from micro-batching here is one
+device dispatch per bucket instead of per query, not a shared decode.
 """
 
 from __future__ import annotations

@@ -21,6 +21,13 @@ code serves the jit'd production path, the multi-pod dry-run
 (ShapeDtypeStruct arrays via ``array_specs``), and the generic sharded
 driver (``api.make_sharded_search``). A document's blocks scatter
 across shards, so this engine declares ``dedupe_merge``.
+
+Batched dispatch (DESIGN.md §8): each query probes its OWN block set,
+so there is no shared candidate set to decode once — the pipeline's
+bucketed plans compile the inherited ``EngineImpl.search_batch``
+(``vmap(search_one)``), and under ``backend="pallas"`` the vmap
+batching rule lifts the query axis into the rows-kernel grid, which
+amortises the per-dispatch host overhead the bucket exists to kill.
 """
 
 from __future__ import annotations

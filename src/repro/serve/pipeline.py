@@ -1,0 +1,537 @@
+"""Online serving pipeline (DESIGN.md §8): compiled-plan cache,
+bucketed micro-batching scheduler, result cache, and serving metrics.
+
+The paper's claim is that forward-index compression must not
+compromise inner-product latency; this module is where that claim
+meets *traffic* instead of one frozen batch. Four layers, stacked:
+
+* ``PlanCache`` — the compile layer extracted from
+  ``Retriever.__init__``: ONE executable per
+  ``(engine, codec, backend, k, bucket)`` key. Arbitrary query-batch
+  sizes are padded up to the smallest covering bucket (default
+  ``DEFAULT_BUCKETS``, extended by the ``RetrieverConfig.batch_size``
+  hint), so steady-state traffic always hits a warm compiled plan —
+  a fresh batch shape costs a bucket-pad, not an XLA recompile.
+  ``compiles`` counts plan creations (the recompile metric).
+
+* ``Pipeline`` — the host-side micro-batching scheduler: ``submit``
+  admits one query at a time, the queue coalesces into the smallest
+  covering bucket (padded slots carry the zero query and are sliced
+  away on the way out), a full largest-bucket queue dispatches
+  immediately, and ``deadline_us`` bounds how long a lone query waits
+  for batch-mates — latency-sensitive traffic is never starved by
+  batch-filling. Batched work dispatches through the plan cache into
+  the engines' ``search_batch`` (the kernel registry's ``*_batch``
+  rows entries under ``backend="pallas"``), and per-query top-k is
+  de-multiplexed back to each ticket in submission order.
+
+* ``ResultCache`` — an LRU over the *quantized sparse query* (nonzero
+  component ids + values rounded to the index's storage dtype): the
+  repeat-heavy head of real query logs short-circuits dispatch
+  entirely and replays the exact top-k previously served.
+
+* ``ServeStats`` — the metrics contract: QPS, p50/p95/p99 end-to-end
+  latency, result-cache hit rate, per-bucket dispatch counts and
+  occupancy (real queries / bucket capacity), and the plan-cache
+  recompile count.
+
+Determinism contract (tests/test_pipeline.py, ``make pipeline-smoke``):
+bucketed/padded/cached serving returns byte-identical top-k ids and
+scores to a direct ``Retriever.search`` of the same queries, for every
+engine × codec × backend.
+
+The wall clock is injectable (``clock=``) so deadline semantics are
+testable with a fake clock; production uses ``time.perf_counter``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # import cycle: api.py imports this module at runtime
+    from .api import Retriever
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "plan_buckets",
+    "PlanKey",
+    "SearchPlan",
+    "PlanCache",
+    "ResultCache",
+    "ServeStats",
+    "Pipeline",
+    "quantized_query_key",
+    "synthetic_trace",
+]
+
+#: default padding buckets — arbitrary batch sizes round up to the
+#: smallest covering entry; power-of-two spacing bounds pad waste < 2×
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def plan_buckets(
+    batch_size: Optional[int] = None,
+    buckets: Optional[Sequence[int]] = None,
+) -> Tuple[int, ...]:
+    """The sorted bucket set: an explicit ``buckets`` sequence (used
+    verbatim), or ``DEFAULT_BUCKETS`` extended by the
+    ``RetrieverConfig.batch_size`` hint (the expected steady-state
+    batch gets an exact-fit plan)."""
+    if buckets is not None:
+        out = set(buckets)
+    else:
+        out = set(DEFAULT_BUCKETS)
+        if batch_size is not None:
+            out.add(int(batch_size))
+    if not out or any(
+        not isinstance(b, (int, np.integer)) or isinstance(b, bool) or b < 1
+        for b in out
+    ):
+        raise ValueError(
+            f"buckets must be a non-empty set of positive ints, got "
+            f"{sorted(out)}"
+        )
+    return tuple(sorted(int(b) for b in out))
+
+
+def synthetic_trace(
+    rng: np.random.Generator,
+    n_requests: int,
+    n_queries: int,
+    repeat_frac: float = 0.25,
+) -> np.ndarray:
+    """Repeat-heavy query-id trace — the ONE synthetic workload shape
+    the load generator (``launch/serve.py --pipeline``) and the
+    Table-4 scheduler benchmark share, so both gates measure the same
+    traffic: ``repeat_frac`` of requests re-ask one of a small head
+    (``n_queries // 4`` hot queries, the skew of real query logs), the
+    rest draw uniformly. Returns i64 [n_requests] query indices."""
+    n_head = max(1, n_queries // 4)
+    return np.where(
+        rng.random(n_requests) < repeat_frac,
+        rng.integers(0, n_head, size=n_requests),
+        rng.integers(0, n_queries, size=n_requests),
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan cache — the compile layer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Identity of one compiled search executable."""
+
+    engine: str
+    codec: str
+    backend: str
+    k: int
+    bucket: int
+
+
+class SearchPlan:
+    """One warm executable: pad a ``[n ≤ bucket, dim]`` query batch to
+    the bucket shape, run the jit'd engine ``search_batch``, slice the
+    padding back off. Padded slots carry the zero query — ``vmap``
+    keeps per-query results independent, so padding never perturbs the
+    real rows (asserted by the parity suite)."""
+
+    __slots__ = ("key", "_fn")
+
+    def __init__(self, key: PlanKey, fn: Callable):
+        self.key = key
+        self._fn = fn
+
+    def __call__(self, Q) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        Q = jnp.asarray(Q)
+        n, bucket = Q.shape[0], self.key.bucket
+        if n > bucket:
+            raise ValueError(f"batch of {n} exceeds plan bucket {bucket}")
+        if n < bucket:
+            Q = jnp.concatenate(
+                [Q, jnp.zeros((bucket - n, Q.shape[1]), Q.dtype)]
+            )
+        ids, scores = self._fn(Q)
+        return ids[:n], scores[:n]
+
+
+class PlanCache:
+    """Compiled executables of ONE retriever, keyed by padding bucket.
+
+    Holds the jit'd ``impl.search_batch`` (the compile logic that used
+    to live inline in ``Retriever.__init__``) and hands out
+    ``SearchPlan``s per bucket; jax's executable cache is keyed by the
+    padded shape, so plan keys and compiled programs are 1:1.
+    ``compiles`` counts plan creations — the serving-metrics recompile
+    counter. Batches beyond the largest bucket round up to the next
+    power of two, which joins the bucket set (counted as a compile)."""
+
+    def __init__(self, retriever: "Retriever", buckets: Optional[Sequence[int]] = None):
+        import jax
+        from functools import partial
+
+        cfg = retriever.cfg
+        self.buckets = plan_buckets(cfg.batch_size, buckets)
+        self.k = cfg.k
+        self._key = partial(
+            PlanKey, cfg.engine, cfg.codec, cfg.backend, cfg.k
+        )
+        self._dispatch = jax.jit(
+            partial(
+                retriever.impl.search_batch,
+                cfg,
+                retriever.n_docs,
+                retriever.value_scale,
+                retriever.arrays,
+            )
+        )
+        self._plans: Dict[int, SearchPlan] = {}
+        self.compiles = 0
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest covering bucket; beyond the largest, the next power
+        of two (one dispatch, never a silent truncation)."""
+        if n < 1:
+            raise ValueError(f"batch size must be ≥ 1, got {n}")
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return 1 << (n - 1).bit_length()
+
+    def get(self, bucket: int) -> SearchPlan:
+        """The plan for ``bucket``, compiled on first request. Ad hoc
+        beyond-the-largest buckets get a cached plan too, but the
+        configured bucket SET stays fixed — a one-off oversized batch
+        must not raise the scheduler's dispatch threshold."""
+        plan = self._plans.get(bucket)
+        if plan is None:
+            plan = SearchPlan(self._key(bucket=bucket), self._dispatch)
+            self._plans[bucket] = plan
+            self.compiles += 1
+        return plan
+
+    def search(self, Q) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Pad ``Q`` to its covering bucket and run the warm plan.
+        An empty batch short-circuits to empty ``(0, k)`` results."""
+        Q = jnp.asarray(Q)
+        if Q.shape[0] == 0:
+            return (jnp.zeros((0, self.k), jnp.int32),
+                    jnp.zeros((0, self.k), jnp.float32))
+        return self.get(self.bucket_for(Q.shape[0]))(Q)
+
+
+# ---------------------------------------------------------------------------
+# result cache — quantized-query LRU
+# ---------------------------------------------------------------------------
+
+
+def quantized_query_key(q, value_dtype=np.float16) -> bytes:
+    """Cache key of one dense query: the *quantized sparse* form —
+    nonzero component ids + values rounded to ``value_dtype``.
+
+    Sub-f32 keying is a DELIBERATE tolerance, not an exactness claim:
+    scoring uses the full-precision query, so two queries that collide
+    after rounding can have (slightly) different true scores. That is
+    why ``Pipeline`` only defaults to an f16 key when the index itself
+    stores f16 values — the collapse then treats queries within one
+    f16 ulp per component as the same ask, an error of the same order
+    as the value quantization the index already accepts — and keys
+    exactly (f32, identity rounding) otherwise. Exact replays of a
+    served query always hit their own byte-identical entry."""
+    qv = np.asarray(q, dtype=value_dtype)
+    nz = np.flatnonzero(qv).astype(np.int32)
+    return nz.tobytes() + qv[nz].tobytes()
+
+
+class ResultCache:
+    """Bounded LRU of per-query top-k results.
+
+    Keys come from ``quantized_query_key``; values are the
+    ``(ids [k], scores [k])`` numpy pair exactly as served, so a hit
+    replays byte-identical results. Entries are stored as read-only
+    COPIES: a caller mutating the arrays it was handed can never
+    corrupt later replays (and cached rows don't pin whole dispatch
+    batches alive). ``capacity=0`` disables caching (every lookup
+    misses, nothing is stored)."""
+
+    def __init__(self, capacity: int = 1024):
+        if capacity < 0:
+            raise ValueError(f"capacity must be ≥ 0, got {capacity}")
+        self.capacity = int(capacity)
+        self._items: "OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = OrderedDict()
+        self.hits = 0
+        self.lookups = 0
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def get(self, key: bytes) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        self.lookups += 1
+        got = self._items.get(key)
+        if got is None:
+            return None
+        self._items.move_to_end(key)
+        self.hits += 1
+        return got
+
+    def put(self, key: bytes, ids: np.ndarray, scores: np.ndarray) -> None:
+        if self.capacity == 0:
+            return
+        ids, scores = np.array(ids), np.array(scores)  # own the memory
+        ids.flags.writeable = scores.flags.writeable = False
+        self._items[key] = (ids, scores)
+        self._items.move_to_end(key)
+        while len(self._items) > self.capacity:
+            self._items.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+# ---------------------------------------------------------------------------
+# serving metrics
+# ---------------------------------------------------------------------------
+
+
+class ServeStats:
+    """The pipeline metrics block (DESIGN.md §8 metrics contract).
+
+    Latency samples are end-to-end per query (submit → result
+    de-multiplexed), in µs under the pipeline's clock, kept in a
+    bounded sliding window (``window`` most recent — a long-lived
+    pipeline must not grow without bound, and recent percentiles are
+    the ones that matter operationally). ``snapshot()`` returns one
+    flat dict: qps, p50/p95/p99_us, cache_hit_rate, n_queries,
+    dispatches + occupancy per bucket, recompiles."""
+
+    def __init__(self, clock: Callable[[], float], window: int = 8192):
+        self._clock = clock
+        self.t_start = clock()
+        self.n_queries = 0  # completed (cache hits included)
+        self.latencies_us = deque(maxlen=window)
+        self.dispatches: Dict[int, int] = {}  # bucket → dispatch count
+        self.occupancy: Dict[int, int] = {}  # bucket → Σ real queries
+
+    def record_dispatch(self, bucket: int, n_real: int) -> None:
+        self.dispatches[bucket] = self.dispatches.get(bucket, 0) + 1
+        self.occupancy[bucket] = self.occupancy.get(bucket, 0) + n_real
+
+    def record_query(self, latency_us: float) -> None:
+        self.n_queries += 1
+        self.latencies_us.append(latency_us)
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies_us:
+            return float("nan")
+        return float(np.percentile(np.asarray(list(self.latencies_us)), p))
+
+    def snapshot(self, cache: Optional[ResultCache] = None,
+                 plans: Optional[PlanCache] = None) -> dict:
+        elapsed = max(self._clock() - self.t_start, 1e-9)
+        occ = {
+            b: self.occupancy[b] / (b * self.dispatches[b])
+            for b in sorted(self.dispatches)
+        }
+        return {
+            "n_queries": self.n_queries,
+            "qps": self.n_queries / elapsed,
+            "p50_us": self.percentile(50),
+            "p95_us": self.percentile(95),
+            "p99_us": self.percentile(99),
+            "cache_hit_rate": cache.hit_rate if cache is not None else 0.0,
+            "dispatches": dict(sorted(self.dispatches.items())),
+            "bucket_occupancy": occ,
+            "recompiles": plans.compiles if plans is not None else 0,
+        }
+
+    @staticmethod
+    def summary(snap: dict) -> str:
+        occ = " ".join(
+            f"b{b}×{snap['dispatches'][b]}@{snap['bucket_occupancy'][b]:.0%}"
+            for b in snap["dispatches"]
+        )
+        return (
+            f"served={snap['n_queries']} qps={snap['qps']:.0f} "
+            f"p50={snap['p50_us']:.0f}µs p95={snap['p95_us']:.0f}µs "
+            f"p99={snap['p99_us']:.0f}µs hit_rate={snap['cache_hit_rate']:.0%} "
+            f"recompiles={snap['recompiles']} buckets[{occ}]"
+        )
+
+
+# ---------------------------------------------------------------------------
+# micro-batching scheduler
+# ---------------------------------------------------------------------------
+
+
+class PendingQuery:
+    """Ticket returned by ``Pipeline.submit``; ``result()`` flushes the
+    owning pipeline if the query is still queued (closed-loop callers
+    never deadlock on an under-filled bucket)."""
+
+    __slots__ = ("q", "key", "t_submit", "done", "ids", "scores", "from_cache",
+                 "_pipeline")
+
+    def __init__(self, pipeline: "Pipeline", q: np.ndarray, key: bytes,
+                 t_submit: float):
+        self._pipeline = pipeline
+        self.q = q
+        self.key = key
+        self.t_submit = t_submit
+        self.done = False
+        self.from_cache = False
+        self.ids: Optional[np.ndarray] = None
+        self.scores: Optional[np.ndarray] = None
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray]:
+        if not self.done:
+            self._pipeline.flush()
+        assert self.done, "flush() must complete every queued ticket"
+        return self.ids, self.scores
+
+    def _complete(self, ids: np.ndarray, scores: np.ndarray, now: float,
+                  stats: ServeStats) -> None:
+        self.ids, self.scores = ids, scores
+        self.done = True
+        stats.record_query(1e6 * (now - self.t_submit))
+
+
+class Pipeline:
+    """Host-side micro-batching scheduler over one ``Retriever``.
+
+    Admission → coalescing → dispatch → de-multiplex:
+
+    * ``submit(q)`` checks the result cache (a hit completes the
+      ticket immediately), else enqueues; a queue at the largest
+      bucket's capacity dispatches at once.
+    * ``poll()`` fires the deadline: once the OLDEST queued query has
+      waited ``deadline_us``, the queue dispatches into its smallest
+      covering bucket rather than waiting for batch-mates. Call it on
+      every scheduler turn (the load generator calls it before each
+      arrival).
+    * ``flush()`` dispatches whatever is queued (end of trace /
+      ``result()`` on a queued ticket).
+    * ``search_batch(Q)`` is the synchronous convenience loop:
+      submit every row, flush, return results stacked in submission
+      order — the surface ``Retriever.search_batch`` reroutes to.
+
+    The plan cache is shared with the owning retriever (a direct
+    ``retriever.search`` and the pipeline warm the same executables).
+    """
+
+    def __init__(
+        self,
+        retriever: "Retriever",
+        *,
+        buckets: Optional[Sequence[int]] = None,
+        deadline_us: float = 1000.0,
+        cache_size: int = 1024,
+        key_dtype=None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if deadline_us < 0:
+            raise ValueError(f"deadline_us must be ≥ 0, got {deadline_us}")
+        self.retriever = retriever
+        self.plans = (
+            retriever.plans if buckets is None
+            else PlanCache(retriever, buckets)
+        )
+        self.deadline_us = float(deadline_us)
+        self.cache = ResultCache(cache_size)
+        if key_dtype is None:
+            # match the cache tolerance to the index's own value
+            # quantization: f16 keys for f16-valued rows, exact (f32)
+            # keys for everything else — see quantized_query_key
+            vals = retriever.arrays.get("vals_rows")
+            key_dtype = (
+                np.float16
+                if vals is not None and vals.dtype == jnp.float16
+                else np.float32
+            )
+        self.key_dtype = key_dtype  # result-cache tolerance knob
+        self._clock = clock
+        self.stats = ServeStats(clock)
+        self._queue: List[PendingQuery] = []
+
+    # -- admission ------------------------------------------------------
+    def submit(self, q) -> PendingQuery:
+        q = np.asarray(q, dtype=np.float32)
+        now = self._clock()
+        # key computation is an O(dim) scan — skip it entirely when the
+        # cache is disabled (the strict-exactness path stays lean)
+        caching = self.cache.capacity > 0
+        key = quantized_query_key(q, self.key_dtype) if caching else b""
+        ticket = PendingQuery(self, q, key, now)
+        if caching:
+            hit = self.cache.get(ticket.key)
+            if hit is not None:
+                ticket.from_cache = True
+                ticket._complete(hit[0], hit[1], self._clock(), self.stats)
+                return ticket
+        self._queue.append(ticket)
+        if len(self._queue) >= self.plans.buckets[-1]:
+            self._dispatch()
+        return ticket
+
+    # -- scheduling -----------------------------------------------------
+    def poll(self) -> int:
+        """Fire the deadline if the oldest queued query has expired;
+        returns how many queries were dispatched."""
+        if not self._queue:
+            return 0
+        waited_us = 1e6 * (self._clock() - self._queue[0].t_submit)
+        if waited_us >= self.deadline_us:
+            return self._dispatch()
+        return 0
+
+    def flush(self) -> int:
+        """Dispatch every queued query (possibly several buckets)."""
+        n = 0
+        while self._queue:
+            n += self._dispatch()
+        return n
+
+    def _dispatch(self) -> int:
+        """Coalesce the queue head into its smallest covering bucket,
+        run the plan, de-multiplex per-query top-k, feed the cache."""
+        if not self._queue:
+            return 0
+        cap = self.plans.buckets[-1]
+        batch, self._queue = self._queue[:cap], self._queue[cap:]
+        bucket = self.plans.bucket_for(len(batch))
+        Q = np.stack([t.q for t in batch])
+        ids, scores = self.plans.get(bucket)(Q)
+        ids, scores = np.asarray(ids), np.asarray(scores)
+        now = self._clock()
+        self.stats.record_dispatch(bucket, len(batch))
+        caching = self.cache.capacity > 0
+        for i, t in enumerate(batch):
+            t._complete(ids[i], scores[i], now, self.stats)
+            if caching:
+                self.cache.put(t.key, ids[i], scores[i])
+        return len(batch)
+
+    # -- synchronous convenience surface --------------------------------
+    def search_batch(self, Q) -> Tuple[np.ndarray, np.ndarray]:
+        """Serve a whole query batch through the scheduler: results
+        stacked in submission order, byte-identical to a direct
+        ``Retriever.search`` of the same rows (the parity invariant)."""
+        Q = np.asarray(Q)
+        if Q.shape[0] == 0:
+            k = self.retriever.cfg.k
+            return np.zeros((0, k), np.int32), np.zeros((0, k), np.float32)
+        tickets = [self.submit(q) for q in Q]
+        self.flush()
+        ids = np.stack([t.ids for t in tickets])
+        scores = np.stack([t.scores for t in tickets])
+        return ids, scores
+
+    def snapshot(self) -> dict:
+        return self.stats.snapshot(cache=self.cache, plans=self.plans)

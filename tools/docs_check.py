@@ -15,9 +15,9 @@ Verifies, with zero third-party deps:
 3. the documentation spine exists (README.md, DESIGN.md,
    EXPERIMENTS.md).
 4. the deprecated per-engine class names (superseded by the
-   ``repro.serve.api`` Retriever, DESIGN.md §7) appear nowhere outside
-   their shim modules — code and docs must not grow new dependencies
-   on a surface scheduled for removal.
+   ``repro.serve.api`` Retriever, DESIGN.md §7; their shim modules are
+   deleted) appear nowhere — code and docs must not grow new
+   dependencies on a removed surface.
 
 Exit status is the number of dangling references (0 = pass).
 """
@@ -42,11 +42,10 @@ MAKE_RE = re.compile(r"\bmake\s+([a-z][\w-]*)")
 TARGET_RE = re.compile(r"^([a-z][\w-]*):", re.M)
 
 #: per-engine classes superseded by repro.serve.api (DESIGN.md §7);
-#: referencing them anywhere but their shim modules fails the gate
+#: their shim modules were deleted after one deprecation release, so
+#: any reference at all now fails the gate
 DEPRECATED_RE = re.compile(r"\b(BatchedSeismic|BatchedHNSW)\b")
 DEPRECATED_ALLOW = {
-    "src/repro/serve/engine.py",
-    "src/repro/serve/graph_engine.py",
     "tools/docs_check.py",  # this file names them to ban them
 }
 
