@@ -35,8 +35,24 @@ def timeit_us(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
 
 
 class Row:
-    def __init__(self, name: str, us_per_call: float, derived: str):
+    """One measured configuration.
+
+    ``mode`` (kernel execution mode — jnp | pallas_interpret |
+    pallas_compiled) and ``codec`` are STRUCTURED fields: consumers
+    (the perf gate, the roofline) select rows by them rather than
+    parsing the display name, which stays free-form."""
+
+    def __init__(
+        self,
+        name: str,
+        us_per_call: float,
+        derived: str,
+        *,
+        mode: str | None = None,
+        codec: str | None = None,
+    ):
         self.name, self.us, self.derived = name, us_per_call, derived
+        self.mode, self.codec = mode, codec
 
     def csv(self) -> str:
         return f"{self.name},{self.us:.1f},{self.derived}"
@@ -102,6 +118,9 @@ def write_bench_json(
                 # non-finite → null: bare NaN/Infinity tokens are not JSON
                 "us": round(r.us, 1) if np.isfinite(r.us) else None,
                 "name": r.name,
+                # structured row identity (never parsed out of the name)
+                **({"mode": r.mode} if r.mode is not None else {}),
+                **({"codec": r.codec} if r.codec is not None else {}),
                 "derived": {
                     k: (v if not isinstance(v, float) or np.isfinite(v) else None)
                     for k, v in _parse_derived(r.derived).items()

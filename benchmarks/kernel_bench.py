@@ -1,25 +1,32 @@
-"""Kernel microbenchmarks + HBM-payload accounting.
+"""Kernel microbenchmarks + HBM-traffic accounting.
 
-Wall-times are CPU (jnp path jit-compiled; the Pallas kernels run
-interpret=True here, so their numbers measure the *semantics*, not
-Mosaic codegen). The ``derived`` column carries the quantity that
-transfers to TPU: bytes the scoring pass streams from HBM — the
-memory-roofline numerator the §Perf iterations drive down.
+Every fused kernel family is measured across the three execution modes
+(DESIGN.md §3): ``jnp`` (the XLA reference chain), ``pallas_interpret``
+(the Pallas emulator — semantics only, wall-clock is meaningless and
+measured with repeats=1 purely so the row exists), and
+``pallas_compiled`` (Mosaic on TPU hosts, the tiled XLA lowering of the
+same tile program on CPU — the number the perf gate tracks). Rows carry
+``mode`` and ``codec`` as structured fields on :class:`Row`; nothing
+downstream parses the display name.
+
+The ``derived`` column carries the quantity that transfers to TPU:
+bytes the pass streams from HBM — the memory-roofline numerator
+(``hbm_bytes_per_q``) the §Perf iterations drive down.
 
 Three families:
 
-* ``kernel/jnp_scan`` / ``kernel/pallas_interpret`` — the full block
-  scan per codec (now including StreamVByte, EXPERIMENTS.md §Perf);
+* ``kernel/scan`` — the full block scan per codec. The jnp chain
+  materialises decoded gaps, prefix-summed components and products in
+  HBM; the fused tile program streams the encoded payload once and
+  writes only slot scores;
 * ``kernel/rescoring`` — the serve engines' phase-2 candidate path:
-  jnp take→decode→dot vs the fused scalar-prefetch rows kernel.
-  Derived ``hbm_bytes_per_q`` counts what each path streams per query:
-  the fused kernel reads the encoded candidate payload once and writes
-  C scores; the jnp chain additionally materialises the gathered
-  payload and the decoded i32 components + products in HBM. The fused
-  number must be strictly smaller — ``make kernel-parity`` asserts it;
+  jnp take→decode→dot vs the fused rows kernel. The fused number must
+  be strictly smaller — ``make kernel-parity`` asserts it;
 * ``kernel/batch_sweep`` — decode-once/score-many amortisation: the
-  query-batched kernels at nq ∈ {1, 8, 64} with per-query amortised µs
-  in ``derived``.
+  query-batched compiled kernels at nq ∈ {1, 8, 64} with per-query
+  amortised µs AND per-query amortised HBM bytes (the encoded payload
+  is read once for the whole batch, so ``hbm_bytes_per_q`` falls with
+  nq — that is the point of the batched grid).
 """
 
 from __future__ import annotations
@@ -49,6 +56,34 @@ N_CANDIDATES = 256
 #: codecs measured end to end (must all be registered layouts)
 SCAN_CODECS = ("uncompressed", "dotvbyte", "streamvbyte", "bitpack")
 RESCORE_CODECS = ("uncompressed", "dotvbyte", "streamvbyte", "bitpack")
+
+#: execution modes benchmarked per family
+MEASURED_MODES = ("jnp", "pallas_interpret", "pallas_compiled")
+
+#: codec → fused block-scan entry point (mode-dispatching ops wrapper)
+_SCAN_FUSED = {
+    "dotvbyte": score_dotvbyte,
+    "streamvbyte": score_streamvbyte,
+    "bitpack": score_bitpack_bucketed,
+}
+
+
+def scan_hbm_bytes(packed, *, fused: bool) -> int:
+    """HBM bytes one query's full block scan streams.
+
+    fused — read the encoded streams once, write [B, D] slot scores;
+            decoded tiles live and die in VMEM;
+    jnp   — the decode→cumsum→dot chain additionally materialises the
+            decoded gaps, the prefix-summed components and the products
+            (three i32/f32 [B, T] intermediates) in HBM.
+    """
+    payload = packed.payload_bytes()
+    B, T = packed.seg.shape
+    D = packed.start_pos.shape[1]
+    slot_out = B * D * 4
+    if fused:
+        return payload + slot_out
+    return payload + 3 * B * T * 4 + slot_out
 
 
 def rows_payload_bytes(arrays, codec: str, n_cand: int) -> int:
@@ -86,38 +121,83 @@ def rows_hbm_bytes(arrays, codec: str, n_cand: int, *, fused: bool) -> int:
     return payload * 2 + comps + prod + n_cand * 4
 
 
-def run(n_docs: int = 2000) -> list[Row]:
+def rows_hbm_bytes_batch(
+    arrays, codec: str, n_cand: int, nq: int, *, fused: bool
+) -> float:
+    """Per-query amortised HBM bytes for the nq-query batched rescoring.
+
+    The batched kernels gather+decode the candidate payload ONCE for
+    the whole batch, so the payload term amortises over nq while the
+    per-query outputs (and, on the jnp path, the per-query product
+    intermediates) do not."""
+    payload = rows_payload_bytes(arrays, codec, n_cand)
+    if fused:
+        return payload / nq + n_cand * 4
+    L = arrays["vals_rows"].shape[1]
+    comps = 0 if codec == "uncompressed" else n_cand * L * 4
+    return (payload * 2 + comps) / nq + n_cand * L * 4 + n_cand * 4
+
+
+def run(
+    n_docs: int = 2000,
+    modes: tuple[str, ...] = MEASURED_MODES,
+    sweep: bool = True,
+) -> list[Row]:
+    """Measure the requested ``modes`` of every family.
+
+    ``modes`` restricts which execution modes run (the perf gate calls
+    with ``("pallas_compiled",)`` to skip the slow interpreter rows);
+    ``sweep=False`` drops the batch sweep."""
     col = generate_collection(splade_config(n_docs=n_docs, n_queries=4), value_format="f16")
     q = col.query_dense(0)
     rows: list[Row] = []
 
+    # one FMA per stored component: the roofline numerator (decode
+    # shifts/masks are integer ops, not counted — the paper's convention)
+    scan_flops = 2 * int(col.fwd.total_nnz)
+
     # --- block-scan family ---------------------------------------------
-    for codec in SCAN_CODECS:
-        packed = pack_forward_index(col.fwd, codec=codec)
-        us = timeit_us(lambda p=packed: score_packed(q, p).block_until_ready())
-        rows.append(
-            Row(f"kernel/jnp_scan/{codec}", us,
-                f"hbm_payload_mb={packed.payload_bytes()/2**20:.2f}")
-        )
-
-    pd = pack_forward_index(col.fwd, codec="dotvbyte")
-    us = timeit_us(lambda: np.asarray(score_dotvbyte(q, pd, interpret=True)), repeats=1)
-    rows.append(Row("kernel/pallas_interpret/dotvbyte", us, "semantic-check-only"))
-
-    ps = pack_forward_index(col.fwd, codec="streamvbyte")
-    us = timeit_us(lambda: np.asarray(score_streamvbyte(q, ps, interpret=True)), repeats=1)
-    rows.append(Row("kernel/pallas_interpret/streamvbyte", us, "semantic-check-only"))
-
-    pb = pack_forward_index(col.fwd, codec="bitpack")
-    tight = sum(
-        ((pb.block_size * int(w) + 31) // 32) * 4 for w in pb.widths
-    )
-    padded = pb.words.nbytes
-    us = timeit_us(lambda: np.asarray(score_bitpack_bucketed(q, pb, interpret=True)), repeats=1)
-    rows.append(
-        Row("kernel/pallas_interpret/bitpack_bucketed", us,
-            f"tight_words_mb={tight/2**20:.2f};padded_words_mb={padded/2**20:.2f}")
-    )
+    packed_by_codec = {c: pack_forward_index(col.fwd, codec=c) for c in SCAN_CODECS}
+    if "jnp" in modes:
+        for codec in SCAN_CODECS:
+            packed = packed_by_codec[codec]
+            us = timeit_us(lambda p=packed: score_packed(q, p).block_until_ready())
+            rows.append(
+                Row(f"kernel/scan/jnp/{codec}", us,
+                    f"hbm_bytes_per_q={scan_hbm_bytes(packed, fused=False)};"
+                    f"flops_per_q={scan_flops};"
+                    f"hbm_payload_mb={packed.payload_bytes()/2**20:.2f}",
+                    mode="jnp", codec=codec)
+            )
+    for codec, fused_fn in _SCAN_FUSED.items():
+        packed = packed_by_codec[codec]
+        extra = ""
+        if codec == "bitpack":
+            tight = sum(
+                ((packed.block_size * int(w) + 31) // 32) * 4 for w in packed.widths
+            )
+            extra = (f";tight_words_mb={tight/2**20:.2f}"
+                     f";padded_words_mb={packed.words.nbytes/2**20:.2f}")
+        if "pallas_interpret" in modes:
+            us = timeit_us(
+                lambda p=packed, f=fused_fn: np.asarray(f(q, p, mode="pallas_interpret")),
+                repeats=1,
+            )
+            rows.append(
+                Row(f"kernel/scan/pallas_interpret/{codec}", us,
+                    "semantic-check-only" + extra,
+                    mode="pallas_interpret", codec=codec)
+            )
+        if "pallas_compiled" in modes:
+            us = timeit_us(
+                lambda p=packed, f=fused_fn: np.asarray(f(q, p, mode="pallas_compiled"))
+            )
+            rows.append(
+                Row(f"kernel/scan/pallas_compiled/{codec}", us,
+                    f"hbm_bytes_per_q={scan_hbm_bytes(packed, fused=True)};"
+                    f"flops_per_q={scan_flops}" + extra,
+                    mode="pallas_compiled", codec=codec)
+            )
 
     # --- candidate-rescoring family: jnp chain vs fused rows kernel ----
     rng = np.random.default_rng(0)
@@ -128,25 +208,51 @@ def run(n_docs: int = 2000) -> list[Row]:
     dj = jnp.asarray(cand)
     for codec in RESCORE_CODECS:
         arrays = {k: jnp.asarray(v) for k, v in layout.pack_rows(col.fwd, codec=codec).arrays().items()}
-        us = timeit_us(
-            lambda a=arrays, c=codec: score_candidate_rows(
-                c, a, dj, qj, scale, backend="jnp"
-            ).block_until_ready()
-        )
-        rows.append(
-            Row(f"kernel/rescoring/jnp/{codec}", us,
-                f"hbm_bytes_per_q={rows_hbm_bytes(arrays, codec, len(cand), fused=False)}")
-        )
+        # one FMA per (candidate, padded slot) — what actually executes
+        rows_flops = 2 * len(cand) * int(arrays["vals_rows"].shape[1])
+        if "jnp" in modes:
+            us = timeit_us(
+                lambda a=arrays, c=codec: score_candidate_rows(
+                    c, a, dj, qj, scale, backend="jnp"
+                ).block_until_ready()
+            )
+            rows.append(
+                Row(f"kernel/rescoring/jnp/{codec}", us,
+                    f"hbm_bytes_per_q={rows_hbm_bytes(arrays, codec, len(cand), fused=False)};"
+                    f"flops_per_q={rows_flops}",
+                    mode="jnp", codec=codec)
+            )
         fused = get_kernels(codec).rows_scores
-        us = timeit_us(
-            lambda a=arrays, f=fused: np.asarray(f(a, dj, qj, scale, True)), repeats=1
-        )
-        rows.append(
-            Row(f"kernel/rescoring/pallas_interpret/{codec}", us,
-                f"hbm_bytes_per_q={rows_hbm_bytes(arrays, codec, len(cand), fused=True)}")
-        )
+        hbm_fused = rows_hbm_bytes(arrays, codec, len(cand), fused=True)
+        if "pallas_interpret" in modes:
+            us = timeit_us(
+                lambda a=arrays, f=fused: np.asarray(
+                    f(a, dj, qj, scale, "pallas_interpret")
+                ),
+                repeats=1,
+            )
+            rows.append(
+                Row(f"kernel/rescoring/pallas_interpret/{codec}", us,
+                    f"hbm_bytes_per_q={hbm_fused}",
+                    mode="pallas_interpret", codec=codec)
+            )
+        if "pallas_compiled" in modes:
+            us = timeit_us(
+                lambda a=arrays, f=fused: np.asarray(
+                    f(a, dj, qj, scale, "pallas_compiled")
+                )
+            )
+            rows.append(
+                Row(f"kernel/rescoring/pallas_compiled/{codec}", us,
+                    f"hbm_bytes_per_q={hbm_fused};flops_per_q={rows_flops}",
+                    mode="pallas_compiled", codec=codec)
+            )
+
+    if not sweep:
+        return rows
 
     # --- decode-once/score-many query-batch sweep ----------------------
+    # compiled mode: the amortisation story is about the deployable path
     Q = np.stack([col.query_dense(i % col.n_queries) for i in range(64)])
     sweep_docs = min(n_docs, 800)
     if sweep_docs < n_docs:
@@ -164,28 +270,39 @@ def run(n_docs: int = 2000) -> list[Row]:
     cand_s = jnp.asarray(
         np.sort(rng.choice(sub.fwd.n_docs, size=min(N_CANDIDATES, sub.fwd.n_docs), replace=False)).astype(np.int32)
     )
+    n_cand_s = int(cand_s.shape[0])
     scale_s = float(sub.fwd.value_format.scale)
     svb_rows_batch = get_kernels("streamvbyte").rows_scores_batch
     for nq in (1, 8, 64):
         Qn = Q[:nq]
-        us = timeit_us(
-            lambda: np.asarray(score_dotvbyte_batch(Qn, pd_s, interpret=True)), repeats=1
-        )
-        rows.append(Row(f"kernel/batch_sweep/dotvbyte_scan/nq{nq}", us,
-                        f"us_per_query={us/nq:.1f}"))
-        us = timeit_us(
-            lambda: np.asarray(score_streamvbyte_batch(Qn, ps_s, interpret=True)), repeats=1
-        )
-        rows.append(Row(f"kernel/batch_sweep/streamvbyte_scan/nq{nq}", us,
-                        f"us_per_query={us/nq:.1f}"))
+        for codec, packed, fn in (
+            ("dotvbyte", pd_s, score_dotvbyte_batch),
+            ("streamvbyte", ps_s, score_streamvbyte_batch),
+        ):
+            us = timeit_us(
+                lambda f=fn, p=packed: np.asarray(f(Qn, p, mode="pallas_compiled"))
+            )
+            # payload read once per batch; slot-score writes stay per query
+            hbm_q = packed.payload_bytes() / nq + (
+                scan_hbm_bytes(packed, fused=True) - packed.payload_bytes()
+            )
+            rows.append(
+                Row(f"kernel/batch_sweep/{codec}_scan/nq{nq}", us,
+                    f"us_per_query={us/nq:.1f};hbm_bytes_per_q={hbm_q:.0f}",
+                    mode="pallas_compiled", codec=codec)
+            )
         us = timeit_us(
             lambda: np.asarray(
-                svb_rows_batch(arrays_s, cand_s, jnp.asarray(Qn), scale_s, True)
-            ),
-            repeats=1,
+                svb_rows_batch(arrays_s, cand_s, jnp.asarray(Qn), scale_s,
+                               "pallas_compiled")
+            )
         )
-        rows.append(Row(f"kernel/batch_sweep/streamvbyte_rows/nq{nq}", us,
-                        f"us_per_query={us/nq:.1f}"))
+        hbm_q = rows_hbm_bytes_batch(arrays_s, "streamvbyte", n_cand_s, nq, fused=True)
+        rows.append(
+            Row(f"kernel/batch_sweep/streamvbyte_rows/nq{nq}", us,
+                f"us_per_query={us/nq:.1f};hbm_bytes_per_q={hbm_q:.0f}",
+                mode="pallas_compiled", codec="streamvbyte")
+        )
     return rows
 
 

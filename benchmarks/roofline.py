@@ -1,9 +1,23 @@
-"""§Roofline table builder: reads the dry-run JSON records
-(experiments/dryrun/<mesh>/) and renders the per-(arch × shape) roofline
-terms as markdown for EXPERIMENTS.md.
+"""§Roofline builders.
 
-Run the dry-run first:  PYTHONPATH=src python -m repro.launch.dryrun
-Then:                    PYTHONPATH=src python -m benchmarks.roofline
+Two sections feed ``BENCH_roofline.json`` (EXPERIMENTS.md §Roofline):
+
+* the **training dry-run** section — reads the dry-run JSON records
+  (experiments/dryrun/<mesh>/) and renders per-(arch × shape) roofline
+  terms. Run the dry-run first: ``PYTHONPATH=src python -m
+  repro.launch.dryrun``;
+* the **kernel** section — places every measured codec × mode scoring
+  kernel on the bytes/FLOP roofline of a nominal TPU. Rows are selected
+  by the structured ``mode``/``codec``/``derived`` fields of the kernel
+  bench (never by parsing names): arithmetic intensity =
+  ``flops_per_q / hbm_bytes_per_q``, and the projected bound is
+  ``max(flops/peak, bytes/bw)``. LSR scoring sits far left of the ridge
+  point, so HBM bytes — i.e. the compression ratio — IS the kernel's
+  speed on accelerator hardware; that is the paper's thesis restated as
+  a roofline position.
+
+CLI: ``PYTHONPATH=src python -m benchmarks.roofline`` prints the
+markdown tables for both sections.
 """
 
 from __future__ import annotations
@@ -11,9 +25,19 @@ from __future__ import annotations
 import json
 import os
 
-from .common import Row
+from .common import Row, _parse_derived
 
-__all__ = ["load_records", "markdown_table", "run"]
+__all__ = [
+    "load_records", "markdown_table", "kernel_roofline",
+    "kernel_markdown_table", "run",
+]
+
+#: nominal accelerator for the projection — TPU v5e, matching the
+#: dry-run conventions (EXPERIMENTS.md §Roofline): 819 GB/s HBM, and a
+#: nominal 3 TFLOP/s f32 VPU path (sparse scoring never touches the
+#: MXU, so the bf16 peak is irrelevant); ridge ≈ 3.7 FLOP/B
+HBM_BYTES_PER_S = 8.19e11
+PEAK_VPU_FLOPS = 3.0e12
 
 
 def load_records(base: str = "experiments/dryrun", mesh: str = "pod256") -> list[dict]:
@@ -48,7 +72,63 @@ def markdown_table(recs: list[dict]) -> str:
     return head + "\n".join(lines)
 
 
+def kernel_roofline(kernel_rows: list[Row]) -> list[Row]:
+    """Project every kernel-bench row that carries both roofline terms
+    onto the nominal TPU roofline.
+
+    Selection is purely structural: a row participates iff ``row.mode``
+    and ``row.codec`` are set and its derived metrics include
+    ``hbm_bytes_per_q`` and ``flops_per_q``. Emitted µs is the
+    roofline-bound time per query on the nominal accelerator; derived
+    records the intensity, which side of the ridge the kernel sits on,
+    and the measured CPU µs it was projected from."""
+    out: list[Row] = []
+    for r in kernel_rows:
+        if r.mode is None or r.codec is None:
+            continue
+        d = _parse_derived(r.derived)
+        bytes_q, flops_q = d.get("hbm_bytes_per_q"), d.get("flops_per_q")
+        if not bytes_q or not flops_q:
+            continue
+        family = r.name.split("/")[1] if "/" in r.name else r.name
+        mem_s = bytes_q / HBM_BYTES_PER_S
+        cmp_s = flops_q / PEAK_VPU_FLOPS
+        bound_us = max(mem_s, cmp_s) * 1e6
+        intensity = flops_q / bytes_q
+        out.append(
+            Row(
+                f"roofline/kernel/{family}/{r.mode}/{r.codec}",
+                bound_us,
+                f"intensity_flop_per_byte={intensity:.2f};"
+                f"dominant={'memory' if mem_s >= cmp_s else 'compute'};"
+                f"hbm_bytes_per_q={bytes_q:.0f};flops_per_q={flops_q:.0f};"
+                f"measured_cpu_us={r.us:.1f}",
+                mode=r.mode, codec=r.codec,
+            )
+        )
+    return out
+
+
+def kernel_markdown_table(roof_rows: list[Row]) -> str:
+    head = (
+        "| kernel | mode | codec | FLOP/B | dominant | HBM B/q "
+        "| bound µs/q (nominal TPU) |\n|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in roof_rows:
+        d = _parse_derived(r.derived)
+        family = r.name.split("/")[2]
+        lines.append(
+            f"| {family} | {r.mode} | {r.codec} "
+            f"| {d['intensity_flop_per_byte']:.2f} | {d['dominant']} "
+            f"| {d['hbm_bytes_per_q']:.0f} | {r.us:.1f} |"
+        )
+    return head + "\n".join(lines)
+
+
 def run() -> list[Row]:
+    """Dry-run section only (kernel section needs the measured kernel
+    rows — ``benchmarks.run`` composes the two into the snapshot)."""
     rows: list[Row] = []
     for mesh in ("pod256", "pod512x2"):
         for r in load_records(mesh=mesh):
@@ -69,3 +149,9 @@ if __name__ == "__main__":
         if recs:
             print(f"\n## {mesh}\n")
             print(markdown_table(recs))
+    from . import kernel_bench
+
+    roof = kernel_roofline(kernel_bench.run(n_docs=300, modes=("jnp", "pallas_compiled"),
+                                            sweep=False))
+    print("\n## kernel roofline (codec × mode)\n")
+    print(kernel_markdown_table(roof))

@@ -2,9 +2,10 @@
 extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)
 and snapshots the kernel + serving + pipeline families to
 machine-readable ``BENCH_kernels.json`` / ``BENCH_serve.json`` /
-``BENCH_pipeline.json`` at the repo root (schema: name, µs, parsed
-derived metrics, git sha — see ``common.write_bench_json``) so the
-perf trajectory is diffable across PRs.
+``BENCH_pipeline.json`` / ``BENCH_roofline.json`` at the repo root
+(schema: name, µs, structured mode/codec, parsed derived metrics, git
+sha — see ``common.write_bench_json``) so the perf trajectory is
+diffable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --fast     # reduced sizes
@@ -28,15 +29,29 @@ from .common import emit, write_bench_json
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None) -> None:
+def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None,
+              n_docs: int | None = None) -> None:
     """Write the committed snapshots. ``mode`` (quick/fast/full) is
     recorded in the payload so the perf trajectory is only compared
-    like-for-like; a family is only (over)written when its sections
-    ran completely — a partial ``--only`` run never drops rows from a
-    committed file."""
+    like-for-like (``n_docs`` likewise, for the kernel family — the
+    perf gate re-measures at the committed size); a family is only
+    (over)written when its sections ran completely — a partial
+    ``--only`` run never drops rows from a committed file."""
     if kernel_rows:
+        kmeta = {"mode": mode}
+        if n_docs is not None:
+            kmeta["n_docs"] = n_docs
         write_bench_json(os.path.join(_ROOT, "BENCH_kernels.json"), kernel_rows,
-                         meta={"mode": mode})
+                         meta=kmeta)
+        # the roofline placement derives entirely from the kernel rows
+        # (+ any dry-run records on disk), so it snapshots with them
+        from . import roofline
+
+        write_bench_json(
+            os.path.join(_ROOT, "BENCH_roofline.json"),
+            roofline.run() + roofline.kernel_roofline(kernel_rows),
+            meta={"mode": mode},
+        )
     if serve_rows:
         write_bench_json(os.path.join(_ROOT, "BENCH_serve.json"), serve_rows,
                          meta={"mode": mode})
@@ -84,7 +99,8 @@ def _quick_smoke() -> int:
         return 1
     # snapshot only after the gate passes — a failing run must not
     # overwrite the committed trajectory with regression numbers
-    _snapshot(kernel_rows, serve_rows, mode="quick", pipeline_rows=pipeline_rows)
+    _snapshot(kernel_rows, serve_rows, mode="quick", pipeline_rows=pipeline_rows,
+              n_docs=300)
     print(f"# quick smoke OK ({len(rows)} rows)", file=sys.stderr)
     return 0
 
@@ -139,6 +155,7 @@ def main() -> None:
         if serve_complete else [],
         mode="fast" if args.fast else "full",
         pipeline_rows=by_section.get("table4", []),
+        n_docs=800 if args.fast else 2000,
     )
     emit(rows)
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)

@@ -31,6 +31,18 @@ Gap conventions (DESIGN.md §3):
 the across-shard max shape and stack with a leading shard dim — used by
 ``pack_blocks_sharded`` (doc-aligned scan) and
 ``serve.api.build_shard_arrays`` (every engine's sharded search).
+
+Tile-shape / DMA contract (DESIGN.md §3): every stream a kernel DMAs is
+laid out lane-aligned AT PACK TIME — trailing dims of the control
+(``ctrl``), data (``data``, via ``_byte_scatter``) and word (``words``)
+streams are padded to a ``LANE_MULTIPLE`` (=128) multiple, and the row
+capacity ``l_max`` is itself rounded to a lane multiple — so a Mosaic
+tile of any stream starts on a lane boundary and reads whole aligned
+words.  Decoders therefore receive *wider-than-tight* control streams
+and must slice their gap output to the logical length (``block_size`` /
+``l_max``); ``scoring.decode_block_gaps`` and the ``LayoutCodec.decode``
+methods slice the control stream *tight before decoding* so the padding
+costs bytes, never decode work.
 """
 
 from __future__ import annotations
@@ -57,13 +69,27 @@ __all__ = [
     "pad_stack",
     "encode_docs",
     "BLOCK_PAD_VALUES",
+    "LANE_MULTIPLE",
 ]
 
-_LANES = 128  # TPU lane count: data-stream widths are padded to this
+_LANES = 128  # TPU lane count: every DMA'd stream width is padded to this
+
+#: public name for the pack-time stream alignment (DESIGN.md §3)
+LANE_MULTIPLE = _LANES
 
 
 def _round_up(n: int, m: int) -> int:
     return (n + m - 1) // m * m
+
+
+def _lane_pad(arr: np.ndarray) -> np.ndarray:
+    """Pad a stream's trailing dim to the lane multiple (pack-time
+    alignment — kernels then read whole aligned words)."""
+    pad = (-arr.shape[-1]) % _LANES
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * (arr.ndim - 1) + [(0, pad)]
+    return np.pad(arr, widths)
 
 
 # ---------------------------------------------------------------------------
@@ -168,12 +194,15 @@ class DotVByteLayout(LayoutCodec):
             bits.reshape(R, T // 8, 8), axis=2, bitorder="little"
         ).reshape(R, T // 8)
         lens = bits.astype(np.int64) + 1
-        return {"ctrl": ctrl, "data": self._byte_scatter(gaps, lens, 1)}
+        return {"ctrl": _lane_pad(ctrl), "data": self._byte_scatter(gaps, lens, 1)}
 
     def decode(self, arrays: Mapping, block_size: int):
         from .scoring import decode_gaps_dotvbyte
 
-        return decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
+        ctrl = arrays["ctrl"]
+        if block_size:  # lane-padded ctrl: slice tight before decoding
+            ctrl = ctrl[:, : block_size // 8]
+        return decode_gaps_dotvbyte(ctrl, arrays["data"])
 
 
 @register_layout("streamvbyte")
@@ -195,12 +224,15 @@ class StreamVByteLayout(LayoutCodec):
         q = codes.reshape(R, T // 4, 4).astype(np.uint8)
         ctrl = (q[..., 0] | (q[..., 1] << 2) | (q[..., 2] << 4) | (q[..., 3] << 6))
         lens = codes.astype(np.int64) + 1
-        return {"ctrl": ctrl, "data": self._byte_scatter(gaps, lens, 3)}
+        return {"ctrl": _lane_pad(ctrl), "data": self._byte_scatter(gaps, lens, 3)}
 
     def decode(self, arrays: Mapping, block_size: int):
         from .scoring import decode_gaps_streamvbyte
 
-        return decode_gaps_streamvbyte(arrays["ctrl"], arrays["data"])
+        ctrl = arrays["ctrl"]
+        if block_size:  # lane-padded ctrl: slice tight before decoding
+            ctrl = ctrl[:, : block_size // 4]
+        return decode_gaps_streamvbyte(ctrl, arrays["data"])
 
 
 @register_layout("bitpack")
@@ -222,7 +254,7 @@ class BitpackLayout(LayoutCodec):
         for r in range(R):
             wr = pack_block(gaps[r], int(widths[r]))
             words[r, : len(wr)] = wr
-        return {"words": words, "widths": widths}
+        return {"words": _lane_pad(words), "widths": widths}
 
     def decode(self, arrays: Mapping, block_size: int):
         from .scoring import decode_gaps_bitpack
@@ -427,7 +459,10 @@ def pack_rows(
     lc = get_layout(codec)
     nnz_max = int(np.diff(fwd.offsets).max(initial=1))
     cap = max(l_max or 0, nnz_max, 1)
-    cap = _round_up(cap, 8)  # 8 covers every codec's control grouping
+    # lane-aligned row capacity (DMA contract, DESIGN.md §3): a row tile
+    # of any stream starts on a lane boundary; also covers every codec's
+    # control grouping (8)
+    cap = _round_up(cap, _LANES)
     gaps, vals_rows, nnz_rows = _row_gap_matrix(fwd, cap)
     if lc.decode_free:
         comps = np.cumsum(gaps.astype(np.int64), axis=1)

@@ -29,6 +29,7 @@ __all__ = [
     "components_from_gaps",
     "block_products",
     "combine_block_scores",
+    "block_slot_scores",
     "score_packed",
     "score_packed_batch",
     "decode_doc_rows",
@@ -118,9 +119,11 @@ def decode_block_gaps(codec: str, arrays, block_size: int) -> jnp.ndarray:
     The arrays carry the fields the layout codec produced — ctrl/data
     (dotvbyte, streamvbyte) or words/widths (bitpack)."""
     if codec == "dotvbyte":
-        return decode_gaps_dotvbyte(arrays["ctrl"], arrays["data"])
+        # ctrl streams are lane-padded at pack time (layout.LANE_MULTIPLE);
+        # slice tight so alignment costs bytes, never decode work
+        return decode_gaps_dotvbyte(arrays["ctrl"][:, : block_size // 8], arrays["data"])
     if codec == "streamvbyte":
-        return decode_gaps_streamvbyte(arrays["ctrl"], arrays["data"])
+        return decode_gaps_streamvbyte(arrays["ctrl"][:, : block_size // 4], arrays["data"])
     if codec == "bitpack":
         return decode_gaps_bitpack(arrays["words"], arrays["widths"], block_size)
     raise ValueError(f"no device decoder for codec {codec!r}")
@@ -188,6 +191,43 @@ def scatter_block_scores(
         block_scores.reshape(-1), ids.reshape(-1), num_segments=n_docs + 1
     )
     return out[:n_docs]
+
+
+def block_slot_scores(prod: jnp.ndarray, start_pos: jnp.ndarray) -> jnp.ndarray:
+    """Per-element products → per-slot (fragment) scores, [.., B, D].
+
+    The tiled kernels' reduction (DESIGN.md §3): inside a block the pack
+    loop assigns slots in position order, so each slot's fragment is one
+    CONTIGUOUS run ``[start_pos[d], start_pos[d+1])`` (the last used slot
+    runs to T, where only zero padding follows).  A slot's score is then
+    a difference of the exclusive prefix sum of the products — B·D
+    reduced values instead of the B·T-element global segment sum, the
+    ~8× smaller scatter the compiled scan wins on.  Slot usage is
+    derivable from start_pos alone (slot 0 always starts at 0; every
+    later used slot starts strictly after it), so unused slots are
+    zeroed without needing doc_ids.  Works on [B,T] and [nq,B,T]
+    product arrays (start_pos broadcasts)."""
+    T = prod.shape[-1]
+    lead = prod.shape[:-2]
+    cz = jnp.concatenate(
+        [jnp.zeros((*lead, prod.shape[-2], 1), prod.dtype), jnp.cumsum(prod, axis=-1)],
+        axis=-1,
+    )
+    nxt = jnp.concatenate(
+        [start_pos[..., 1:], jnp.zeros((*start_pos.shape[:-1], 1), start_pos.dtype)],
+        axis=-1,
+    )
+    ends = jnp.where(nxt > start_pos, nxt, T)
+    used = jnp.concatenate(
+        [jnp.ones_like(start_pos[..., :1], jnp.bool_), start_pos[..., 1:] > 0],
+        axis=-1,
+    )
+    ends = jnp.broadcast_to(ends, (*lead, *ends.shape[-2:]))
+    starts = jnp.broadcast_to(start_pos, ends.shape)
+    scores = jnp.take_along_axis(cz, ends, axis=-1) - jnp.take_along_axis(
+        cz, starts, axis=-1
+    )
+    return scores * used.astype(scores.dtype)
 
 
 @partial(jax.jit, static_argnames=("codec", "block_size", "n_docs", "scale"))
@@ -377,9 +417,11 @@ _NO_ROWS_KERNEL_WARNED: set = set()
 
 
 def _check_rows_backend(backend: str) -> None:
-    if backend not in ("jnp", "pallas"):
+    from repro.kernels.modes import SCORING_BACKENDS
+
+    if backend not in SCORING_BACKENDS:
         raise ValueError(
-            f"unknown scoring backend {backend!r}; have ['jnp', 'pallas']"
+            f"unknown scoring backend {backend!r}; have {list(SCORING_BACKENDS)}"
         )
 
 
@@ -433,21 +475,24 @@ def score_candidate_rows(
     alongside engine-specific fields, which are ignored. Sentinel doc
     ids gather the all-zero row and score 0; mask them afterwards.
 
-    ``backend`` selects the execution path (DESIGN.md §3): ``"jnp"``
+    ``backend`` selects the execution path (DESIGN.md §3, §7): ``"jnp"``
     is the take→decode→dot reference below; ``"pallas"`` dispatches to
     the codec's fused rows kernel from ``repro.kernels.registry``
     (scalar-prefetch HBM→VMEM row gather, decode and dot in VMEM —
-    decoded components never touch HBM), falling back to jnp with a
-    one-time warning when the codec has no registered rows kernel.
-    Both paths return identical scores (asserted by the parity suite
+    decoded components never touch HBM) in its default — compiled —
+    mode, while ``"pallas_interpret"`` / ``"pallas_compiled"`` pin the
+    kernel ``mode`` explicitly (``repro.kernels.modes``).  Codecs with
+    no registered rows kernel fall back to jnp with a one-time warning.
+    All paths return identical scores (asserted by the parity suite
     and ``make kernel-parity``)."""
     _check_rows_backend(backend)
-    if backend == "pallas":
+    if backend != "jnp":
+        from repro.kernels.modes import backend_mode
         from repro.kernels.registry import rows_scorer
 
         fn = rows_scorer(codec)
         if fn is not None:
-            return fn(arrays, docs, q, scale)
+            return fn(arrays, docs, q, scale, backend_mode(backend))
         _warn_no_rows_kernel(codec)
     comps, vals, nnz = _gather_decode_rows(codec, arrays, docs)
     return score_doc_rows(q, comps, vals, nnz, scale)
@@ -473,12 +518,13 @@ def score_candidate_rows_batch(
     hoists the decode out of a ``vmap`` over ``score_doc_rows``, so
     per-query scores are bitwise those of the single-query path."""
     _check_rows_backend(backend)
-    if backend == "pallas":
+    if backend != "jnp":
+        from repro.kernels.modes import backend_mode
         from repro.kernels.registry import rows_batch_scorer
 
         fn = rows_batch_scorer(codec)
         if fn is not None:
-            return fn(arrays, docs, Q, scale)
+            return fn(arrays, docs, Q, scale, backend_mode(backend))
         _warn_no_rows_kernel(codec)
     comps, vals, nnz = _gather_decode_rows(codec, arrays, docs)
     # comps/vals/nnz carry no query axis → the decode stays un-batched

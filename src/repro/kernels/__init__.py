@@ -7,15 +7,19 @@
                       prefetch HBM→VMEM gather + decode + dot), every codec
 ``registry``        — codec → ``KernelSet`` registry; the dispatch point
                       ``RetrieverConfig(backend="pallas")`` routes through
-``ops``             — jit wrappers (padding, interpret-mode, combine)
+``ops``             — jit wrappers (padding, mode resolution, combine)
+``modes``           — the mode axis: jnp | pallas_interpret | pallas_compiled
+``tiles``           — shared tiled scan machinery (DMA pipeline, grids, XLA)
 ``ref``             — pure-jnp oracles each kernel is asserted against
 """
 
 from .bitpack_dot import bitpack_block_scores, bitpack_block_scores_w
 from .dotvbyte_dot import dotvbyte_block_scores, dotvbyte_block_scores_batch
+from .modes import MODES, SCORING_BACKENDS, mosaic_available, resolve_mode
 from .ops import (
     default_interpret,
     score_bitpack,
+    score_bitpack_batch,
     score_bitpack_bucketed,
     score_dotvbyte,
     score_dotvbyte_batch,
@@ -32,6 +36,10 @@ from .rows_dot import rows_scores, rows_scores_batch
 from .streamvbyte_dot import streamvbyte_block_scores, streamvbyte_block_scores_batch
 
 __all__ = [
+    "MODES",
+    "SCORING_BACKENDS",
+    "mosaic_available",
+    "resolve_mode",
     "bitpack_block_scores",
     "bitpack_block_scores_w",
     "dotvbyte_block_scores",
@@ -50,6 +58,7 @@ __all__ = [
     "score_streamvbyte",
     "score_streamvbyte_batch",
     "score_bitpack",
+    "score_bitpack_batch",
     "score_bitpack_bucketed",
     "bitpack_block_scores_ref",
     "dotvbyte_block_scores_ref",

@@ -6,12 +6,17 @@ data-dependent offsets — every lane knows statically which word and bit
 it reads. Two variants:
 
 * ``bitpack_block_scores``      — runtime per-block width (one kernel for
-  the whole index; widths arrive as a (1,1) scalar block).
+  the whole index; widths ride along as a [B, 1] i32 stream).
 * ``bitpack_block_scores_w``    — compile-time width (one kernel per
   width bucket; tight word arrays, no over-read — the §Perf layout).
 
-Fusion (decode → q gather → FMA → one-hot MXU reduce) matches
-``dotvbyte_dot``; only the gap decode differs.
+Kernels are TILED like ``dotvbyte_dot`` (PR 6, ``tiles.py``): the
+single-query scan runs the double-buffered HBM→VMEM DMA pipeline
+(:func:`tiles.dma_block_scan`), the batched variant a queries×tiles
+grid (:func:`tiles.grid_batch_scores`).  The word stream is lane-padded
+at pack time; the decode masks off padding words via the T bound, and
+the fused epilogue (q gather → FMA → contiguous-fragment prefix-sum
+slot reduce) is the shared tile program in ``tiles``.
 """
 
 from __future__ import annotations
@@ -20,13 +25,26 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-__all__ = ["bitpack_block_scores", "bitpack_block_scores_w"]
+from repro.core.scoring import decode_gaps_bitpack
+
+from . import tiles
+
+__all__ = [
+    "bitpack_block_scores",
+    "bitpack_block_scores_batch",
+    "bitpack_block_scores_w",
+    "bitpack_block_scores_xla",
+    "bitpack_block_scores_xla_batch",
+    "bitpack_block_scores_w_xla",
+]
 
 
 def _decode_fixed(words: jnp.ndarray, width: jnp.ndarray, T: int) -> jnp.ndarray:
-    """Unpack T values of ``width`` bits from u32 words (LSB-first)."""
+    """Unpack T values of ``width`` bits from u32 words (LSB-first).
+    1-D form used by the rows-rescoring kernel (``rows_dot``); the tiled
+    block kernels use the [R, W] matrix decoder from ``scoring``.
+    ``words`` must carry ≥ 1 spare word for the straddle read."""
     w32 = words.astype(jnp.uint32)
     wu = width.astype(jnp.uint32)
     bitpos = jax.lax.iota(jnp.uint32, T) * wu
@@ -39,72 +57,62 @@ def _decode_fixed(words: jnp.ndarray, width: jnp.ndarray, T: int) -> jnp.ndarray
     return ((lo | hi) & mask).astype(jnp.int32)
 
 
-def _body(q, words, width, seg, sp, sa, vals, scale, T, D):
-    seg = seg.astype(jnp.int32)  # i8 in the slim metadata layout
-    gaps = _decode_fixed(words, width, T)
-    t = jnp.cumsum(gaps)
-    segc = jnp.clip(seg, 0, D - 1)
-    tp = jnp.take(t, sp, axis=0)
-    comp = jnp.where(seg >= 0, jnp.take(sa, segc) + t - jnp.take(tp, segc), 0)
-    qv = jnp.take(q, comp, axis=0)
-    prod = qv * vals.astype(jnp.float32) * jnp.float32(scale)
-    prod = prod * (seg >= 0).astype(jnp.float32)
-    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
-        jnp.float32
+def tile_gaps(words: jnp.ndarray, widths: jnp.ndarray, T: int) -> jnp.ndarray:
+    """[R, W] words + [R] widths → gaps i32 [R, T]."""
+    return decode_gaps_bitpack(words, widths, T)
+
+
+def _tile_fn(q, words, widths2, seg, sp, sa, vals, *, scale: float):
+    gaps = tile_gaps(words, widths2[:, 0], seg.shape[-1])
+    return tiles.tile_scores(q, gaps, seg, sp, sa, vals, scale)
+
+
+def _tile_fn_batch(Q, words, widths2, seg, sp, sa, vals, *, scale: float):
+    gaps = tile_gaps(words, widths2[:, 0], seg.shape[-1])
+    return tiles.tile_scores_batch(Q, gaps, seg, sp, sa, vals, scale)
+
+
+def _pad_block_streams(words, widths2, seg, start_pos, start_abs, vals):
+    pad = functools.partial(tiles.pad_axis, multiple=tiles.R_TILE, axis=0)
+    return (
+        pad(words), pad(widths2, fill=1), pad(seg, fill=-1),
+        pad(start_pos), pad(start_abs), pad(vals),
     )
-    return jnp.dot(prod[None, :], onehot, preferred_element_type=jnp.float32)[0]
-
-
-def _kernel_dyn(q_ref, words_ref, width_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale):
-    T = seg_ref.shape[1]
-    D = sp_ref.shape[1]
-    # pad one word for the straddle read
-    words = jnp.concatenate([words_ref[0, :], jnp.zeros((1,), jnp.uint32)])
-    out_ref[0, :] = _body(
-        q_ref[0, :], words, width_ref[0, 0], seg_ref[0, :], sp_ref[0, :],
-        sa_ref[0, :], vals_ref[0, :], scale, T, D,
-    )
-
-
-def _kernel_static(q_ref, words_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale, width):
-    T = seg_ref.shape[1]
-    D = sp_ref.shape[1]
-    words = jnp.concatenate([words_ref[0, :], jnp.zeros((1,), jnp.uint32)])
-    out_ref[0, :] = _body(
-        q_ref[0, :], words, jnp.uint32(width), seg_ref[0, :], sp_ref[0, :],
-        sa_ref[0, :], vals_ref[0, :], scale, T, D,
-    )
-
-
-def _row(width):
-    return pl.BlockSpec((1, width), lambda b: (b, 0))
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def bitpack_block_scores(
     q, words, widths, seg, start_pos, start_abs, vals, *, scale=1.0, interpret=True
 ):
-    """Runtime-width variant. widths i32 [B]. Returns [B, D] f32."""
-    B, W = words.shape
-    T = seg.shape[1]
+    """Runtime-width variant. widths i32 [B]. Returns [B, D] f32 via the
+    double-buffered DMA scan."""
+    B = words.shape[0]
     D = start_pos.shape[1]
-    V = q.shape[0]
-    return pl.pallas_call(
-        functools.partial(_kernel_dyn, scale=scale),
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, V), lambda b: (0, 0)),
-            _row(W),
-            pl.BlockSpec((1, 1), lambda b: (b, 0)),
-            _row(T),
-            _row(D),
-            _row(D),
-            _row(T),
-        ],
-        out_specs=_row(D),
-        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
-        interpret=interpret,
-    )(q[None, :], words, widths[:, None], seg, start_pos, start_abs, vals)
+    streams = _pad_block_streams(
+        words, widths.astype(jnp.int32)[:, None], seg, start_pos, start_abs, vals
+    )
+    out = tiles.dma_block_scan(
+        functools.partial(_tile_fn, scale=scale), q, streams, D, interpret
+    )
+    return out[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def bitpack_block_scores_batch(
+    Q, words, widths, seg, start_pos, start_abs, vals, *, scale=1.0, interpret=True
+):
+    """[nq, B, D] batched runtime-width scores via the queries×tiles grid."""
+    nq = Q.shape[0]
+    B = words.shape[0]
+    D = start_pos.shape[1]
+    Qp = tiles.pad_axis(Q, tiles.Q_TILE, axis=0)
+    streams = _pad_block_streams(
+        words, widths.astype(jnp.int32)[:, None], seg, start_pos, start_abs, vals
+    )
+    out = tiles.grid_batch_scores(
+        functools.partial(_tile_fn_batch, scale=scale), Qp, streams, D, interpret
+    )
+    return out[:nq, :B]
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "width", "interpret"))
@@ -112,22 +120,61 @@ def bitpack_block_scores_w(
     q, words, seg, start_pos, start_abs, vals, *, width: int, scale=1.0, interpret=True
 ):
     """Compile-time-width variant for width-bucketed indexes. [B, D] f32."""
-    B, W = words.shape
-    T = seg.shape[1]
+    B = words.shape[0]
     D = start_pos.shape[1]
-    V = q.shape[0]
-    return pl.pallas_call(
-        functools.partial(_kernel_static, scale=scale, width=width),
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, V), lambda b: (0, 0)),
-            _row(W),
-            _row(T),
-            _row(D),
-            _row(D),
-            _row(T),
-        ],
-        out_specs=_row(D),
-        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
-        interpret=interpret,
-    )(q[None, :], words, seg, start_pos, start_abs, vals)
+
+    def tile_fn(q_, words_, seg_, sp_, sa_, vals_):
+        gaps = tile_gaps(words_, jnp.full((words_.shape[0],), width, jnp.int32), seg_.shape[-1])
+        return tiles.tile_scores(q_, gaps, seg_, sp_, sa_, vals_, scale)
+
+    pad = functools.partial(tiles.pad_axis, multiple=tiles.R_TILE, axis=0)
+    streams = (pad(words), pad(seg, fill=-1), pad(start_pos), pad(start_abs), pad(vals))
+    out = tiles.dma_block_scan(tile_fn, q, streams, D, interpret)
+    return out[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def bitpack_block_scores_xla(
+    q, words, widths, seg, start_pos, start_abs, vals, *, scale=1.0
+):
+    """The same runtime-width tile program lowered through XLA."""
+    B = words.shape[0]
+    D = start_pos.shape[1]
+    streams = _pad_block_streams(
+        words, widths.astype(jnp.int32)[:, None], seg, start_pos, start_abs, vals
+    )
+    return tiles.xla_block_scores(
+        functools.partial(_tile_fn, scale=scale), q, streams, D
+    )[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def bitpack_block_scores_xla_batch(
+    Q, words, widths, seg, start_pos, start_abs, vals, *, scale=1.0
+):
+    """XLA lowering of the batched runtime-width tile program → [nq, B, D]."""
+    B = words.shape[0]
+    D = start_pos.shape[1]
+    streams = _pad_block_streams(
+        words, widths.astype(jnp.int32)[:, None], seg, start_pos, start_abs, vals
+    )
+    return tiles.xla_block_scores_batch(
+        functools.partial(_tile_fn_batch, scale=scale), Q, streams, D
+    )[:, :B]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "width"))
+def bitpack_block_scores_w_xla(
+    q, words, seg, start_pos, start_abs, vals, *, width: int, scale=1.0
+):
+    """XLA lowering of the compile-time-width tile program. [B, D] f32."""
+    B = words.shape[0]
+    D = start_pos.shape[1]
+
+    def tile_fn(q_, words_, seg_, sp_, sa_, vals_):
+        gaps = tile_gaps(words_, jnp.full((words_.shape[0],), width, jnp.int32), seg_.shape[-1])
+        return tiles.tile_scores(q_, gaps, seg_, sp_, sa_, vals_, scale)
+
+    pad = functools.partial(tiles.pad_axis, multiple=tiles.R_TILE, axis=0)
+    streams = (pad(words), pad(seg, fill=-1), pad(start_pos), pad(start_abs), pad(vals))
+    return tiles.xla_block_scores(tile_fn, q, streams, D)[:B]

@@ -7,19 +7,22 @@ adaptation (DESIGN.md §3) keeps the fusion but restructures the decode:
   control bits ──unpack──► per-value byte counts ──prefix-sum──► offsets
   offsets ──dual byte-gather──► gaps ──segmented cumsum──► components
   components ──gather q (VMEM-resident)──► qv ──FMA vals──► products
-  products ──one-hot MXU matmul──► per-block document scores
+  products ──contiguous-fragment prefix-sum diff──► per-slot scores
 
-Everything happens on one VMEM-resident block per grid step; decoded
-components never touch HBM (the paper's "no intermediate buffer"
-property). The query is densified once and stays in VMEM across the
-whole grid (vocab ≤ 2¹⁶ ⇒ ≤ 256 KB f32 ≪ 16 MB VMEM).
+Kernels are TILED (PR 6, ``tiles.py``): each step consumes ``R_TILE``
+lane-aligned blocks.  The single-query scan runs the explicit
+double-buffered HBM→VMEM DMA pipeline (:func:`tiles.dma_block_scan` —
+tile i+1 is in flight while tile i decodes/scores); the batched variant
+maps a queries×tiles grid (:func:`tiles.grid_batch_scores`) so each
+decoded tile scores a resident query tile.  Decoded gaps/components
+never touch HBM, and the ctrl stream is lane-padded at pack time
+(``layout.LANE_MULTIPLE``) so every tile DMA reads aligned words — the
+tile functions slice it tight before decoding.
 
-Grid: one step per packed block. Block shapes are (1, X) rows of the
-packed arrays — lane-aligned because T % 128 == 0, T/8 % 8 == 0.
-
-Validated against ``repro.kernels.ref`` in interpret mode (this container
-is CPU-only); the data-dependent byte gather is the op to watch when
-lowering on real Mosaic (see EXPERIMENTS.md §Perf).
+``interpret=True`` validates the pipeline semantics on any host
+(CPU-only container); ``interpret=False`` is the real Mosaic lowering.
+The XLA-compiled lowering of the same tile program lives in ``ops.py``
+(mode="pallas_compiled" off-TPU).
 """
 
 from __future__ import annotations
@@ -28,76 +31,74 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-__all__ = ["dotvbyte_block_scores", "dotvbyte_block_scores_batch"]
+from repro.core.scoring import decode_gaps_dotvbyte
 
+from . import tiles
 
-def _decode(ctrl_ref, data_ref):
-    """One row's (ctrl, data) refs → gaps i32 [T]: control bits → byte
-    offsets (exclusive prefix sum = the "scroll" amounts) → dual byte
-    gather. Shared by the block kernels here and ``rows_dot``."""
-    T8 = ctrl_ref.shape[1]
-    T = T8 * 8
-    ctrl = ctrl_ref[0, :].astype(jnp.int32)  # [T/8]
-    bits = (ctrl[:, None] >> jax.lax.broadcasted_iota(jnp.int32, (1, 8), 1)) & 1
-    bits = bits.reshape(T)  # LSB-first, one bit per value
-    lens = bits + 1
-    ends = jnp.cumsum(lens)
-    starts = ends - lens
-    data = data_ref[0, :].astype(jnp.int32)  # [DP]
-    lo = jnp.take(data, starts, axis=0)
-    hi = jnp.take(data, starts + 1, axis=0) * bits
-    return lo + (hi << 8)
+__all__ = [
+    "dotvbyte_block_scores",
+    "dotvbyte_block_scores_batch",
+    "dotvbyte_block_scores_xla",
+    "dotvbyte_block_scores_xla_batch",
+]
 
 
-def _kernel(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
-    T8 = ctrl_ref.shape[1]
-    T = T8 * 8
-    D = sp_ref.shape[1]
-    gaps = _decode(ctrl_ref, data_ref)
+def decode_vec(ctrl: jnp.ndarray, data: jnp.ndarray, T: int) -> jnp.ndarray:
+    """One row's (ctrl [≥T/8] u8, data [DP] u8) → gaps i32 [T]: control
+    bits → byte offsets (exclusive prefix sum = the "scroll" amounts) →
+    dual byte gather.  Used by the rows-rescoring kernel (``rows_dot``);
+    the tiled block kernels use the [R, T] matrix decoder from
+    ``scoring``."""
+    gaps = decode_gaps_dotvbyte(ctrl[None, : T // 8], data[None, :])
+    return gaps[0]
 
-    # --- segmented rebase: gaps → absolute components --------------------
-    seg = seg_ref[0, :].astype(jnp.int32)  # [T] (i8 in the slim layout)
-    t = jnp.cumsum(gaps)
-    segc = jnp.clip(seg, 0, D - 1)
-    tp = jnp.take(t, sp_ref[0, :], axis=0)  # [D] cumsum at fragment starts
-    comp = jnp.where(seg >= 0, jnp.take(sa_ref[0, :], segc) + t - jnp.take(tp, segc), 0)
 
-    # --- fused dot: gather query, FMA, one-hot reduce on the MXU ---------
-    q = q_ref[0, :]
-    qv = jnp.take(q, comp, axis=0)
-    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
-    prod = qv * vals * (seg >= 0).astype(jnp.float32)  # [T]
-    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
-        jnp.float32
+def tile_gaps(ctrl: jnp.ndarray, data: jnp.ndarray, T: int) -> jnp.ndarray:
+    """[R, ≥T/8] ctrl + [R, DP] data → gaps i32 [R, T] (lane padding
+    sliced tight before the decode)."""
+    return decode_gaps_dotvbyte(ctrl[:, : T // 8], data)
+
+
+def _tile_fn(q, ctrl, data, seg, sp, sa, vals, *, scale: float):
+    return tiles.tile_scores(q, tile_gaps(ctrl, data, seg.shape[-1]), seg, sp, sa, vals, scale)
+
+
+def _tile_fn_batch(Q, ctrl, data, seg, sp, sa, vals, *, scale: float):
+    return tiles.tile_scores_batch(Q, tile_gaps(ctrl, data, seg.shape[-1]), seg, sp, sa, vals, scale)
+
+
+def _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals):
+    """Pad the block axis to the tile multiple with neutral blocks
+    (seg=-1 ⇒ zero products; the caller slices scores back to B)."""
+    pad = functools.partial(tiles.pad_axis, multiple=tiles.R_TILE, axis=0)
+    return (
+        pad(ctrl), pad(data), pad(seg, fill=-1), pad(start_pos), pad(start_abs), pad(vals),
     )
-    out_ref[0, :] = jnp.dot(prod[None, :], onehot, preferred_element_type=jnp.float32)[0]
 
 
-def _kernel_batch(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
-    """Batched-query variant: decode ONCE per block, score every query
-    against it in VMEM (§Perf opt4 — the scan's decode and intermediates
-    never touch HBM; per-step HBM traffic = index payload + Q + scores)."""
-    T8 = ctrl_ref.shape[1]
-    T = T8 * 8
-    D = sp_ref.shape[1]
-    gaps = _decode(ctrl_ref, data_ref)
-    seg = seg_ref[0, :].astype(jnp.int32)
-    t = jnp.cumsum(gaps)
-    segc = jnp.clip(seg, 0, D - 1)
-    tp = jnp.take(t, sp_ref[0, :], axis=0)
-    comp = jnp.where(seg >= 0, jnp.take(sa_ref[0, :], segc) + t - jnp.take(tp, segc), 0)
-
-    Q = q_ref[...]  # [nq, V] resident in VMEM across the whole grid
-    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
-    w = vals * (seg >= 0).astype(jnp.float32)
-    qv = jnp.take(Q, comp, axis=1)  # [nq, T]
-    prod = qv * w[None, :]
-    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
-        jnp.float32
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def dotvbyte_block_scores(
+    q: jnp.ndarray,  # [vocab_pad] f32, vocab_pad % 128 == 0
+    ctrl: jnp.ndarray,  # [B, ≥T/8] u8, lane-padded
+    data: jnp.ndarray,  # [B, DP] u8, DP % 128 == 0, ≥ 1 over-read byte
+    seg: jnp.ndarray,  # [B, T] i32 (or i8, slim layout)
+    start_pos: jnp.ndarray,  # [B, D] i32
+    start_abs: jnp.ndarray,  # [B, D] i32
+    vals: jnp.ndarray,  # [B, T] storage dtype
+    *,
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-block document scores [B, D] via the double-buffered DMA
+    scan (combine with ``scatter_block_scores``)."""
+    B = ctrl.shape[0]
+    D = start_pos.shape[1]
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    out = tiles.dma_block_scan(
+        functools.partial(_tile_fn, scale=scale), q, streams, D, interpret
     )
-    out_ref[0] = jnp.dot(prod, onehot, preferred_element_type=jnp.float32)  # [nq, D]
+    return out[:B]
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -113,66 +114,41 @@ def dotvbyte_block_scores_batch(
     scale: float = 1.0,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """[B, nq, D] per-block scores for a query batch."""
-    B, T8 = ctrl.shape
-    T = T8 * 8
+    """[nq, B, D] per-block scores for a query batch: a queries×tiles
+    grid, each block tile decoded once per query tile."""
+    nq = Q.shape[0]
+    B = ctrl.shape[0]
     D = start_pos.shape[1]
-    DP = data.shape[1]
-    nq, V = Q.shape
-    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
-    return pl.pallas_call(
-        functools.partial(_kernel_batch, scale=scale),
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((nq, V), lambda b: (0, 0)),
-            row(T8),
-            row(DP),
-            row(T),
-            row(D),
-            row(D),
-            row(T),
-        ],
-        out_specs=pl.BlockSpec((1, nq, D), lambda b: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, nq, D), jnp.float32),
-        interpret=interpret,
-    )(Q, ctrl, data, seg, start_pos, start_abs, vals)
+    Qp = tiles.pad_axis(Q, tiles.Q_TILE, axis=0)
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    out = tiles.grid_batch_scores(
+        functools.partial(_tile_fn_batch, scale=scale), Qp, streams, D, interpret
+    )
+    return out[:nq, :B]
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
-def dotvbyte_block_scores(
-    q: jnp.ndarray,  # [vocab_pad] f32, vocab_pad % 128 == 0
-    ctrl: jnp.ndarray,  # [B, T/8] u8
-    data: jnp.ndarray,  # [B, DP] u8, DP % 128 == 0, ≥ 1 over-read byte
-    seg: jnp.ndarray,  # [B, T] i32
-    start_pos: jnp.ndarray,  # [B, D] i32
-    start_abs: jnp.ndarray,  # [B, D] i32
-    vals: jnp.ndarray,  # [B, T] storage dtype
-    *,
-    scale: float = 1.0,
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """Per-block document scores [B, D] (combine with scatter_block_scores)."""
-    B, T8 = ctrl.shape
-    T = T8 * 8
+@functools.partial(jax.jit, static_argnames=("scale",))
+def dotvbyte_block_scores_xla(
+    q, ctrl, data, seg, start_pos, start_abs, vals, *, scale: float = 1.0
+):
+    """The same tile program lowered through XLA (``lax.scan`` over the
+    identical lane-aligned tiles) — mode="pallas_compiled" off-TPU."""
+    B = ctrl.shape[0]
     D = start_pos.shape[1]
-    DP = data.shape[1]
-    V = q.shape[0]
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    return tiles.xla_block_scores(
+        functools.partial(_tile_fn, scale=scale), q, streams, D
+    )[:B]
 
-    grid = (B,)
-    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=scale),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, V), lambda b: (0, 0)),  # q resident across grid
-            row(T8),
-            row(DP),
-            row(T),
-            row(D),
-            row(D),
-            row(T),
-        ],
-        out_specs=row(D),
-        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
-        interpret=interpret,
-    )(q[None, :], ctrl, data, seg, start_pos, start_abs, vals)
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def dotvbyte_block_scores_xla_batch(
+    Q, ctrl, data, seg, start_pos, start_abs, vals, *, scale: float = 1.0
+):
+    """XLA lowering of the batched tile program → [nq, B, D]."""
+    B = ctrl.shape[0]
+    D = start_pos.shape[1]
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    return tiles.xla_block_scores_batch(
+        functools.partial(_tile_fn_batch, scale=scale), Q, streams, D
+    )[:, :B]

@@ -1,8 +1,17 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Handle the lane-alignment plumbing (pad query / data streams to
-128-multiples), pick interpret mode on CPU automatically, and combine
+128-multiples), resolve the kernel execution ``mode`` (``repro.kernels.
+modes``: jnp | pallas_interpret | pallas_compiled), and combine
 per-block scores into global document scores.
+
+Every ``score_*`` wrapper takes the mode axis through its third
+parameter: a mode string, ``None`` (auto → compiled), or the
+pre-mode-axis booleans (``interpret=True`` ↦ pallas_interpret,
+``False`` ↦ pallas_compiled). ``mode="jnp"`` routes to the reference
+scorers in ``scoring.py``; ``pallas_compiled`` runs the real Mosaic
+lowering on TPU and the XLA lowering of the same tile program elsewhere
+(one-time warning — see ``modes.resolve_lowering``).
 """
 
 from __future__ import annotations
@@ -12,11 +21,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forward_index import PackedBlocks
-from repro.core.scoring import scatter_block_scores
+from repro.core.scoring import scatter_block_scores, score_packed, score_packed_batch
 
-from .bitpack_dot import bitpack_block_scores, bitpack_block_scores_w
-from .dotvbyte_dot import dotvbyte_block_scores, dotvbyte_block_scores_batch
-from .streamvbyte_dot import streamvbyte_block_scores, streamvbyte_block_scores_batch
+from .bitpack_dot import (
+    bitpack_block_scores,
+    bitpack_block_scores_batch,
+    bitpack_block_scores_w,
+    bitpack_block_scores_w_xla,
+    bitpack_block_scores_xla,
+    bitpack_block_scores_xla_batch,
+)
+from .dotvbyte_dot import (
+    dotvbyte_block_scores,
+    dotvbyte_block_scores_batch,
+    dotvbyte_block_scores_xla,
+    dotvbyte_block_scores_xla_batch,
+)
+from .modes import resolve_lowering
+from .streamvbyte_dot import (
+    streamvbyte_block_scores,
+    streamvbyte_block_scores_batch,
+    streamvbyte_block_scores_xla,
+    streamvbyte_block_scores_xla_batch,
+)
 
 __all__ = [
     "default_interpret",
@@ -26,6 +53,7 @@ __all__ = [
     "score_streamvbyte",
     "score_streamvbyte_batch",
     "score_bitpack",
+    "score_bitpack_batch",
     "score_bitpack_bucketed",
 ]
 
@@ -66,13 +94,22 @@ def _padded_query(q_dense, dim: int) -> jnp.ndarray:
     return _padded_queries(np.asarray(q_dense, dtype=np.float32)[None, :], dim)[0]
 
 
-def score_dotvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+def _lowering(interpret, mode) -> str:
+    """Resolve the wrapper's (interpret, mode) pair — ``mode`` wins when
+    given; the positional slot keeps accepting the legacy booleans AND
+    mode strings (the registry KernelSet calling convention)."""
+    return resolve_lowering(mode if mode is not None else interpret)
+
+
+def score_dotvbyte(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
     """Full fused-kernel scoring path: [n_docs] f32."""
     assert packed.codec == "dotvbyte"
-    interp = default_interpret() if interpret is None else interpret
+    low = _lowering(interpret, mode)
+    if low == "jnp":
+        return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)
     data = pad_to(packed.data, 128, axis=1)
-    block = dotvbyte_block_scores(
+    args = (
         q,
         jnp.asarray(packed.ctrl),
         jnp.asarray(data),
@@ -80,26 +117,29 @@ def score_dotvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = None)
         jnp.asarray(packed.start_pos),
         jnp.asarray(packed.start_abs),
         jnp.asarray(packed.vals),
-        scale=float(packed.value_format.scale),
-        interpret=interp,
     )
+    scale = float(packed.value_format.scale)
+    if low == "xla":
+        block = dotvbyte_block_scores_xla(*args, scale=scale)
+    else:
+        block = dotvbyte_block_scores(*args, scale=scale, interpret=low == "interpret")
     return scatter_block_scores(block, jnp.asarray(packed.doc_ids), packed.n_docs)
 
 
 def _combine_batch(block, doc_ids, n_docs: int):
-    """[B, nq, D] per-block batch scores → [nq, n_docs] global scores."""
-    return jax.vmap(lambda blk: scatter_block_scores(blk, doc_ids, n_docs))(
-        block.transpose(1, 0, 2)
-    )
+    """[nq, B, D] per-block batch scores → [nq, n_docs] global scores."""
+    return jax.vmap(lambda blk: scatter_block_scores(blk, doc_ids, n_docs))(block)
 
 
-def score_dotvbyte_batch(Q, packed: PackedBlocks, interpret: bool | None = None):
+def score_dotvbyte_batch(Q, packed: PackedBlocks, interpret=None, *, mode=None):
     """Decode-once/score-many fused path for a query batch: [nq, n_docs]."""
     assert packed.codec == "dotvbyte"
-    interp = default_interpret() if interpret is None else interpret
+    low = _lowering(interpret, mode)
+    if low == "jnp":
+        return score_packed_batch(Q, packed)
     Qp = _padded_queries(Q, packed.dim)
     data = pad_to(packed.data, 128, axis=1)
-    block = dotvbyte_block_scores_batch(
+    args = (
         Qp,
         jnp.asarray(packed.ctrl),
         jnp.asarray(data),
@@ -107,19 +147,24 @@ def score_dotvbyte_batch(Q, packed: PackedBlocks, interpret: bool | None = None)
         jnp.asarray(packed.start_pos),
         jnp.asarray(packed.start_abs),
         jnp.asarray(packed.vals),
-        scale=float(packed.value_format.scale),
-        interpret=interp,
     )
+    scale = float(packed.value_format.scale)
+    if low == "xla":
+        block = dotvbyte_block_scores_xla_batch(*args, scale=scale)
+    else:
+        block = dotvbyte_block_scores_batch(*args, scale=scale, interpret=low == "interpret")
     return _combine_batch(block, jnp.asarray(packed.doc_ids), packed.n_docs)
 
 
-def score_streamvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+def score_streamvbyte(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
     """Full fused-kernel StreamVByte scoring path: [n_docs] f32."""
     assert packed.codec == "streamvbyte"
-    interp = default_interpret() if interpret is None else interpret
+    low = _lowering(interpret, mode)
+    if low == "jnp":
+        return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)
     data = pad_to(packed.data, 128, axis=1)
-    block = streamvbyte_block_scores(
+    args = (
         q,
         jnp.asarray(packed.ctrl),
         jnp.asarray(data),
@@ -127,19 +172,24 @@ def score_streamvbyte(q_dense, packed: PackedBlocks, interpret: bool | None = No
         jnp.asarray(packed.start_pos),
         jnp.asarray(packed.start_abs),
         jnp.asarray(packed.vals),
-        scale=float(packed.value_format.scale),
-        interpret=interp,
     )
+    scale = float(packed.value_format.scale)
+    if low == "xla":
+        block = streamvbyte_block_scores_xla(*args, scale=scale)
+    else:
+        block = streamvbyte_block_scores(*args, scale=scale, interpret=low == "interpret")
     return scatter_block_scores(block, jnp.asarray(packed.doc_ids), packed.n_docs)
 
 
-def score_streamvbyte_batch(Q, packed: PackedBlocks, interpret: bool | None = None):
+def score_streamvbyte_batch(Q, packed: PackedBlocks, interpret=None, *, mode=None):
     """Decode-once/score-many fused StreamVByte path: [nq, n_docs]."""
     assert packed.codec == "streamvbyte"
-    interp = default_interpret() if interpret is None else interpret
+    low = _lowering(interpret, mode)
+    if low == "jnp":
+        return score_packed_batch(Q, packed)
     Qp = _padded_queries(Q, packed.dim)
     data = pad_to(packed.data, 128, axis=1)
-    block = streamvbyte_block_scores_batch(
+    args = (
         Qp,
         jnp.asarray(packed.ctrl),
         jnp.asarray(data),
@@ -147,19 +197,24 @@ def score_streamvbyte_batch(Q, packed: PackedBlocks, interpret: bool | None = No
         jnp.asarray(packed.start_pos),
         jnp.asarray(packed.start_abs),
         jnp.asarray(packed.vals),
-        scale=float(packed.value_format.scale),
-        interpret=interp,
     )
+    scale = float(packed.value_format.scale)
+    if low == "xla":
+        block = streamvbyte_block_scores_xla_batch(*args, scale=scale)
+    else:
+        block = streamvbyte_block_scores_batch(*args, scale=scale, interpret=low == "interpret")
     return _combine_batch(block, jnp.asarray(packed.doc_ids), packed.n_docs)
 
 
-def score_bitpack(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+def score_bitpack(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
     """Runtime-width bitpack kernel path: [n_docs] f32."""
     assert packed.codec == "bitpack"
-    interp = default_interpret() if interpret is None else interpret
+    low = _lowering(interpret, mode)
+    if low == "jnp":
+        return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)
     words = pad_to(packed.words, 128, axis=1)
-    block = bitpack_block_scores(
+    args = (
         q,
         jnp.asarray(words),
         jnp.asarray(packed.widths),
@@ -167,13 +222,41 @@ def score_bitpack(q_dense, packed: PackedBlocks, interpret: bool | None = None):
         jnp.asarray(packed.start_pos),
         jnp.asarray(packed.start_abs),
         jnp.asarray(packed.vals),
-        scale=float(packed.value_format.scale),
-        interpret=interp,
     )
+    scale = float(packed.value_format.scale)
+    if low == "xla":
+        block = bitpack_block_scores_xla(*args, scale=scale)
+    else:
+        block = bitpack_block_scores(*args, scale=scale, interpret=low == "interpret")
     return scatter_block_scores(block, jnp.asarray(packed.doc_ids), packed.n_docs)
 
 
-def score_bitpack_bucketed(q_dense, packed: PackedBlocks, interpret: bool | None = None):
+def score_bitpack_batch(Q, packed: PackedBlocks, interpret=None, *, mode=None):
+    """Decode-once/score-many runtime-width bitpack path: [nq, n_docs]."""
+    assert packed.codec == "bitpack"
+    low = _lowering(interpret, mode)
+    if low == "jnp":
+        return score_packed_batch(Q, packed)
+    Qp = _padded_queries(Q, packed.dim)
+    words = pad_to(packed.words, 128, axis=1)
+    args = (
+        Qp,
+        jnp.asarray(words),
+        jnp.asarray(packed.widths),
+        jnp.asarray(packed.seg),
+        jnp.asarray(packed.start_pos),
+        jnp.asarray(packed.start_abs),
+        jnp.asarray(packed.vals),
+    )
+    scale = float(packed.value_format.scale)
+    if low == "xla":
+        block = bitpack_block_scores_xla_batch(*args, scale=scale)
+    else:
+        block = bitpack_block_scores_batch(*args, scale=scale, interpret=low == "interpret")
+    return _combine_batch(block, jnp.asarray(packed.doc_ids), packed.n_docs)
+
+
+def score_bitpack_bucketed(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
     """Width-bucketed path: one static-width kernel per distinct width.
 
     Word arrays are sliced tight per bucket (ceil(T·w/32) words, padded to
@@ -181,26 +264,32 @@ def score_bitpack_bucketed(q_dense, packed: PackedBlocks, interpret: bool | None
     size — the §Perf layout.
     """
     assert packed.codec == "bitpack"
-    interp = default_interpret() if interpret is None else interpret
+    low = _lowering(interpret, mode)
+    if low == "jnp":
+        return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)
     T = packed.block_size
     n_docs = packed.n_docs
+    scale = float(packed.value_format.scale)
     total = jnp.zeros((n_docs,), dtype=jnp.float32)
     for w in sorted(set(int(x) for x in packed.widths)):
         sel = np.flatnonzero(packed.widths == w)
         tight = (T * w + 31) // 32
         words = pad_to(packed.words[sel, :tight], 128, axis=1)
-        block = bitpack_block_scores_w(
+        args = (
             q,
             jnp.asarray(words),
             jnp.asarray(packed.seg[sel]),
             jnp.asarray(packed.start_pos[sel]),
             jnp.asarray(packed.start_abs[sel]),
             jnp.asarray(packed.vals[sel]),
-            width=w,
-            scale=float(packed.value_format.scale),
-            interpret=interp,
         )
+        if low == "xla":
+            block = bitpack_block_scores_w_xla(*args, width=w, scale=scale)
+        else:
+            block = bitpack_block_scores_w(
+                *args, width=w, scale=scale, interpret=low == "interpret"
+            )
         total = total + scatter_block_scores(
             block, jnp.asarray(packed.doc_ids[sel]), n_docs
         )

@@ -34,7 +34,7 @@ def _onehot_reduce(prod: jnp.ndarray, seg: jnp.ndarray, D: int) -> jnp.ndarray:
 
 @jax.jit
 def dotvbyte_block_scores_ref(q, ctrl, data, seg, start_pos, start_abs, vals, scale=1.0):
-    gaps = decode_gaps_dotvbyte(ctrl, data)
+    gaps = decode_gaps_dotvbyte(ctrl[:, : seg.shape[1] // 8], data)
     comps = components_from_gaps(gaps, seg, start_pos, start_abs)
     prod = block_products(q, comps, dequantise_values(vals, scale), seg)
     return _onehot_reduce(prod, seg, start_pos.shape[1])
@@ -42,7 +42,7 @@ def dotvbyte_block_scores_ref(q, ctrl, data, seg, start_pos, start_abs, vals, sc
 
 @jax.jit
 def streamvbyte_block_scores_ref(q, ctrl, data, seg, start_pos, start_abs, vals, scale=1.0):
-    gaps = decode_gaps_streamvbyte(ctrl, data)
+    gaps = decode_gaps_streamvbyte(ctrl[:, : seg.shape[1] // 4], data)
     comps = components_from_gaps(gaps, seg, start_pos, start_abs)
     prod = block_products(q, comps, dequantise_values(vals, scale), seg)
     return _onehot_reduce(prod, seg, start_pos.shape[1])

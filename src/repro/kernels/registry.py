@@ -25,9 +25,12 @@ contract the layout registry established for the jnp path. Codecs
 without an entry (or without the relevant field) fall back to jnp with
 a one-time warning (``scoring.score_candidate_rows``).
 
-All entries take ``interpret=None`` → ``ops.default_interpret()``
-(interpret mode off TPU), so the same registry serves the CPU
-semantics-check and real Mosaic lowering.
+Every entry's last parameter is the kernel execution ``mode``
+(``repro.kernels.modes``): a mode string, ``None`` (auto → compiled),
+or the pre-mode-axis booleans (``True`` ↦ pallas_interpret, ``False`` ↦
+pallas_compiled) — so the same registry serves the jnp reference, the
+CPU semantics-check (interpret) and the compiled lowering (Mosaic on
+TPU, XLA elsewhere).
 """
 
 from __future__ import annotations
@@ -38,10 +41,12 @@ from typing import Callable, Dict, Optional
 import jax.numpy as jnp
 
 from . import rows_dot
+from .modes import resolve_lowering
 from .ops import (
     default_interpret,
     pad_query_lanes,
     score_bitpack,
+    score_bitpack_batch,
     score_dotvbyte,
     score_dotvbyte_batch,
     score_streamvbyte,
@@ -63,13 +68,13 @@ class KernelSet:
     """Fused kernel entry points for one codec (None = not fused)."""
 
     codec: str
-    #: (q_dense, PackedBlocks, interpret=None) → [n_docs] f32
+    #: (q_dense, PackedBlocks, mode=None) → [n_docs] f32
     block_scores: Optional[Callable] = None
-    #: (Q [nq, dim], PackedBlocks, interpret=None) → [nq, n_docs] f32
+    #: (Q [nq, dim], PackedBlocks, mode=None) → [nq, n_docs] f32
     block_scores_batch: Optional[Callable] = None
-    #: (arrays, docs [C], q [dim], scale, interpret=None) → [C] f32
+    #: (arrays, docs [C], q [dim], scale, mode=None) → [C] f32
     rows_scores: Optional[Callable] = None
-    #: (arrays, docs [C], Q [nq, dim], scale, interpret=None) → [nq, C]
+    #: (arrays, docs [C], Q [nq, dim], scale, mode=None) → [nq, C]
     rows_scores_batch: Optional[Callable] = None
 
 
@@ -125,35 +130,68 @@ def rows_batch_scorer(codec: str) -> Optional[Callable]:
 # ---------------------------------------------------------------------------
 
 
+def _rows_arrays(arrays) -> dict:
+    """The row-form fields of an engine array dict (drop engine extras
+    so the jit'd XLA rows graph keys on a stable pytree)."""
+    keep = ("vals_rows", "nnz_rows")
+    return {
+        k: arrays[k] for k in arrays if k in keep or k.endswith("_rows")
+    }
+
+
 def _make_rows(codec: str):
-    def rows(arrays, docs, q, scale, interpret=None):
-        interp = default_interpret() if interpret is None else interpret
+    def rows(arrays, docs, q, scale, mode=None):
+        low = resolve_lowering(mode)
+        qp = pad_query_lanes(jnp.asarray(q, jnp.float32))
+        if low == "jnp":
+            from repro.core.scoring import _gather_decode_rows, score_doc_rows
+
+            comps, vals, nnz = _gather_decode_rows(codec, arrays, docs)
+            return score_doc_rows(qp, comps, vals, nnz, float(scale))
+        if low == "xla":
+            return rows_dot.rows_scores_xla(
+                codec, qp, docs, _rows_arrays(arrays), float(scale)
+            )
         return rows_dot.rows_scores(
             codec,
-            pad_query_lanes(jnp.asarray(q, jnp.float32)),
+            qp,
             docs,
             arrays["vals_rows"],
             arrays["nnz_rows"],
             *rows_dot._payload_streams(codec, arrays),
             scale=float(scale),
-            interpret=interp,
+            interpret=low == "interpret",
         )
 
     return rows
 
 
 def _make_rows_batch(codec: str):
-    def rows_batch(arrays, docs, Q, scale, interpret=None):
-        interp = default_interpret() if interpret is None else interpret
+    def rows_batch(arrays, docs, Q, scale, mode=None):
+        low = resolve_lowering(mode)
+        Qp = pad_query_lanes(jnp.asarray(Q, jnp.float32))
+        if low == "jnp":
+            import jax
+
+            from repro.core.scoring import _gather_decode_rows, score_doc_rows
+
+            comps, vals, nnz = _gather_decode_rows(codec, arrays, docs)
+            return jax.vmap(
+                lambda q: score_doc_rows(q, comps, vals, nnz, float(scale))
+            )(Qp)
+        if low == "xla":
+            return rows_dot.rows_scores_xla_batch(
+                codec, Qp, docs, _rows_arrays(arrays), float(scale)
+            )
         return rows_dot.rows_scores_batch(
             codec,
-            pad_query_lanes(jnp.asarray(Q, jnp.float32)),
+            Qp,
             docs,
             arrays["vals_rows"],
             arrays["nnz_rows"],
             *rows_dot._payload_streams(codec, arrays),
             scale=float(scale),
-            interpret=interp,
+            interpret=low == "interpret",
         )
 
     return rows_batch
@@ -186,6 +224,7 @@ def _bitpack_kernels() -> KernelSet:
     return KernelSet(
         codec="bitpack",
         block_scores=score_bitpack,
+        block_scores_batch=score_bitpack_batch,
         rows_scores=_make_rows("bitpack"),
         rows_scores_batch=_make_rows_batch("bitpack"),
     )

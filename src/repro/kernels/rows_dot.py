@@ -21,6 +21,10 @@ HBM traffic is the encoded candidate payload + Q + C scores.
 Row-gap convention: the first gap IS the absolute component
 (per-document alignment), so a plain cumsum rebuilds the ids; the
 sentinel row N is all-zero and scores exactly 0 (callers mask it).
+Row payload streams are lane-padded at pack time (``layout.pack_rows``
+rounds ``l_max`` to ``LANE_MULTIPLE`` and the codec encoders lane-pad
+their ctrl/word streams); the per-codec decoders below slice the
+control stream tight for ``L`` values before decoding.
 
 All four registered codecs have a rows kernel; the query-batched
 variants decode each candidate row ONCE and score the whole resident
@@ -29,9 +33,11 @@ query calls compose with ``jax.vmap`` — the batching rule lifts the
 query axis into the grid — which is how the jit'd vmapped
 ``Retriever.search`` serves ``backend="pallas"`` unmodified.
 
-Validated against the jnp oracle in interpret mode (CPU-only
-container); the scalar-prefetch row DMA is the op to watch under real
-Mosaic lowering (EXPERIMENTS.md §Perf).
+``rows_scores_xla{,_batch}`` lower the SAME fused chain through XLA —
+one jit'd gather→decode→dot graph, candidate-tiled so the decoded
+working set stays cache-resident — which is what
+``mode="pallas_compiled"`` runs on hosts without Mosaic
+(``repro.kernels.modes``).
 """
 
 from __future__ import annotations
@@ -43,11 +49,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import tiles
 from .bitpack_dot import _decode_fixed
-from .dotvbyte_dot import _decode as _decode_dotvbyte
-from .streamvbyte_dot import _decode as _decode_streamvbyte
+from .dotvbyte_dot import decode_vec as _decode_vec_dotvbyte
+from .streamvbyte_dot import decode_vec as _decode_vec_streamvbyte
 
-__all__ = ["rows_scores", "rows_scores_batch"]
+__all__ = [
+    "rows_scores",
+    "rows_scores_batch",
+    "rows_scores_xla",
+    "rows_scores_xla_batch",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -64,12 +76,12 @@ def _comps_uncompressed(refs, L):
 
 def _comps_dotvbyte(refs, L):
     ctrl_ref, data_ref = refs
-    return jnp.cumsum(_decode_dotvbyte(ctrl_ref, data_ref))
+    return jnp.cumsum(_decode_vec_dotvbyte(ctrl_ref[0, :], data_ref[0, :], L))
 
 
 def _comps_streamvbyte(refs, L):
     ctrl_ref, data_ref = refs
-    return jnp.cumsum(_decode_streamvbyte(ctrl_ref, data_ref))
+    return jnp.cumsum(_decode_vec_streamvbyte(ctrl_ref[0, :], data_ref[0, :], L))
 
 
 def _comps_bitpack(refs, L):
@@ -163,3 +175,48 @@ def rows_scores(
         codec, q[None, :], docs, vals_rows, nnz_rows, *payload,
         scale=scale, interpret=interpret,
     )[0]
+
+
+# ---------------------------------------------------------------------------
+# XLA lowering: the same fused chain as one jit'd candidate-tiled graph
+# ---------------------------------------------------------------------------
+
+#: candidate rows per XLA tile — bounds the decoded working set the way
+#: the scalar-prefetch grid bounds it to one row per step
+C_TILE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "scale"))
+def rows_scores_xla_batch(
+    codec: str,
+    Q: jnp.ndarray,  # [nq, dim] f32 (lane padding not required)
+    docs: jnp.ndarray,  # i32 [C]
+    arrays,  # dict with vals_rows/nnz_rows + codec payload
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """One compiled gather→decode→dot graph → scores f32 [nq, C].
+
+    The whole chain fuses under jit (no eager HBM materialisation of
+    the gathered payload or decoded components between dispatches);
+    candidate sets larger than ``C_TILE`` stream through a ``lax.scan``
+    so the per-step working set stays cache-resident."""
+    from repro.core.scoring import _gather_decode_rows, score_doc_rows
+
+    C = docs.shape[0]
+    if C <= C_TILE:
+        comps, vals, nnz = _gather_decode_rows(codec, arrays, docs)
+        return jax.vmap(lambda q: score_doc_rows(q, comps, vals, nnz, scale))(Q)
+    sentinel = arrays["vals_rows"].shape[0] - 1  # all-zero row, scores 0
+    dt = tiles.pad_axis(docs, C_TILE, fill=sentinel).reshape(-1, C_TILE)
+
+    def step(carry, d):
+        comps, vals, nnz = _gather_decode_rows(codec, arrays, d)
+        return carry, jax.vmap(lambda q: score_doc_rows(q, comps, vals, nnz, scale))(Q)
+
+    _, out = jax.lax.scan(step, 0, dt)  # [nt, nq, C_TILE]
+    return out.transpose(1, 0, 2).reshape(Q.shape[0], -1)[:, :C]
+
+
+def rows_scores_xla(codec, q, docs, arrays, scale=1.0):
+    """Single-query form of :func:`rows_scores_xla_batch` → [C] f32."""
+    return rows_scores_xla_batch(codec, q[None, :], docs, arrays, scale)[0]

@@ -8,22 +8,22 @@ adaptation keeps the same fusion discipline as ``dotvbyte_dot``:
   2-bit codes ──unpack──► per-value byte counts ──prefix-sum──► offsets
   offsets ──up-to-4 byte-gathers (masked by code)──► gaps
   gaps ──segmented cumsum──► components ──gather q──► qv ──FMA──► prod
-  prod ──one-hot MXU matmul──► per-block document scores
+  prod ──contiguous-fragment prefix-sum diff──► per-slot scores
 
-Everything for one packed block lives in VMEM for one grid step;
-decoded gaps/components never touch HBM. The batched variant decodes
-each block ONCE and scores the whole VMEM-resident query batch against
-it (decode-once-score-many, EXPERIMENTS.md §Perf opt3 — the fused
-analogue).
+Kernels are TILED (PR 6, ``tiles.py``): every step consumes ``R_TILE``
+lane-aligned blocks.  The single-query scan runs the explicit
+double-buffered HBM→VMEM DMA pipeline (:func:`tiles.dma_block_scan`);
+the batched variant maps a queries×tiles grid
+(:func:`tiles.grid_batch_scores`) so each decoded tile scores a
+resident query tile (decode-once/score-many).  The ctrl stream is
+lane-padded at pack time (``layout.LANE_MULTIPLE``); tile functions
+slice it tight (``T // 4`` bytes) before decoding, and the data stream
+keeps its 3-byte over-read pad so the 4-byte gather never reads out of
+bounds.
 
-Grid: one step per packed block; block shapes are (1, X) rows of the
-packed arrays (T % 128 == 0 ⇒ T/4 % 32 == 0). The data stream carries
-a 3-byte over-read pad (layout ``_byte_scatter``) so the 4-byte gather
-never reads out of bounds.
-
-Validated against ``repro.kernels.ref`` in interpret mode (CPU-only
-container); like DotVByte, the data-dependent byte gather is the op to
-watch under real Mosaic lowering (EXPERIMENTS.md §Perf).
+``interpret=True`` validates the pipeline on any host; the XLA-compiled
+lowering of the same tile program lives in ``ops.py``
+(mode="pallas_compiled" off-TPU).
 """
 
 from __future__ import annotations
@@ -32,75 +32,51 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-__all__ = ["streamvbyte_block_scores", "streamvbyte_block_scores_batch"]
+from repro.core.scoring import decode_gaps_streamvbyte
 
+from . import tiles
 
-def _decode(ctrl_ref, data_ref):
-    """One block's (ctrl, data) refs → gaps i32 [T]."""
-    T4 = ctrl_ref.shape[1]
-    T = T4 * 4
-    ctrl = ctrl_ref[0, :].astype(jnp.int32)  # [T/4]
-    codes = (ctrl[:, None] >> (2 * jax.lax.broadcasted_iota(jnp.int32, (1, 4), 1))) & 0x3
-    codes = codes.reshape(T)  # quad-local value i ↔ bits 2i..2i+1
-    lens = codes + 1
-    ends = jnp.cumsum(lens)
-    starts = ends - lens
-    data = data_ref[0, :].astype(jnp.int32)  # [DP], ≥ 3-byte over-read
-    gaps = jnp.take(data, starts, axis=0)
-    gaps = gaps | (jnp.take(data, starts + 1, axis=0) * (codes >= 1)) << 8
-    gaps = gaps | (jnp.take(data, starts + 2, axis=0) * (codes >= 2)) << 16
-    gaps = gaps | (jnp.take(data, starts + 3, axis=0) * (codes >= 3)) << 24
-    return gaps
+__all__ = [
+    "streamvbyte_block_scores",
+    "streamvbyte_block_scores_batch",
+    "streamvbyte_block_scores_xla",
+    "streamvbyte_block_scores_xla_batch",
+]
 
 
-def _rebase(gaps, seg_ref, sp_ref, sa_ref, D):
-    """Gaps → absolute components via the out-of-band block absolutes."""
-    seg = seg_ref[0, :].astype(jnp.int32)  # i8 in the slim layout
-    t = jnp.cumsum(gaps)
-    segc = jnp.clip(seg, 0, D - 1)
-    tp = jnp.take(t, sp_ref[0, :], axis=0)
-    comp = jnp.where(seg >= 0, jnp.take(sa_ref[0, :], segc) + t - jnp.take(tp, segc), 0)
-    return seg, comp
+def decode_vec(ctrl: jnp.ndarray, data: jnp.ndarray, T: int) -> jnp.ndarray:
+    """One row's (ctrl [≥T/4] u8, data [DP] u8) → gaps i32 [T]; used by
+    the rows-rescoring kernel (``rows_dot``)."""
+    gaps = decode_gaps_streamvbyte(ctrl[None, : T // 4], data[None, :])
+    return gaps[0]
 
 
-def _kernel(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
-    T = ctrl_ref.shape[1] * 4
-    D = sp_ref.shape[1]
-    gaps = _decode(ctrl_ref, data_ref)
-    seg, comp = _rebase(gaps, seg_ref, sp_ref, sa_ref, D)
-    q = q_ref[0, :]
-    qv = jnp.take(q, comp, axis=0)
-    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
-    prod = qv * vals * (seg >= 0).astype(jnp.float32)  # [T]
-    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
-        jnp.float32
+def tile_gaps(ctrl: jnp.ndarray, data: jnp.ndarray, T: int) -> jnp.ndarray:
+    """[R, ≥T/4] ctrl + [R, DP] data → gaps i32 [R, T] (lane padding
+    sliced tight before the decode)."""
+    return decode_gaps_streamvbyte(ctrl[:, : T // 4], data)
+
+
+def _tile_fn(q, ctrl, data, seg, sp, sa, vals, *, scale: float):
+    return tiles.tile_scores(q, tile_gaps(ctrl, data, seg.shape[-1]), seg, sp, sa, vals, scale)
+
+
+def _tile_fn_batch(Q, ctrl, data, seg, sp, sa, vals, *, scale: float):
+    return tiles.tile_scores_batch(Q, tile_gaps(ctrl, data, seg.shape[-1]), seg, sp, sa, vals, scale)
+
+
+def _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals):
+    pad = functools.partial(tiles.pad_axis, multiple=tiles.R_TILE, axis=0)
+    return (
+        pad(ctrl), pad(data), pad(seg, fill=-1), pad(start_pos), pad(start_abs), pad(vals),
     )
-    out_ref[0, :] = jnp.dot(prod[None, :], onehot, preferred_element_type=jnp.float32)[0]
-
-
-def _kernel_batch(q_ref, ctrl_ref, data_ref, seg_ref, sp_ref, sa_ref, vals_ref, out_ref, *, scale: float):
-    """Decode ONCE per block, score every VMEM-resident query against it."""
-    T = ctrl_ref.shape[1] * 4
-    D = sp_ref.shape[1]
-    gaps = _decode(ctrl_ref, data_ref)
-    seg, comp = _rebase(gaps, seg_ref, sp_ref, sa_ref, D)
-    Q = q_ref[...]  # [nq, V] resident across the whole grid
-    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
-    w = vals * (seg >= 0).astype(jnp.float32)
-    qv = jnp.take(Q, comp, axis=1)  # [nq, T]
-    prod = qv * w[None, :]
-    onehot = (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, D), 1)).astype(
-        jnp.float32
-    )
-    out_ref[0] = jnp.dot(prod, onehot, preferred_element_type=jnp.float32)  # [nq, D]
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def streamvbyte_block_scores(
     q: jnp.ndarray,  # [vocab_pad] f32, vocab_pad % 128 == 0
-    ctrl: jnp.ndarray,  # [B, T/4] u8
+    ctrl: jnp.ndarray,  # [B, ≥T/4] u8, lane-padded
     data: jnp.ndarray,  # [B, DP] u8, DP % 128 == 0, ≥ 3 over-read bytes
     seg: jnp.ndarray,  # [B, T] i32 (or i8, slim layout)
     start_pos: jnp.ndarray,  # [B, D] i32
@@ -110,29 +86,15 @@ def streamvbyte_block_scores(
     scale: float = 1.0,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Per-block document scores [B, D] (combine with scatter_block_scores)."""
-    B, T4 = ctrl.shape
-    T = T4 * 4
+    """Per-block document scores [B, D] via the double-buffered DMA
+    scan (combine with ``scatter_block_scores``)."""
+    B = ctrl.shape[0]
     D = start_pos.shape[1]
-    DP = data.shape[1]
-    V = q.shape[0]
-    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=scale),
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, V), lambda b: (0, 0)),  # q resident across grid
-            row(T4),
-            row(DP),
-            row(T),
-            row(D),
-            row(D),
-            row(T),
-        ],
-        out_specs=row(D),
-        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
-        interpret=interpret,
-    )(q[None, :], ctrl, data, seg, start_pos, start_abs, vals)
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    out = tiles.dma_block_scan(
+        functools.partial(_tile_fn, scale=scale), q, streams, D, interpret
+    )
+    return out[:B]
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -148,26 +110,41 @@ def streamvbyte_block_scores_batch(
     scale: float = 1.0,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """[B, nq, D] per-block scores for a query batch (decode once/block)."""
-    B, T4 = ctrl.shape
-    T = T4 * 4
+    """[nq, B, D] per-block scores for a query batch: a queries×tiles
+    grid, each block tile decoded once per query tile."""
+    nq = Q.shape[0]
+    B = ctrl.shape[0]
     D = start_pos.shape[1]
-    DP = data.shape[1]
-    nq, V = Q.shape
-    row = lambda width: pl.BlockSpec((1, width), lambda b: (b, 0))
-    return pl.pallas_call(
-        functools.partial(_kernel_batch, scale=scale),
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((nq, V), lambda b: (0, 0)),
-            row(T4),
-            row(DP),
-            row(T),
-            row(D),
-            row(D),
-            row(T),
-        ],
-        out_specs=pl.BlockSpec((1, nq, D), lambda b: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, nq, D), jnp.float32),
-        interpret=interpret,
-    )(Q, ctrl, data, seg, start_pos, start_abs, vals)
+    Qp = tiles.pad_axis(Q, tiles.Q_TILE, axis=0)
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    out = tiles.grid_batch_scores(
+        functools.partial(_tile_fn_batch, scale=scale), Qp, streams, D, interpret
+    )
+    return out[:nq, :B]
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def streamvbyte_block_scores_xla(
+    q, ctrl, data, seg, start_pos, start_abs, vals, *, scale: float = 1.0
+):
+    """The same tile program lowered through XLA — mode="pallas_compiled"
+    off-TPU."""
+    B = ctrl.shape[0]
+    D = start_pos.shape[1]
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    return tiles.xla_block_scores(
+        functools.partial(_tile_fn, scale=scale), q, streams, D
+    )[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def streamvbyte_block_scores_xla_batch(
+    Q, ctrl, data, seg, start_pos, start_abs, vals, *, scale: float = 1.0
+):
+    """XLA lowering of the batched tile program → [nq, B, D]."""
+    B = ctrl.shape[0]
+    D = start_pos.shape[1]
+    streams = _pad_block_streams(ctrl, data, seg, start_pos, start_abs, vals)
+    return tiles.xla_block_scores_batch(
+        functools.partial(_tile_fn_batch, scale=scale), Q, streams, D
+    )[:, :B]

@@ -100,10 +100,14 @@ def main() -> None:
                     default="seismic",
                     help="a registered engine, 'both' (seismic+hnsw) or 'all'")
     ap.add_argument("--codec", default="dotvbyte", choices=codecs_known)
-    ap.add_argument("--backend", default=None, choices=["jnp", "pallas"],
+    ap.add_argument("--backend", default=None,
+                    choices=["jnp", "pallas", "pallas_interpret",
+                             "pallas_compiled"],
                     help="candidate-rescoring path: jnp reference or the "
-                         "fused kernel registry (DESIGN.md §3); default jnp, "
-                         "or the artifact's saved backend under --load-index")
+                         "fused kernel registry (DESIGN.md §3); 'pallas' = "
+                         "the kernels' default compiled mode, or pin the "
+                         "mode explicitly; default jnp, or the artifact's "
+                         "saved backend under --load-index")
     ap.add_argument("--compare-codecs", action="store_true",
                     help="sweep every registered serving codec over the same index")
     ap.add_argument("--pipeline", action="store_true",

@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.core import layout
 from repro.core.forward_index import VALUE_FORMATS, ForwardIndex
+from repro.kernels import modes as kernel_modes
 from repro.serve import pipeline as serve_pipeline
 
 __all__ = [
@@ -100,9 +101,12 @@ class RetrieverConfig:
     serving defaults.
 
     ``backend`` selects the candidate-rescoring execution path
-    (DESIGN.md §3): ``"jnp"`` (reference) or ``"pallas"`` (fused
-    kernels from ``repro.kernels.registry`` — identical top-k,
-    asserted by the parity suite and ``make kernel-parity``).
+    (DESIGN.md §3, §7): ``"jnp"`` (reference), ``"pallas"`` (fused
+    kernels from ``repro.kernels.registry`` in their default —
+    compiled — mode), or an explicit kernel mode
+    ``"pallas_interpret"`` / ``"pallas_compiled"``
+    (``repro.kernels.modes``). Top-k ids are identical across all
+    backends, asserted by the parity suite and ``make kernel-parity``.
 
     ``batch_size`` is the expected steady-state query-batch size: it
     joins the pipeline's padding-bucket set (DESIGN.md §8) so that
@@ -111,7 +115,7 @@ class RetrieverConfig:
 
     engine: str = "seismic"
     codec: str = "uncompressed"
-    backend: str = "jnp"  # "jnp" | "pallas" scoring path
+    backend: str = "jnp"  # a kernel_modes.SCORING_BACKENDS value
     k: int = 10
     batch_size: int | None = None  # steady-state batch hint → bucket set
     n_shards: int = 1  # index shards for the sharded path
@@ -273,9 +277,10 @@ class Retriever:
     ):
         self.impl = get_engine(cfg.engine)
         layout.get_layout(cfg.codec)  # raises listing the known codecs
-        if cfg.backend not in ("jnp", "pallas"):
+        if cfg.backend not in kernel_modes.SCORING_BACKENDS:
             raise ValueError(
-                f"unknown backend {cfg.backend!r}; have ['jnp', 'pallas']"
+                f"unknown backend {cfg.backend!r}; have "
+                f"{list(kernel_modes.SCORING_BACKENDS)}"
             )
         if cfg.batch_size is not None and (
             not isinstance(cfg.batch_size, int)

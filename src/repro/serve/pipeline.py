@@ -127,11 +127,18 @@ def synthetic_trace(
 
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
-    """Identity of one compiled search executable."""
+    """Identity of one compiled search executable.
+
+    ``mode`` is the RESOLVED kernel execution mode
+    (``repro.kernels.modes.MODES``) the backend string maps to — the
+    auto ``backend="pallas"`` resolves to ``"pallas_compiled"`` here, so
+    plan identity tracks what actually compiles, not how it was asked
+    for."""
 
     engine: str
     codec: str
     backend: str
+    mode: str
     k: int
     bucket: int
 
@@ -177,11 +184,14 @@ class PlanCache:
         import jax
         from functools import partial
 
+        from repro.kernels.modes import backend_mode, resolve_mode
+
         cfg = retriever.cfg
         self.buckets = plan_buckets(cfg.batch_size, buckets)
         self.k = cfg.k
+        mode = resolve_mode(backend_mode(cfg.backend))
         self._key = partial(
-            PlanKey, cfg.engine, cfg.codec, cfg.backend, cfg.k
+            PlanKey, cfg.engine, cfg.codec, cfg.backend, mode, cfg.k
         )
         self._dispatch = jax.jit(
             partial(

@@ -299,3 +299,150 @@ def test_kernel_single_block_degenerate():
     q[0], q[255] = 3.0, 4.0
     got = np.asarray(score_dotvbyte(q, packed, interpret=True))
     np.testing.assert_allclose(got, [3.0 + 8.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# execution-mode axis (repro.kernels.modes) + tiled edge shapes
+# ---------------------------------------------------------------------------
+
+from repro.kernels import modes as kernel_modes  # noqa: E402
+from repro.kernels.tiles import Q_TILE, R_TILE  # noqa: E402
+
+_SCAN_WRAPPER = {
+    "dotvbyte": score_dotvbyte,
+    "streamvbyte": score_streamvbyte,
+    "bitpack": score_bitpack_bucketed,
+}
+
+
+def test_mode_resolution():
+    """Mode normalisation: None → compiled, legacy booleans map onto
+    the two pallas modes, bad spellings raise with the valid list."""
+    assert kernel_modes.resolve_mode(None) == "pallas_compiled"
+    assert kernel_modes.resolve_mode(True) == "pallas_interpret"
+    assert kernel_modes.resolve_mode(False) == "pallas_compiled"
+    for m in kernel_modes.MODES:
+        assert kernel_modes.resolve_mode(m) == m
+    with pytest.raises(ValueError, match="unknown kernel mode"):
+        kernel_modes.resolve_mode("fast")
+    assert kernel_modes.backend_mode("jnp") == "jnp"
+    assert kernel_modes.backend_mode("pallas") is None  # auto
+    assert kernel_modes.backend_mode("pallas_interpret") == "pallas_interpret"
+    assert kernel_modes.backend_mode("pallas_compiled") == "pallas_compiled"
+    with pytest.raises(ValueError, match="unknown scoring backend"):
+        kernel_modes.backend_mode("cuda")
+    assert kernel_modes.resolve_lowering("jnp") == "jnp"
+    assert kernel_modes.resolve_lowering("pallas_interpret") == "interpret"
+    assert kernel_modes.resolve_lowering("pallas_compiled") in ("mosaic", "xla")
+
+
+def test_xla_fallback_warns_once():
+    """Without Mosaic, pallas_compiled lowers through XLA with exactly
+    one RuntimeWarning for the whole process."""
+    if kernel_modes.mosaic_available():
+        pytest.skip("Mosaic backend attached: no fallback on this host")
+    saved = set(kernel_modes._XLA_FALLBACK_WARNED)
+    kernel_modes._XLA_FALLBACK_WARNED.clear()
+    try:
+        with pytest.warns(RuntimeWarning, match="through XLA"):
+            assert kernel_modes.resolve_lowering("pallas_compiled") == "xla"
+        import warnings as _w
+
+        with _w.catch_warnings():  # second resolve: already warned
+            _w.simplefilter("error", RuntimeWarning)
+            assert kernel_modes.resolve_lowering("pallas_compiled") == "xla"
+    finally:
+        kernel_modes._XLA_FALLBACK_WARNED.clear()
+        kernel_modes._XLA_FALLBACK_WARNED.update(saved)
+
+
+@pytest.mark.parametrize("codec", ["dotvbyte", "streamvbyte", "bitpack"])
+def test_scan_modes_parity_edge_shapes(codec):
+    """Block counts that are NOT a multiple of the tile height (the
+    DMA scan pads with neutral tiles) and a single-doc corpus: all
+    three execution modes reproduce the jnp scores."""
+    rng = np.random.default_rng(41)
+    scorer = _SCAN_WRAPPER[codec]
+    for n_docs in (11, 1):
+        fwd = _collection(rng, n_docs, 512, 60, "f16")
+        packed = pack_forward_index(fwd, codec=codec, block_size=128)
+        assert packed.seg.shape[0] % R_TILE != 0  # the shape under test
+        q = _query(rng, 512, nnz=20)
+        want = np.asarray(scorer(q, packed, mode="jnp"))
+        for mode in ("pallas_interpret", "pallas_compiled"):
+            got = np.asarray(scorer(q, packed, mode=mode))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{codec} [{mode}]")
+
+
+@pytest.mark.parametrize("codec", available_kernels())
+def test_rows_kernel_modes_parity(codec):
+    """Candidate sets with duplicate ids, the sentinel, an empty row,
+    and a length far from the rescoring tile width: interpret and
+    compiled both reproduce the jnp chain."""
+    rng = np.random.default_rng(7 + sum(codec.encode()))
+    fwd, cand = _rows_fixture(rng, dim=1024, n_docs=21)
+    arrays = {k: jnp.asarray(v) for k, v in layout.pack_rows(fwd, codec=codec).arrays().items()}
+    q = _query(rng, fwd.dim)
+    scale = float(fwd.value_format.scale)
+    ks = get_kernels(codec)
+    want = np.asarray(score_candidate_rows(
+        codec, arrays, jnp.asarray(cand), jnp.asarray(q), scale, backend="jnp"
+    ))
+    for mode in ("pallas_interpret", "pallas_compiled"):
+        got = np.asarray(ks.rows_scores(
+            arrays, jnp.asarray(cand), jnp.asarray(q), scale, mode
+        ))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{codec} [{mode}]")
+
+
+def test_batched_kernels_compiled_mode_parity():
+    """Compiled batched grids at nq not a multiple of the query tile:
+    scan == vmapped score_packed, rows == the jnp chain per query."""
+    rng = np.random.default_rng(67)
+    fwd = _collection(rng, 30, 1024, 80, "f16")
+    nq = Q_TILE - 3  # forces query-axis padding in the batched grid
+    Q = np.stack([_query(rng, 1024, nnz=24) for _ in range(nq)])
+    for codec, batch_fn in [("dotvbyte", score_dotvbyte_batch),
+                            ("streamvbyte", score_streamvbyte_batch)]:
+        packed = pack_forward_index(fwd, codec=codec, block_size=128)
+        got = np.asarray(batch_fn(Q, packed, mode="pallas_compiled"))
+        want = np.asarray(score_packed_batch(Q, packed))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5, err_msg=codec)
+
+    from repro.core.scoring import score_candidate_rows_batch
+
+    cand = np.array([5, 5, 0, 30, 29, 7, 1], np.int32)  # dups + sentinel
+    for codec in ("streamvbyte", "bitpack"):
+        arrays = {k: jnp.asarray(v)
+                  for k, v in layout.pack_rows(fwd, codec=codec).arrays().items()}
+        scale = float(fwd.value_format.scale)
+        got = np.asarray(get_kernels(codec).rows_scores_batch(
+            arrays, jnp.asarray(cand), jnp.asarray(Q), scale, "pallas_compiled"
+        ))
+        want = np.asarray(score_candidate_rows_batch(
+            codec, arrays, jnp.asarray(cand), jnp.asarray(Q), scale, backend="jnp"
+        ))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6, err_msg=codec)
+
+
+def test_rows_single_doc_corpus_modes():
+    """One-document corpus (row table is just the doc + sentinel):
+    every mode scores the duplicate/sentinel candidate list alike."""
+    docs = [(np.array([1, 200], np.uint32), np.array([1.5, 2.0], np.float32))]
+    fwd = ForwardIndex.from_docs(docs, 256, value_format="f32")
+    cand = np.array([0, 0, 1], np.int32)  # dup + sentinel row
+    q = np.zeros(256, np.float32)
+    q[1], q[200] = 2.0, 1.0
+    for codec in available_kernels():
+        arrays = {k: jnp.asarray(v)
+                  for k, v in layout.pack_rows(fwd, codec=codec).arrays().items()}
+        scale = float(fwd.value_format.scale)
+        for mode in ("jnp", "pallas_interpret", "pallas_compiled"):
+            got = np.asarray(score_candidate_rows(
+                codec, arrays, jnp.asarray(cand), jnp.asarray(q), scale,
+                backend=mode if mode != "jnp" else "jnp",
+            ))
+            np.testing.assert_allclose(got, [5.0, 5.0, 0.0], rtol=1e-5,
+                                       err_msg=f"{codec} [{mode}]")

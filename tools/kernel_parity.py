@@ -3,20 +3,24 @@
 check``).
 
 Asserts, for every codec registered in the kernel registry
-(``repro.kernels.registry``), in interpret mode on a tiny synthetic
-collection:
+(``repro.kernels.registry``), across every execution mode of the tile
+program (``pallas_interpret`` and ``pallas_compiled`` — the latter
+lowers through Mosaic on TPU hosts and through the tiled XLA fallback
+everywhere else, so this gate runs the same sweep on CPU CI), on a
+tiny synthetic collection:
 
-1. **block-scan parity** — the fused Pallas block kernel matches the
-   jnp ``score_packed`` reference (allclose);
-2. **rows-rescoring parity** — the fused scalar-prefetch rows kernel
-   matches the jnp take→decode→dot chain on a candidate set that
-   includes the sentinel id, duplicates and an empty document;
-3. **end-to-end backend parity** — ``Retriever(...,
-   backend="pallas")`` returns byte-identical top-k ids (and allclose
-   scores) to ``backend="jnp"`` for every registered engine × codec;
+1. **block-scan parity** — the fused block kernel matches the jnp
+   ``score_packed`` reference (allclose) in both modes;
+2. **rows-rescoring parity** — the fused rows kernel matches the jnp
+   take→decode→dot chain on a candidate set that includes the sentinel
+   id, duplicates and an empty document, in both modes;
+3. **end-to-end backend parity** — ``Retriever`` top-k ids are
+   byte-identical across all three modes (``jnp`` vs
+   ``pallas_interpret`` vs ``pallas_compiled``) for every registered
+   engine × codec, with allclose scores;
 4. **HBM accounting** — the fused rescoring path streams strictly
-   fewer derived HBM bytes per query than the jnp chain
-   (``benchmarks.kernel_bench.rows_hbm_bytes``).
+   fewer derived HBM bytes per query than the jnp chain, single-query
+   AND batched (``benchmarks.kernel_bench.rows_hbm_bytes{,_batch}``).
 
 Exit status = number of failures (0 = pass).
 """
@@ -39,7 +43,10 @@ from repro.data.synthetic import SyntheticConfig, generate_collection  # noqa: E
 from repro.kernels.registry import available_kernels, get_kernels  # noqa: E402
 from repro.serve.api import Retriever, RetrieverConfig, available_engines, get_engine  # noqa: E402
 
-from benchmarks.kernel_bench import rows_hbm_bytes  # noqa: E402
+from benchmarks.kernel_bench import rows_hbm_bytes, rows_hbm_bytes_batch  # noqa: E402
+
+#: fused-kernel execution modes swept by every parity check
+FUSED_MODES = ("pallas_interpret", "pallas_compiled")
 
 #: per-engine knobs sized for the tiny parity collection
 ENGINE_PARAMS = {
@@ -75,34 +82,45 @@ def main() -> int:
 
     for codec in available_kernels():
         ks = get_kernels(codec)
-        # 1. block-scan parity
+        # 1. block-scan parity, both fused modes
         if ks.block_scores is not None:
             packed = pack_forward_index(fwd, codec=codec, block_size=128)
             want = np.asarray(score_packed(q, packed))
-            got = np.asarray(ks.block_scores(q, packed, True))
-            if not np.allclose(got, want, rtol=1e-4, atol=1e-4):
-                _fail(errors, f"block-scan parity: {codec}")
-            else:
-                print(f"ok block-scan  {codec}")
+            for mode in FUSED_MODES:
+                got = np.asarray(ks.block_scores(q, packed, mode))
+                if not np.allclose(got, want, rtol=1e-4, atol=1e-4):
+                    _fail(errors, f"block-scan parity: {codec} [{mode}]")
+                else:
+                    print(f"ok block-scan  {codec} [{mode}]")
         # 2. rows parity + 4. HBM accounting
         arrays = {k: jnp.asarray(v) for k, v in layout.pack_rows(fwd, codec=codec).arrays().items()}
         want = np.asarray(
             score_candidate_rows(codec, arrays, jnp.asarray(cand), jnp.asarray(q),
                                  scale, backend="jnp")
         )
-        got = np.asarray(ks.rows_scores(arrays, jnp.asarray(cand), jnp.asarray(q), scale, True))
-        if not np.allclose(got, want, rtol=1e-5, atol=1e-6):
-            _fail(errors, f"rows-rescoring parity: {codec}")
-        else:
-            print(f"ok rows-kernel {codec}")
+        for mode in FUSED_MODES:
+            got = np.asarray(
+                ks.rows_scores(arrays, jnp.asarray(cand), jnp.asarray(q), scale, mode)
+            )
+            if not np.allclose(got, want, rtol=1e-5, atol=1e-6):
+                _fail(errors, f"rows-rescoring parity: {codec} [{mode}]")
+            else:
+                print(f"ok rows-kernel {codec} [{mode}]")
         fused = rows_hbm_bytes(arrays, codec, len(cand), fused=True)
         chain = rows_hbm_bytes(arrays, codec, len(cand), fused=False)
         if not fused < chain:
             _fail(errors, f"HBM accounting: fused {fused} !< jnp {chain} ({codec})")
         else:
             print(f"ok hbm-bytes   {codec}: fused {fused} < jnp {chain}")
+        bfused = rows_hbm_bytes_batch(arrays, codec, len(cand), 8, fused=True)
+        bchain = rows_hbm_bytes_batch(arrays, codec, len(cand), 8, fused=False)
+        if not bfused < bchain:
+            _fail(errors, f"HBM accounting (batched): fused {bfused:.0f} !< "
+                          f"jnp {bchain:.0f} ({codec})")
+        else:
+            print(f"ok hbm-batch   {codec}: fused {bfused:.0f} < jnp {bchain:.0f}")
 
-    # 3. end-to-end backend parity, every engine × codec
+    # 3. end-to-end parity across all three modes, every engine × codec
     hosts = {}
     for e in available_engines():
         impl = get_engine(e)
@@ -117,13 +135,15 @@ def main() -> int:
                     return Retriever.from_host_index(hosts[engine], c)
                 return Retriever.build(fwd, c)
             ij, sj = build("jnp").search(Q)
-            ip, sp = build("pallas").search(Q)
-            if not np.array_equal(np.asarray(ij), np.asarray(ip)):
-                _fail(errors, f"top-k id parity: {engine}×{codec}")
-            elif not np.allclose(np.asarray(sj), np.asarray(sp), rtol=1e-5, atol=1e-6):
-                _fail(errors, f"top-k score parity: {engine}×{codec}")
-            else:
-                print(f"ok backend     {engine}×{codec}")
+            ij, sj = np.asarray(ij), np.asarray(sj)
+            for backend in FUSED_MODES:
+                ib, sb = build(backend).search(Q)
+                if not np.array_equal(ij, np.asarray(ib)):
+                    _fail(errors, f"top-k id parity: {engine}×{codec} [{backend}]")
+                elif not np.allclose(sj, np.asarray(sb), rtol=1e-5, atol=1e-6):
+                    _fail(errors, f"top-k score parity: {engine}×{codec} [{backend}]")
+                else:
+                    print(f"ok backend     {engine}×{codec} [{backend}]")
 
     if errors:
         print(f"kernel-parity: {len(errors)} failure(s)")

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Compiled-kernel perf-regression gate (``make perf-gate``, part of
+``make check``).
+
+Reads the committed ``BENCH_kernels.json``, re-measures the
+``pallas_compiled`` scan and rescoring rows at the committed collection
+size, and **NaN-fails** — the regressed row is reported with ``us=nan``
+and the exit status is non-zero — whenever a freshly measured compiled
+row is slower than the *committed* jnp row for the same codec.
+
+Only (family, codec) pairs whose committed snapshot records a compiled
+win (compiled µs ≤ jnp µs) are gated: the gate locks in the wins the
+tiled kernels bought, it does not demand wins the snapshot never
+claimed (e.g. the decode-free ``uncompressed`` rescoring row, where
+fusion buys HBM bytes rather than CPU wall-clock). Rows are selected
+via the structured ``mode``/``codec`` fields, never by name parsing.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+#: families the gate guards (batch_sweep wall-clock is too noisy at the
+#: quick-mode collection size to lock in)
+GATED_FAMILIES = ("scan", "rescoring")
+
+
+def _family(name: str) -> str:
+    parts = name.split("/")
+    return parts[1] if len(parts) > 1 else name
+
+
+def main() -> int:
+    bench_path = os.path.join(_ROOT, "BENCH_kernels.json")
+    if not os.path.isfile(bench_path):
+        print("perf-gate: no committed BENCH_kernels.json — nothing to guard")
+        return 0
+    with open(bench_path) as f:
+        snap = json.load(f)
+    n_docs = int(snap.get("n_docs", 300))
+
+    committed: dict[tuple[str, str, str], float] = {}
+    for row in snap.get("rows", []):
+        mode, codec = row.get("mode"), row.get("codec")
+        if not mode or not codec or row.get("us") is None:
+            continue
+        committed[(_family(row["name"]), codec, mode)] = float(row["us"])
+
+    gated = sorted(
+        (fam, codec)
+        for (fam, codec, mode) in committed
+        if mode == "pallas_compiled"
+        and fam in GATED_FAMILIES
+        and (fam, codec, "jnp") in committed
+        and committed[(fam, codec, "pallas_compiled")]
+        <= committed[(fam, codec, "jnp")]
+    )
+    if not gated:
+        print("perf-gate: committed snapshot records no compiled wins — "
+              "nothing to guard (is BENCH_kernels.json stale?)")
+        return 0
+
+    from benchmarks.kernel_bench import run as bench_run
+
+    print(f"# perf-gate: re-measuring pallas_compiled rows at n_docs={n_docs}…",
+          file=sys.stderr, flush=True)
+    fresh_rows = bench_run(n_docs=n_docs, modes=("pallas_compiled",), sweep=False)
+    fresh = {(_family(r.name), r.codec): r for r in fresh_rows if r.codec}
+
+    failures = 0
+    for fam, codec in gated:
+        jnp_us = committed[(fam, codec, "jnp")]
+        r = fresh.get((fam, codec))
+        if r is None:
+            failures += 1
+            print(f"FAIL {fam}/{codec}: compiled row missing from fresh run "
+                  f"(committed jnp {jnp_us:.1f}µs)")
+            continue
+        if r.us > jnp_us:
+            failures += 1
+            measured = r.us
+            r.us = math.nan  # NaN-fail: the regression row carries no number
+            print(f"FAIL {fam}/{codec}: fresh compiled us=nan "
+                  f"(measured {measured:.1f}µs) — slower than committed "
+                  f"jnp {jnp_us:.1f}µs")
+        else:
+            print(f"ok   {fam}/{codec}: fresh compiled {r.us:.1f}µs "
+                  f"≤ committed jnp {jnp_us:.1f}µs")
+    if failures:
+        print(f"perf-gate: {failures} compiled regression(s)")
+    else:
+        print(f"perf-gate OK ({len(gated)} locked-in win(s) re-verified)")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())
