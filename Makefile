@@ -7,7 +7,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 ROUNDTRIP_DIR ?= /tmp/repro-serve-roundtrip
 ROUNDTRIP_ARGS = --engine all --compare-codecs --n-docs 400 --n-queries 8 --seed 0
 
-.PHONY: test check bench bench-fast docs-check serve-roundtrip kernel-parity perf-gate pipeline-smoke clean
+.PHONY: test check bench bench-fast docs-check serve-roundtrip kernel-parity shard-parity perf-gate pipeline-smoke clean
 
 test:            ## tier-1 suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -24,6 +24,9 @@ serve-roundtrip: ## artifact lifecycle smoke: build→save, then load→search i
 kernel-parity:   ## fused kernels vs jnp in both pallas modes: block scan, rows rescoring, 3-mode top-k id parity, HBM accounting — all engines×codecs
 	$(PY) tools/kernel_parity.py
 
+shard-parity:    ## sharded vs unsharded byte-identical top-k (ragged shards included), mmap'd artifact round-trip, on-disk bytes bound — all engines×codecs
+	$(PY) tools/shard_parity.py
+
 perf-gate:       ## NaN-fail when a freshly measured pallas_compiled row is slower than the committed jnp row for the same codec
 	$(PY) tools/perf_gate.py
 
@@ -31,7 +34,7 @@ pipeline-smoke:  ## micro-batching scheduler smoke: synthetic trace through the 
 	$(PY) -m repro.launch.serve --pipeline --engine flat --codec streamvbyte --n-docs 300 --n-queries 16 --requests 96 --deadline-us 500
 	$(PY) -m repro.launch.serve --pipeline --engine seismic --codec dotvbyte --backend pallas --n-docs 400 --n-queries 8 --requests 48 --n-probe 16
 
-check: docs-check serve-roundtrip kernel-parity perf-gate pipeline-smoke ## tier-1 suite + tiny Table-1/2/3/4+kernel benchmark pass + docs audit + artifact + parity + perf + pipeline gates
+check: docs-check serve-roundtrip kernel-parity shard-parity perf-gate pipeline-smoke ## tier-1 suite + tiny Table-1/2/3/4/5+kernel benchmark pass + docs audit + artifact + parity + perf + pipeline gates
 	$(PY) -m benchmarks.run --quick
 
 bench:           ## full benchmark sweep (slow)

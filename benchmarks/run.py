@@ -1,8 +1,9 @@
 """Benchmark entry point — one section per paper table + kernel/roofline
 extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)
-and snapshots the kernel + serving + pipeline families to
+and snapshots the kernel + serving + pipeline + scale families to
 machine-readable ``BENCH_kernels.json`` / ``BENCH_serve.json`` /
-``BENCH_pipeline.json`` / ``BENCH_roofline.json`` at the repo root
+``BENCH_pipeline.json`` / ``BENCH_roofline.json`` / ``BENCH_scale.json``
+at the repo root
 (schema: name, µs, structured mode/codec, parsed derived metrics, git
 sha — see ``common.write_bench_json``) so the perf trajectory is
 diffable across PRs.
@@ -30,7 +31,7 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None,
-              n_docs: int | None = None) -> None:
+              n_docs: int | None = None, scale_rows=None) -> None:
     """Write the committed snapshots. ``mode`` (quick/fast/full) is
     recorded in the payload so the perf trajectory is only compared
     like-for-like (``n_docs`` likewise, for the kernel family — the
@@ -58,6 +59,9 @@ def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None,
     if pipeline_rows:
         write_bench_json(os.path.join(_ROOT, "BENCH_pipeline.json"),
                          pipeline_rows, meta={"mode": mode})
+    if scale_rows:
+        write_bench_json(os.path.join(_ROOT, "BENCH_scale.json"),
+                         scale_rows, meta={"mode": mode})
 
 
 def _quick_smoke() -> int:
@@ -78,16 +82,18 @@ def _quick_smoke() -> int:
         return proc.returncode
 
     from . import (kernel_bench, table1_codecs, table2_seismic, table3_graph,
-                   table4_pipeline)
+                   table4_pipeline, table5_scale)
 
-    print("# tiny table1/table2/table3/table4 + kernels…", file=sys.stderr,
-          flush=True)
+    print("# tiny table1/table2/table3/table4/table5 + kernels…",
+          file=sys.stderr, flush=True)
     rows = table1_codecs.run(n_docs=400, n_queries=2, rgb_iters=2)
     serve_rows = table2_seismic.run(n_docs=400, n_queries=4)
     serve_rows += table3_graph.run(n_docs=400, n_queries=4)
     kernel_rows = kernel_bench.run(n_docs=300)
     pipeline_rows = table4_pipeline.run(n_docs=400, n_queries=8, n_requests=64)
-    rows += serve_rows + kernel_rows + pipeline_rows
+    scale_rows = table5_scale.run(n_docs_sweep=(2000,), n_queries=16,
+                                  n_requests=32)
+    rows += serve_rows + kernel_rows + pipeline_rows + scale_rows
     emit(rows)
     # a NaN latency means no sweep point reached the accuracy level —
     # or, for the pipeline/amortized-gate rows, that bucketed serving
@@ -100,7 +106,7 @@ def _quick_smoke() -> int:
     # snapshot only after the gate passes — a failing run must not
     # overwrite the committed trajectory with regression numbers
     _snapshot(kernel_rows, serve_rows, mode="quick", pipeline_rows=pipeline_rows,
-              n_docs=300)
+              n_docs=300, scale_rows=scale_rows)
     print(f"# quick smoke OK ({len(rows)} rows)", file=sys.stderr)
     return 0
 
@@ -111,8 +117,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tier-1 pytest + tiny table1/table2/table3")
     ap.add_argument("--only", default=None,
-                    choices=["table1", "table2", "table3", "table4", "kernel",
-                             "roofline"])
+                    choices=["table1", "table2", "table3", "table4", "table5",
+                             "kernel", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -131,7 +137,7 @@ def main() -> None:
         rows.extend(got)
 
     from . import (kernel_bench, roofline, table1_codecs, table2_seismic,
-                   table3_graph, table4_pipeline)
+                   table3_graph, table4_pipeline, table5_scale)
 
     if args.fast:
         section("table1", lambda: table1_codecs.run(n_docs=1500, n_queries=2, rgb_iters=3))
@@ -139,12 +145,15 @@ def main() -> None:
         section("table3", lambda: table3_graph.run(n_docs=800, n_queries=6))
         section("table4", lambda: table4_pipeline.run(n_docs=800, n_queries=16,
                                                       n_requests=128))
+        section("table5", lambda: table5_scale.run(n_docs_sweep=(2000,),
+                                                   n_queries=16, n_requests=64))
         section("kernel", lambda: kernel_bench.run(n_docs=800))
     else:
         section("table1", lambda: table1_codecs.run())
         section("table2", lambda: table2_seismic.run())
         section("table3", lambda: table3_graph.run())
         section("table4", lambda: table4_pipeline.run())
+        section("table5", lambda: table5_scale.run())
         section("kernel", lambda: kernel_bench.run())
     section("roofline", roofline.run)
 
@@ -156,6 +165,7 @@ def main() -> None:
         mode="fast" if args.fast else "full",
         pipeline_rows=by_section.get("table4", []),
         n_docs=800 if args.fast else 2000,
+        scale_rows=by_section.get("table5", []),
     )
     emit(rows)
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)

@@ -1,0 +1,141 @@
+"""Table 5 — sharded out-of-core serving at scale (EXPERIMENTS.md
+§Scale).
+
+The paper's size argument (forward index dominates; compression buys
+nothing once the corpus outgrows one host) motivates the sharded
+artifact layer (DESIGN.md §9). This table measures what sharding costs
+and what it buys, sweeping corpus size N × shard count S:
+
+* ``scale/<engine>-<codec>/N<n>/S<s>/bucket8`` — amortized bucket-8
+  per-query latency through one warm plan over the sharded (or S=1
+  monolithic) retriever; derived carries ``us_per_q``, ``qps``,
+  ``recall`` (vs. exact brute force) and ``disk_ratio`` (summed shard
+  payload / monolithic).
+* ``scale/residency/N<n>`` — strict out-of-core serving: S=4 with
+  ``max_resident=1``; derived carries ``peak_bytes`` (the LRU-bounded
+  peak device residency), ``mono_bytes`` (what the monolithic build
+  must keep resident) and their ratio.
+
+Two NaN-fail gates ride into ``benchmarks.run --quick`` (the standing
+convention: a NaN ``us`` fails the smoke):
+
+* ``scale/latency-gate/N<n>`` — sharded (S=4, fully resident)
+  bucket-8 amortized µs/q must stay within ``LATENCY_FACTOR``× of the
+  monolithic build at equal N: the fan-out + O(k) merge must not
+  swamp the serving path.
+* ``scale/residency-gate/N<n>`` — peak resident bytes at S=4 /
+  ``max_resident=1`` must drop ≥ ``RESIDENCY_FACTOR``× below the
+  monolithic footprint: the whole point of out-of-core serving.
+
+As everywhere in this harness, absolute µs are CPU-XLA wall clock; the
+reproducible claim is the *shape*: amortized latency roughly flat in S,
+peak residency falling like 1/S.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Row, timeit_us
+
+#: sharded serving may cost per-shard dispatch + merge overhead, but
+#: no more than this factor over the monolithic plan at equal N
+LATENCY_FACTOR = 1.5
+#: out-of-core (S=4, max_resident=1) must cut peak residency ≥ this
+RESIDENCY_FACTOR = 2.0
+
+BUCKET = 8
+SHARD_COUNTS = (1, 4)
+
+
+def _resident_bytes(retriever) -> int:
+    return sum(int(a.nbytes) for a in retriever.arrays.values())
+
+
+def run(n_docs_sweep=(2000, 8000), n_queries: int = 32,
+        n_requests: int = 64, engine: str = "flat",
+        codec: str = "streamvbyte") -> list[Row]:
+    from repro.core.seismic import exact_top_k, recall_at_k
+    from repro.data.synthetic import generate_collection, splade_config
+    from repro.serve.api import Retriever, RetrieverConfig
+
+    rows: list[Row] = []
+    for n_docs in n_docs_sweep:
+        col = generate_collection(splade_config(n_docs, n_queries, seed=0),
+                                  value_format="f16")
+        Q = np.stack([col.query_dense(i) for i in range(n_queries)])
+        exact = [exact_top_k(col.fwd, Q[i], 10)[0] for i in range(n_queries)]
+        cfg = RetrieverConfig(engine=engine, codec=codec, k=10)
+
+        n_disp = max(1, n_requests // BUCKET)
+        batches = [
+            np.asarray(Q[np.arange(i * BUCKET, (i + 1) * BUCKET) % n_queries])
+            for i in range(n_disp)
+        ]
+
+        us_per_q: dict[int, float] = {}
+        mono_bytes = 0
+        mono_disk = 0
+        for S in SHARD_COUNTS:
+            r = Retriever.build(col.fwd, cfg.replace(n_shards=S))
+            if S == 1:
+                mono_bytes = _resident_bytes(r)
+                mono_disk = sum(int(np.asarray(a).nbytes)
+                                for a in r.arrays.values())
+                disk_ratio = 1.0
+            else:
+                disk_ratio = sum(sh.disk_bytes() for sh in r.shards) / mono_disk
+            plan = r.plans.get(BUCKET)
+            plan(batches[0])  # compile + admit every shard before timing
+
+            def stream():
+                for b in batches:
+                    plan(b)[0].block_until_ready()
+
+            us = timeit_us(stream) / n_disp
+            us_per_q[S] = us / BUCKET
+            ids, _ = r.search(Q)
+            recall = float(np.mean([
+                recall_at_k(exact[i], np.asarray(ids[i]))
+                for i in range(n_queries)
+            ]))
+            rows.append(Row(
+                f"scale/{engine}-{codec}/N{n_docs}/S{S}/bucket{BUCKET}",
+                us,
+                f"bucket={BUCKET};us_per_q={us_per_q[S]:.1f};"
+                f"qps={1e6 / us_per_q[S]:.0f};recall={recall:.3f};"
+                f"disk_ratio={disk_ratio:.3f}",
+                codec=codec,
+            ))
+
+        # gate 1: sharded amortized latency within LATENCY_FACTOR×
+        ok = us_per_q[4] <= LATENCY_FACTOR * us_per_q[1]
+        rows.append(Row(
+            f"scale/latency-gate/N{n_docs}",
+            us_per_q[4] if ok else float("nan"),
+            f"mono_us_per_q={us_per_q[1]:.1f};"
+            f"factor={us_per_q[4] / us_per_q[1]:.2f};"
+            f"bound={LATENCY_FACTOR}",
+        ))
+
+        # gate 2: strict out-of-core residency (S=4, one shard at a
+        # time) cuts the peak device footprint
+        r = Retriever.build(col.fwd, cfg.replace(n_shards=4))
+        r.max_resident = 1
+        r.search(Q)
+        peak = r.peak_resident_bytes
+        ratio = mono_bytes / max(peak, 1)
+        rows.append(Row(
+            f"scale/residency/N{n_docs}",
+            us_per_q[4],
+            f"peak_bytes={peak};mono_bytes={mono_bytes};"
+            f"ratio={ratio:.2f};evictions={r.evictions}",
+        ))
+        ok = ratio >= RESIDENCY_FACTOR
+        rows.append(Row(
+            f"scale/residency-gate/N{n_docs}",
+            float(ratio) if ok else float("nan"),
+            f"peak_bytes={peak};mono_bytes={mono_bytes};"
+            f"bound={RESIDENCY_FACTOR}x",
+        ))
+    return rows

@@ -118,6 +118,51 @@ class ForwardIndex:
         for i in range(self.n_docs):
             yield self.doc(i)
 
+    def slice(self, lo: int, hi: int) -> "ForwardIndex":
+        """CSR view of the contiguous doc range ``[lo, hi)``.
+
+        Zero-copy on components/values (numpy slices share the buffer);
+        only the rebased offsets allocate. This is the primitive the
+        sharded artifact builder (DESIGN.md §9) partitions a collection
+        with — per-shard pack offsets come from here, so shard packing
+        never round-trips through per-doc python lists."""
+        if not 0 <= lo <= hi <= self.n_docs:
+            raise ValueError(
+                f"doc range [{lo}, {hi}) outside collection [0, {self.n_docs})"
+            )
+        s, e = int(self.offsets[lo]), int(self.offsets[hi])
+        return ForwardIndex(
+            components=self.components[s:e],
+            values=self.values[s:e],
+            offsets=(self.offsets[lo : hi + 1] - s).astype(np.int64),
+            dim=self.dim,
+            value_format=self.value_format,
+        )
+
+    def padded(self, n_docs: int) -> "ForwardIndex":
+        """This index extended with empty documents up to ``n_docs``
+        rows (zero-copy on components/values) — the shard builders pad
+        ragged ranges to a common local size this way; empty rows score
+        0 and are sentinel-mapped out of every merge."""
+        if n_docs < self.n_docs:
+            raise ValueError(
+                f"cannot pad {self.n_docs} docs down to {n_docs}"
+            )
+        if n_docs == self.n_docs:
+            return self
+        return ForwardIndex(
+            components=self.components,
+            values=self.values,
+            offsets=np.concatenate(
+                [
+                    self.offsets,
+                    np.full(n_docs - self.n_docs, self.offsets[-1], np.int64),
+                ]
+            ),
+            dim=self.dim,
+            value_format=self.value_format,
+        )
+
     def densify(self, i: int) -> np.ndarray:
         c, v = self.doc(i)
         out = np.zeros(self.dim, dtype=np.float32)

@@ -453,9 +453,21 @@ def _row_gap_matrix(fwd: ForwardIndex, l_max: int):
 
 
 def pack_rows(
-    fwd: ForwardIndex, codec: str = "uncompressed", l_max: int | None = None
+    fwd: ForwardIndex,
+    codec: str = "uncompressed",
+    l_max: int | None = None,
+    doc_range: tuple[int, int] | None = None,
 ) -> PackedRows:
-    """Build the per-document row layout under any registered codec."""
+    """Build the per-document row layout under any registered codec.
+
+    ``doc_range=(lo, hi)`` packs only that contiguous doc slice with
+    shard-LOCAL row ids (row 0 = doc ``lo``) — the per-shard pack-offset
+    path of the sharded artifact layer (DESIGN.md §9). Doc-row gaps are
+    per-document (the first gap is the absolute component), so a row
+    packed from a slice is byte-identical to the same doc's row in a
+    whole-collection pack at equal row capacity."""
+    if doc_range is not None:
+        fwd = fwd.slice(*doc_range)
     lc = get_layout(codec)
     nnz_max = int(np.diff(fwd.offsets).max(initial=1))
     cap = max(l_max or 0, nnz_max, 1)

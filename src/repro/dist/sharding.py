@@ -32,6 +32,7 @@ __all__ = [
     "data_axes",
     "to_shardings",
     "replicate",
+    "index_mesh",
     "lm_param_specs",
     "kv_cache_spec",
     "gnn_batch_spec",
@@ -43,6 +44,26 @@ __all__ = [
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
     """The data-parallel axes present on this mesh (pod-major)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def index_mesh(n_shards: int, devices=None) -> Mesh | None:
+    """The serving mesh for shard-parallel search (DESIGN.md §9): one
+    device per index shard on the ``model`` axis (``data`` is a
+    size-1 placeholder so the standard 2-D specs apply), matching the
+    ``make_sharded_search`` driver's ``index_axis="model"``.
+
+    Returns ``None`` when the host has fewer than ``n_shards`` devices
+    — the caller (``ShardedRetriever``) then falls back to the
+    sequential out-of-core round-robin instead of a mesh."""
+    import numpy as np
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if n_shards < 1 or len(devices) < n_shards:
+        return None
+    return Mesh(
+        np.asarray(devices[:n_shards]).reshape(1, n_shards),
+        ("data", "model"),
+    )
 
 
 def to_shardings(mesh: Mesh, specs):

@@ -130,6 +130,16 @@ def main() -> None:
                     help="save each built index artifact under DIR/<engine>-<codec>/")
     ap.add_argument("--load-index", metavar="DIR", default=None,
                     help="serve from artifacts under DIR instead of building")
+    ap.add_argument("--n-shards", type=int, default=1,
+                    help="index shards (DESIGN.md §9): > 1 builds/serves "
+                         "a sharded artifact tree — per-shard sub-indexes "
+                         "over contiguous doc ranges, memory-mapped on "
+                         "--load-index, searched over a device mesh when "
+                         "devices ≥ shards else via the out-of-core "
+                         "resident-shard LRU")
+    ap.add_argument("--max-resident", type=int, default=None,
+                    help="bound on simultaneously-resident shards "
+                         "(sequential sharded path; default: all)")
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--n-queries", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -172,8 +182,9 @@ def main() -> None:
     }
 
     # host indexes build once per engine; codecs sweep over them
+    # (a sharded build constructs per-range sub-indexes instead)
     host_indexes: dict[str, object] = {}
-    if not args.load_index:
+    if not args.load_index and args.n_shards == 1:
         from repro.serve.api import get_engine
 
         for name in engines:
@@ -194,15 +205,22 @@ def main() -> None:
         for codec in codecs:
             cfg = RetrieverConfig(engine=name, codec=codec, k=args.k,
                                   backend=args.backend or "jnp",
+                                  n_shards=args.n_shards,
                                   params=search_params.get(name, {}))
             backend_overridden = False
             if args.load_index:
                 art = pathlib.Path(args.load_index) / f"{name}-{codec}"
                 retriever = open_retriever(art)
+                if args.max_resident is not None and hasattr(
+                    retriever, "max_resident"
+                ):
+                    retriever.max_resident = args.max_resident
                 # the backend is a serving choice, not an index format
                 # (DESIGN.md §7): an explicit --backend re-wraps the
-                # loaded arrays under the requested path
-                if args.backend and args.backend != retriever.cfg.backend:
+                # loaded arrays under the requested path (monolithic
+                # artifacts; a sharded tree serves its saved backend)
+                if (args.backend and args.backend != retriever.cfg.backend
+                        and not hasattr(retriever, "shards")):
                     backend_overridden = True
                     retriever = Retriever(
                         retriever.cfg.replace(backend=args.backend),
@@ -216,6 +234,10 @@ def main() -> None:
                 retriever = Retriever.from_host_index(host_indexes[name], cfg)
             else:
                 retriever = Retriever.build(col.fwd, cfg)
+                if args.max_resident is not None and hasattr(
+                    retriever, "max_resident"
+                ):
+                    retriever.max_resident = args.max_resident
             if args.pipeline:
                 rng = np.random.default_rng(args.seed + 1)
                 summary = _pipeline_loadgen(retriever, Q, args, rng)

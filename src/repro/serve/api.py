@@ -71,6 +71,8 @@ __all__ = [
     "MANIFEST_VERSION",
     "build_shard_arrays",
     "make_sharded_search",
+    "map_local_ids",
+    "merge_topk",
     "row_array_specs",
 ]
 
@@ -78,6 +80,8 @@ __all__ = [
 #: mismatching artifact fails loudly rather than mis-decoding arrays
 MANIFEST_VERSION = 1
 _MANIFEST_FORMAT = "repro.serve.retriever"
+#: top-level manifest magic of a sharded artifact tree (DESIGN.md §9)
+_SHARDED_FORMAT = "repro.serve.retriever-sharded"
 _MANIFEST_FILE = "manifest.json"
 _ARRAYS_FILE = "arrays.npz"
 
@@ -188,6 +192,17 @@ class EngineImpl:
         feeds ``layout.pad_stack``."""
         raise NotImplementedError
 
+    def build_shard(
+        self, fwd: ForwardIndex, cfg: RetrieverConfig, lo: int, hi: int
+    ) -> Dict[str, np.ndarray]:
+        """Arrays of ONE self-contained shard over docs ``[lo, hi)``
+        with shard-LOCAL ids — the unit the sharded artifact layer
+        (DESIGN.md §9) writes per shard directory. The default builds
+        the engine's normal arrays over the CSR slice; engines with a
+        cheaper range path override (``FlatEngine`` packs rows straight
+        from the per-shard pack offsets, no sub-index build)."""
+        return self.build_arrays(fwd.slice(lo, hi), cfg)
+
 
 _ENGINES: Dict[str, Callable[[], EngineImpl]] = {}
 
@@ -274,6 +289,7 @@ class Retriever:
         dim: int,
         value_scale: float,
         value_format: str,
+        shard: str = "",
     ):
         self.impl = get_engine(cfg.engine)
         layout.get_layout(cfg.codec)  # raises listing the known codecs
@@ -297,17 +313,37 @@ class Retriever:
         self.dim = int(dim)
         self.value_scale = float(value_scale)
         self.value_format = value_format
+        #: shard-topology component of the plan key (DESIGN.md §9):
+        #: "" for a monolithic index, "<shard>/<n_shards>" inside a
+        #: ShardedRetriever — per-shard executables never collide
+        self.shard = shard
         self.arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
         # the compile layer (DESIGN.md §8): one executable per
-        # (engine, codec, backend, k, bucket); cfg.batch_size joins the
-        # bucket set so the expected batch shape gets an exact fit
+        # (engine, codec, backend, k, bucket, shard); cfg.batch_size
+        # joins the bucket set so the expected batch shape gets an
+        # exact fit
         self.plans = serve_pipeline.PlanCache(self)
         self._pipeline: serve_pipeline.Pipeline | None = None
 
+    def make_plans(self, buckets) -> "serve_pipeline.PlanCache":
+        """A fresh plan cache with an explicit bucket set (the pipeline
+        asks the retriever so sharded handles can answer too)."""
+        return serve_pipeline.PlanCache(self, buckets)
+
     # -- construction ---------------------------------------------------
     @classmethod
-    def build(cls, fwd: ForwardIndex, cfg: RetrieverConfig) -> "Retriever":
-        """Host-side index construction: collection → servable arrays."""
+    def build(cls, fwd: ForwardIndex, cfg: RetrieverConfig):
+        """Host-side index construction: collection → servable arrays.
+
+        With ``cfg.n_shards > 1`` the build routes to the sharded
+        artifact layer (DESIGN.md §9): per-shard self-contained
+        sub-indexes over contiguous doc ranges, returned as a
+        ``ShardedRetriever`` whose ``save``/``open_retriever`` artifact
+        tree is one directory per shard."""
+        if cfg.n_shards > 1:
+            from .sharded import ShardedRetriever
+
+            return ShardedRetriever.build(fwd, cfg)
         impl = get_engine(cfg.engine)
         layout.get_layout(cfg.codec)
         return cls(
@@ -387,64 +423,103 @@ class Retriever:
         return self.pipeline().search_batch(Q)
 
     # -- artifact lifecycle ----------------------------------------------
-    def save(self, path) -> pathlib.Path:
+    def save(self, path, *, compress: bool = True) -> pathlib.Path:
         """Write the index artifact: ``manifest.json`` + ``arrays.npz``.
 
         The npz payload holds the packed codec arrays exactly as served,
-        so ``open_retriever`` performs zero re-encoding."""
-        path = pathlib.Path(path)
-        path.mkdir(parents=True, exist_ok=True)
+        so ``open_retriever`` performs zero re-encoding.
+        ``compress=False`` stores npz members raw (ZIP_STORED) — the
+        form the sharded artifact layer memory-maps (DESIGN.md §9)."""
         host = {k: np.asarray(v) for k, v in self.arrays.items()}
-        manifest = {
-            "format": _MANIFEST_FORMAT,
-            "version": MANIFEST_VERSION,
-            "engine": self.cfg.engine,
-            "codec": self.cfg.codec,
-            "backend": self.cfg.backend,
-            "k": self.cfg.k,
-            "batch_size": self.cfg.batch_size,
-            "n_shards": self.cfg.n_shards,
-            "params": dict(self.cfg.params),
-            "n_docs": self.n_docs,
-            "dim": self.dim,
-            "value_scale": self.value_scale,
-            "value_format": self.value_format,
-            "arrays": {
-                k: {"dtype": str(v.dtype), "shape": list(v.shape)}
-                for k, v in host.items()
-            },
-        }
-        with open(path / _MANIFEST_FILE, "w", encoding="utf-8") as f:
-            json.dump(manifest, f, indent=1, sort_keys=True)
-        np.savez_compressed(path / _ARRAYS_FILE, **host)
-        return path
+        return write_artifact(
+            path, manifest_dict(self.cfg, host, n_docs=self.n_docs,
+                                dim=self.dim, value_scale=self.value_scale,
+                                value_format=self.value_format),
+            host, compress=compress,
+        )
 
 
-def open_retriever(path) -> Retriever:
-    """Load a saved index artifact into a servable ``Retriever``.
+def manifest_dict(
+    cfg: RetrieverConfig,
+    host_arrays: Mapping[str, np.ndarray],
+    *,
+    n_docs: int,
+    dim: int,
+    value_scale: float,
+    value_format: str,
+    extra: Mapping[str, Any] | None = None,
+) -> dict:
+    """The monolithic-artifact manifest payload (serving config, corpus
+    stats, per-array dtype/shape specs). ``extra`` merges in shard
+    bookkeeping (``shard``, ``doc_lo``/``doc_hi``) for per-shard
+    directories of a sharded tree (DESIGN.md §9)."""
+    manifest = {
+        "format": _MANIFEST_FORMAT,
+        "version": MANIFEST_VERSION,
+        "engine": cfg.engine,
+        "codec": cfg.codec,
+        "backend": cfg.backend,
+        "k": cfg.k,
+        "batch_size": cfg.batch_size,
+        "n_shards": cfg.n_shards,
+        "params": dict(cfg.params),
+        "n_docs": int(n_docs),
+        "dim": int(dim),
+        "value_scale": float(value_scale),
+        "value_format": value_format,
+        "arrays": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+            for k, v in host_arrays.items()
+        },
+    }
+    if extra:
+        manifest.update(extra)
+    return manifest
 
-    Validates the manifest (format magic, version, engine/codec names,
-    per-array dtype/shape) before touching the payload — an
-    incompatible or tampered artifact raises ``ArtifactError`` instead
-    of mis-decoding."""
+
+def write_artifact(
+    path,
+    manifest: Mapping[str, Any],
+    host_arrays: Mapping[str, np.ndarray],
+    *,
+    compress: bool = True,
+) -> pathlib.Path:
+    """Write one artifact directory: ``manifest.json`` + ``arrays.npz``.
+
+    ``compress=False`` writes the npz members ZIP_STORED (raw npy bytes
+    at a fixed offset inside the zip) — the property ``mmap_npz`` in
+    ``repro.serve.sharded`` relies on to memory-map members in place."""
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    with open(path / _MANIFEST_FILE, "w", encoding="utf-8") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    saver = np.savez_compressed if compress else np.savez
+    saver(path / _ARRAYS_FILE, **dict(host_arrays))
+    return path
+
+
+def load_manifest(path) -> dict:
+    """Read + parse ``manifest.json`` under ``path`` (ArtifactError on
+    a missing or unparseable file); no semantic validation."""
     path = pathlib.Path(path)
     mf = path / _MANIFEST_FILE
     if not mf.is_file():
         raise ArtifactError(f"no {_MANIFEST_FILE} under {path}")
     try:
-        manifest = json.loads(mf.read_text(encoding="utf-8"))
+        return json.loads(mf.read_text(encoding="utf-8"))
     except json.JSONDecodeError as e:
         raise ArtifactError(f"corrupt manifest at {mf}: {e}") from None
-    if manifest.get("format") != _MANIFEST_FORMAT:
-        raise ArtifactError(
-            f"{mf} is not a {_MANIFEST_FORMAT} artifact "
-            f"(format={manifest.get('format')!r})"
-        )
+
+
+def check_manifest_names(manifest: Mapping[str, Any], where) -> None:
+    """Version / engine / codec / value-format validation shared by the
+    monolithic and sharded openers. ``where`` names the offending file
+    in the error."""
     version = manifest.get("version")
     if version != MANIFEST_VERSION:
         raise ArtifactError(
-            f"artifact version {version!r} incompatible with this build "
-            f"(expected {MANIFEST_VERSION}); rebuild the index"
+            f"artifact version {version!r} at {where} incompatible with "
+            f"this build (expected {MANIFEST_VERSION}); rebuild the index"
         )
     engine, codec = manifest["engine"], manifest["codec"]
     if engine not in available_engines():
@@ -462,32 +537,69 @@ def open_retriever(path) -> Retriever:
             f"unknown value_format {manifest['value_format']!r}; have "
             f"{sorted(VALUE_FORMATS)}"
         )
-    with np.load(path / _ARRAYS_FILE) as npz:
-        arrays = {k: npz[k] for k in npz.files}
-    spec = manifest["arrays"]
+
+
+def check_array_spec(
+    spec: Mapping[str, Any], arrays: Mapping[str, np.ndarray], where
+) -> None:
+    """Manifest array specs vs the actual npz payload — names, dtypes
+    and shapes must all agree or the artifact is rejected."""
     if set(spec) != set(arrays):
         raise ArtifactError(
-            f"array payload mismatch: manifest lists {sorted(spec)}, "
-            f"npz holds {sorted(arrays)}"
+            f"array payload mismatch at {where}: manifest lists "
+            f"{sorted(spec)}, npz holds {sorted(arrays)}"
         )
     for k, meta in spec.items():
         got = arrays[k]
         if str(got.dtype) != meta["dtype"] or list(got.shape) != meta["shape"]:
             raise ArtifactError(
-                f"array {k!r} is {got.dtype}{list(got.shape)}, manifest "
-                f"says {meta['dtype']}{meta['shape']}"
+                f"array {k!r} at {where} is {got.dtype}{list(got.shape)}, "
+                f"manifest says {meta['dtype']}{meta['shape']}"
             )
-    cfg = RetrieverConfig(
-        engine=engine,
-        codec=codec,
+
+
+def cfg_from_manifest(manifest: Mapping[str, Any]) -> RetrieverConfig:
+    return RetrieverConfig(
+        engine=manifest["engine"],
+        codec=manifest["codec"],
         backend=manifest.get("backend", "jnp"),  # pre-backend artifacts
         k=int(manifest["k"]),
         batch_size=manifest.get("batch_size"),  # pre-pipeline artifacts
         n_shards=int(manifest.get("n_shards", 1)),
         params=manifest.get("params", {}),
     )
+
+
+def open_retriever(path):
+    """Load a saved index artifact into a servable handle.
+
+    Validates the manifest (format magic, version, engine/codec names,
+    per-array dtype/shape) before touching the payload — an
+    incompatible or tampered artifact raises ``ArtifactError`` instead
+    of mis-decoding. A top-level *sharded* manifest
+    (``format="repro.serve.retriever-sharded"``, written by
+    ``Retriever.build(..., n_shards=S)``) dispatches to
+    ``ShardedRetriever.open``, which memory-maps every shard's arrays —
+    O(metadata) open regardless of corpus size (DESIGN.md §9)."""
+    path = pathlib.Path(path)
+    manifest = load_manifest(path)
+    fmt = manifest.get("format")
+    if fmt == _SHARDED_FORMAT:
+        from .sharded import ShardedRetriever
+
+        return ShardedRetriever.open(path, manifest)
+    if fmt != _MANIFEST_FORMAT:
+        raise ArtifactError(
+            f"{path / _MANIFEST_FILE} is not a {_MANIFEST_FORMAT} artifact "
+            f"(format={fmt!r})"
+        )
+    check_manifest_names(manifest, path / _MANIFEST_FILE)
+    with np.load(path / _ARRAYS_FILE) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    check_array_spec(manifest["arrays"], arrays, path / _ARRAYS_FILE)
+    cfg = cfg_from_manifest(manifest)
     return Retriever(
-        cfg,
+        cfg.replace(n_shards=1),  # one directory == one sub-index
         arrays,
         n_docs=manifest["n_docs"],
         dim=manifest["dim"],
@@ -533,6 +645,50 @@ def build_shard_arrays(
     return stacked, jnp.asarray(np.stack(idmaps)), n_docs_local
 
 
+def map_local_ids(idmap, ids, n_docs_global: int):
+    """Shard-local candidate ids → global doc ids, sentinel-safe.
+
+    ``idmap`` is i32 [n_docs_local + 1]: slot ``i < n_docs_local`` holds
+    the global id of local doc ``i``, the last slot holds the
+    out-of-corpus sentinel ``n_docs_global``. A bare ``jnp.take``
+    CLIPS out-of-range indices (jax's default gather mode), so a -1
+    padding id or a local id ≥ the shard's true size would silently
+    alias doc 0 / the last doc — the global-id bug class the sharded
+    regression suite pins down. Every local id outside
+    ``[0, n_docs_local]`` maps to ``n_docs_global`` instead, which
+    ``merge_topk`` masks to -inf."""
+    n_local = idmap.shape[-1] - 1
+    valid = (ids >= 0) & (ids <= n_local)
+    mapped = jnp.take(idmap, jnp.clip(ids, 0, n_local))
+    return jnp.where(valid, mapped, jnp.int32(n_docs_global))
+
+
+def merge_topk(flat_ids, flat_scores, k: int, *, dedupe: bool, n_docs_global: int):
+    """[nq, S·k] gathered per-shard candidates → global (ids, scores).
+
+    The merge contract (DESIGN.md §9): every out-of-corpus id — negative
+    padding sentinels *and* ids ≥ n_docs_global — is masked to -inf so it
+    can never displace a real document; with ``dedupe`` (engines whose
+    shards may report the same doc, e.g. Seismic block round-robin) the
+    candidates are sorted by id and repeats masked before the final
+    ``top_k``. ``jax.lax.top_k`` breaks score ties toward the lower
+    index, so without dedupe the merge is byte-stable in shard order."""
+    nq = flat_scores.shape[0]
+    invalid = (flat_ids < 0) | (flat_ids >= n_docs_global)
+    flat_scores = jnp.where(invalid, -jnp.inf, flat_scores)
+    if dedupe:
+        order = jnp.argsort(flat_ids, axis=1)
+        si = jnp.take_along_axis(flat_ids, order, axis=1)
+        ss = jnp.take_along_axis(flat_scores, order, axis=1)
+        dup = jnp.concatenate(
+            [jnp.zeros((nq, 1), bool), si[:, 1:] == si[:, :-1]], axis=1
+        )
+        flat_ids = si
+        flat_scores = jnp.where(dup, -jnp.inf, ss)
+    top_s, pos = jax.lax.top_k(flat_scores, k)
+    return jnp.take_along_axis(flat_ids, pos, axis=1), top_s
+
+
 def make_sharded_search(
     mesh,
     cfg: RetrieverConfig,
@@ -542,6 +698,7 @@ def make_sharded_search(
     *,
     index_axis: str = "model",
     query_axes: tuple[str, ...] = ("data",),
+    k_local: int | None = None,
 ):
     """ONE distributed search driver for every registered engine.
 
@@ -554,38 +711,41 @@ def make_sharded_search(
     produces the global result — deduping by doc id first iff the
     engine declares ``dedupe_merge`` (a Seismic document's blocks
     scatter across shards; graph/flat doc ranges are disjoint).
-    Collective bytes per query: 8·k·n_shards."""
+    Collective bytes per query: 8·k·n_shards.
+
+    ``k_local`` caps the per-shard candidate count below the merge's
+    ``cfg.k`` — shards smaller than k serve their whole doc range and
+    engines whose score vector is shard-sized (flat) cannot top-k past
+    it; the merge sentinel-pads back up to ``cfg.k`` when needed."""
     from jax.sharding import PartitionSpec as P
 
     impl = get_engine(cfg.engine)
+    local_cfg = (
+        cfg if k_local is None or k_local == cfg.k else cfg.replace(k=k_local)
+    )
 
     def local(arrays, idmap, Q):
         arrays = jax.tree.map(lambda a: a[0], arrays)  # drop shard dim
         idmap = idmap[0]
         ids, scores = jax.vmap(
-            partial(impl.search_one, cfg, n_docs_local, value_scale, arrays)
+            partial(impl.search_one, local_cfg, n_docs_local, value_scale, arrays)
         )(Q)
-        gids = jnp.take(idmap, ids)  # [nq_local, k] global ids
+        gids = map_local_ids(idmap, ids, n_docs_global)  # sentinel-safe
         ag_s = jax.lax.all_gather(scores, index_axis)  # [S, nq, k]
         ag_i = jax.lax.all_gather(gids, index_axis)
         S, nq, k = ag_s.shape
         flat_s = ag_s.transpose(1, 0, 2).reshape(nq, S * k)
         flat_i = ag_i.transpose(1, 0, 2).reshape(nq, S * k)
-        if impl.dedupe_merge:
-            # the same doc can be reported by several shards; dedupe by
-            # id (sort, mask repeats) before the final top-k
-            order = jnp.argsort(flat_i, axis=1)
-            si = jnp.take_along_axis(flat_i, order, axis=1)
-            ss = jnp.take_along_axis(flat_s, order, axis=1)
-            dup = jnp.concatenate(
-                [jnp.zeros((nq, 1), bool), si[:, 1:] == si[:, :-1]], axis=1
-            )
-            flat_i = si
-            flat_s = jnp.where(dup | (si >= n_docs_global), -jnp.inf, ss)
-        else:
-            flat_s = jnp.where(flat_i >= n_docs_global, -jnp.inf, flat_s)
-        top_s, pos = jax.lax.top_k(flat_s, cfg.k)
-        return jnp.take_along_axis(flat_i, pos, axis=1), top_s
+        if S * k < cfg.k:  # k > corpus: sentinel-pad the merge width
+            pad = cfg.k - S * k
+            flat_i = jnp.pad(flat_i, ((0, 0), (0, pad)),
+                             constant_values=n_docs_global)
+            flat_s = jnp.pad(flat_s, ((0, 0), (0, pad)),
+                             constant_values=-jnp.inf)
+        return merge_topk(
+            flat_i, flat_s, cfg.k,
+            dedupe=impl.dedupe_merge, n_docs_global=n_docs_global,
+        )
 
     qa = query_axes or None
     return jax.shard_map(

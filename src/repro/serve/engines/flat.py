@@ -79,6 +79,14 @@ class FlatEngine(EngineImpl):
         )
 
     # -- sharded build --------------------------------------------------
+    def build_shard(self, fwd: ForwardIndex, cfg: RetrieverConfig, lo: int, hi: int):
+        """One artifact shard (DESIGN.md §9): rows packed straight from
+        the per-shard pack offsets (``pack_rows`` over the CSR slice,
+        shard-local row ids) — no sub-index structure to rebuild, and
+        row bytes identical to the same docs' rows in a monolithic
+        pack at equal row capacity."""
+        return layout.pack_rows(fwd, codec=cfg.codec, doc_range=(lo, hi)).arrays()
+
     def shard_build(self, fwd: ForwardIndex, cfg: RetrieverConfig, n_shards: int):
         """Contiguous doc ranges, rows padded to a common local size."""
         import numpy as np
@@ -88,15 +96,9 @@ class FlatEngine(EngineImpl):
         dicts, idmaps = [], []
         for s in range(n_shards):
             lo, hi = s * docs_local, min((s + 1) * docs_local, n)
-            sub_docs = [fwd.doc(d) for d in range(lo, hi)]
-            n_real = len(sub_docs)
-            while len(sub_docs) < docs_local:
-                sub_docs.append((np.zeros(0, np.uint32), np.zeros(0, np.float32)))
-            padded = ForwardIndex.from_docs(
-                sub_docs, fwd.dim, value_format=fwd.value_format.name
-            )
-            dicts.append(layout.pack_rows(padded, codec=cfg.codec).arrays())
+            sub = fwd.slice(lo, hi).padded(docs_local)
+            dicts.append(layout.pack_rows(sub, codec=cfg.codec).arrays())
             idmap = np.full(docs_local + 1, n, dtype=np.int32)
-            idmap[:n_real] = np.arange(lo, hi, dtype=np.int32)
+            idmap[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
             idmaps.append(idmap)
         return dicts, idmaps, docs_local, {}

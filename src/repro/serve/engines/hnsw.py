@@ -172,11 +172,8 @@ class HNSWEngine(EngineImpl):
         dicts, idmaps = [], []
         for s in range(n_shards):
             lo, hi = s * docs_local, min((s + 1) * docs_local, n)
-            sub_docs = [fwd.doc(d) for d in range(lo, hi)]
-            n_real = len(sub_docs)
-            sub = ForwardIndex.from_docs(
-                sub_docs, fwd.dim, value_format=fwd.value_format.name
-            )
+            sub = fwd.slice(lo, hi)
+            n_real = sub.n_docs
             index = HNSWIndex.build(sub, hp)
             # embed the sub-graph into the padded local id space: rows
             # past n_real stay all-sentinel, unreachable by search
@@ -185,11 +182,7 @@ class HNSWEngine(EngineImpl):
             )
             adj[:n_real] = index.adjacency(0, sentinel=docs_local)[:n_real]
             # tail padding: empty docs, so row arrays reach docs_local+1
-            while len(sub_docs) < docs_local:
-                sub_docs.append((np.zeros(0, np.uint32), np.zeros(0, np.float32)))
-            padded = ForwardIndex.from_docs(
-                sub_docs, fwd.dim, value_format=fwd.value_format.name
-            )
+            padded = sub.padded(docs_local)
             dicts.append(
                 {
                     "adj": adj,

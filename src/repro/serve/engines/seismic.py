@@ -86,13 +86,18 @@ class SeismicEngine(EngineImpl):
         ranges, padded summaries, block→doc lists, plus the shared
         packed row form for phase-2 rescoring."""
         fwd = index.fwd
-        n_docs, n_blocks = fwd.n_docs, index.n_blocks
+        n_docs, real_blocks = fwd.n_docs, index.n_blocks
+        # an all-empty doc range (a sharded-build corner) yields ZERO
+        # blocks, which would zero-size the static search arrays on
+        # axis 0; pad to one sentinel block — empty summary, no real
+        # docs — that phase 1 can harmlessly gather
+        n_blocks = max(real_blocks, 1)
 
         s_len = np.diff(index.summary_indptr)
         s_max = int(max(s_len.max(initial=1), 1))
         sum_comps = np.zeros((n_blocks, s_max), dtype=np.int32)
         sum_vals = np.zeros((n_blocks, s_max), dtype=np.float32)
-        for b in range(n_blocks):
+        for b in range(real_blocks):
             s, e = int(index.summary_indptr[b]), int(index.summary_indptr[b + 1])
             sum_comps[b, : e - s] = index.summary_comps[s:e]
             sum_vals[b, : e - s] = (
@@ -102,7 +107,7 @@ class SeismicEngine(EngineImpl):
         b_len = np.diff(index.block_doc_indptr)
         bs_max = int(max(b_len.max(initial=1), 1))
         block_docs = np.full((n_blocks, bs_max), n_docs, dtype=np.int32)
-        for b in range(n_blocks):
+        for b in range(real_blocks):
             s, e = int(index.block_doc_indptr[b]), int(index.block_doc_indptr[b + 1])
             block_docs[b, : e - s] = index.block_docs[s:e]
 

@@ -133,7 +133,13 @@ class PlanKey:
     (``repro.kernels.modes.MODES``) the backend string maps to — the
     auto ``backend="pallas"`` resolves to ``"pallas_compiled"`` here, so
     plan identity tracks what actually compiles, not how it was asked
-    for."""
+    for.
+
+    ``shard`` is the shard-topology component (DESIGN.md §9): ``""``
+    for a monolithic index, ``"<shard>/<n_shards>"`` for a per-shard
+    sub-retriever inside a ``ShardedRetriever`` — shards of one tree
+    (whose array shapes may differ, e.g. the ragged last shard) never
+    collide on a plan key."""
 
     engine: str
     codec: str
@@ -141,6 +147,7 @@ class PlanKey:
     mode: str
     k: int
     bucket: int
+    shard: str = ""
 
 
 class SearchPlan:
@@ -191,7 +198,8 @@ class PlanCache:
         self.k = cfg.k
         mode = resolve_mode(backend_mode(cfg.backend))
         self._key = partial(
-            PlanKey, cfg.engine, cfg.codec, cfg.backend, mode, cfg.k
+            PlanKey, cfg.engine, cfg.codec, cfg.backend, mode, cfg.k,
+            shard=getattr(retriever, "shard", ""),
         )
         self._dispatch = jax.jit(
             partial(
@@ -449,9 +457,13 @@ class Pipeline:
         if deadline_us < 0:
             raise ValueError(f"deadline_us must be ≥ 0, got {deadline_us}")
         self.retriever = retriever
+        # ask the retriever for its plan surface rather than building a
+        # PlanCache directly: a ShardedRetriever answers with its
+        # shard-fanning facade (same bucket_for/get/search/compiles
+        # contract), so the scheduler works unmodified over shards
         self.plans = (
             retriever.plans if buckets is None
-            else PlanCache(retriever, buckets)
+            else retriever.make_plans(buckets)
         )
         self.deadline_us = float(deadline_us)
         self.cache = ResultCache(cache_size)
@@ -459,10 +471,9 @@ class Pipeline:
             # match the cache tolerance to the index's own value
             # quantization: f16 keys for f16-valued rows, exact (f32)
             # keys for everything else — see quantized_query_key
-            vals = retriever.arrays.get("vals_rows")
             key_dtype = (
                 np.float16
-                if vals is not None and vals.dtype == jnp.float16
+                if getattr(retriever, "value_format", None) == "f16"
                 else np.float32
             )
         self.key_dtype = key_dtype  # result-cache tolerance knob

@@ -1,0 +1,510 @@
+"""Sharded artifact & out-of-core serving tests (DESIGN.md §9).
+
+The ISSUE-7 acceptance suite, four layers deep:
+
+* **scale-sweep parity** — for every engine × codec × n_shards ∈
+  {1, 2, 4, 7}, the sharded retriever's top-k is BYTE-identical (ids
+  and scores) to the unsharded oracle under exhaustive engine budgets;
+  n_shards=7 over 50 docs exercises the ragged last shard, and a
+  dedicated sweep drives shards all the way down to one document each.
+* **artifact properties** — ``shard_ranges`` tiles ``[0, n_docs)``
+  contiguously with balanced sizes and rejects empty shards
+  (property-tested via ``proptest``); ``save`` → ``open_retriever``
+  memory-maps every shard payload (``np.memmap``, O(metadata) open)
+  and still answers byte-identically.
+* **fault injection** — truncated shard npz, shard-count mismatch,
+  overlapping/gapped doc ranges, engine skew and manifest version skew
+  all raise ``ArtifactError`` with an actionable message instead of a
+  silent wrong answer.
+* **global-id regression** — shard-local ids ≥ the shard size and -1
+  padding sentinels survive ``map_local_ids`` + ``merge_topk`` without
+  aliasing real documents, for both ``dedupe_merge`` settings (the
+  clip-gather bug class), plus a randomized merge-vs-numpy property.
+
+The mesh path (shard_map over ≥ n_shards forced host devices) runs in
+a subprocess, following the ``test_dist`` idiom, so the main process
+keeps seeing one device.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import integers, run_property
+from repro.core.layout import available_layouts
+from repro.data.synthetic import SyntheticConfig, generate_collection
+from repro.serve.api import (
+    MANIFEST_VERSION,
+    ArtifactError,
+    Retriever,
+    RetrieverConfig,
+    map_local_ids,
+    merge_topk,
+    open_retriever,
+)
+from repro.serve.sharded import ShardedRetriever, mmap_npz, shard_ranges
+
+SHARD_COUNTS = [1, 2, 4, 7]
+
+#: budgets EXHAUSTIVE for the 50-doc collection: every query component
+#: probed, every block scored, the whole graph walkable — so sharded
+#: and unsharded searches see identical candidate sets and the top-k
+#: must match byte-for-byte, not just in recall.
+ENGINE_PARAMS = {
+    "seismic": dict(cut=16, block_budget=512, n_probe=512, n_postings=10000,
+                    block_size=8),
+    "hnsw": dict(beam=56, iters=56, n_seeds=4, m=8, ef_construction=48),
+    "flat": {},
+}
+
+
+def _cfg(engine, codec="uncompressed", n_shards=1, k=10):
+    return RetrieverConfig(engine=engine, codec=codec, k=k, n_shards=n_shards,
+                           params=ENGINE_PARAMS[engine])
+
+
+@pytest.fixture(scope="module")
+def collection():
+    cfg = SyntheticConfig(
+        name="shard-test", dim=256, n_docs=50, n_queries=4,
+        doc_nnz_mean=24.0, query_nnz_mean=8.0, seed=7,
+    )
+    return generate_collection(cfg, value_format="f16")
+
+
+@pytest.fixture(scope="module")
+def queries(collection):
+    return np.stack(
+        [collection.query_dense(i) for i in range(collection.n_queries)]
+    )
+
+
+@pytest.fixture(scope="module")
+def oracle_cache():
+    """(engine, codec) → unsharded top-k, built lazily once per module."""
+    return {}
+
+
+def _oracle(collection, queries, cache, engine, codec):
+    key = (engine, codec)
+    if key not in cache:
+        r = Retriever.build(collection.fwd, _cfg(engine, codec, n_shards=1))
+        ids, scores = r.search(queries)
+        cache[key] = (np.asarray(ids), np.asarray(scores))
+    return cache[key]
+
+
+# ---------------------------------------------------------------------------
+# shard_ranges: the partition contract (property-tested)
+# ---------------------------------------------------------------------------
+
+def test_shard_ranges_properties():
+    """Ranges tile [0, n) contiguously, sizes balanced within one doc,
+    the ragged shard (if any) is the LAST one; infeasible splits raise."""
+
+    def prop(n_docs, n_shards):
+        if n_shards > n_docs:
+            with pytest.raises(ValueError):
+                shard_ranges(n_docs, n_shards)
+            return
+        ranges = shard_ranges(n_docs, n_shards)
+        assert len(ranges) == n_shards
+        assert ranges[0][0] == 0 and ranges[-1][1] == n_docs
+        sizes = [hi - lo for lo, hi in ranges]
+        assert all(s >= 1 for s in sizes)
+        assert max(sizes) - min(sizes) <= 1
+        assert sizes == sorted(sizes, reverse=True)  # ragged shard is last
+        for (_, hi), (lo, _) in zip(ranges, ranges[1:]):
+            assert hi == lo  # contiguous, no gaps/overlaps
+
+    run_property(prop, integers(1, 200), integers(1, 40), seed=11)
+
+
+def test_empty_shards_rejected(collection):
+    """n_shards > n_docs would leave empty shards — rejected at build
+    time with an actionable message, not discovered at query time."""
+    with pytest.raises(ValueError, match="at least one document"):
+        shard_ranges(5, 8)
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_ranges(10, 0)
+    with pytest.raises(ValueError, match="at least one document"):
+        Retriever.build(collection.fwd, _cfg("flat", n_shards=51))
+
+
+# ---------------------------------------------------------------------------
+# scale-sweep parity: engine × codec × n_shards, byte-identical top-k
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("codec", available_layouts())
+@pytest.mark.parametrize("engine", ["seismic", "hnsw", "flat"])
+def test_sharded_matches_unsharded_oracle(collection, queries, oracle_cache,
+                                          engine, codec, n_shards):
+    """The tentpole criterion: sharding is invisible to the caller —
+    ids AND scores byte-identical to the monolithic build. n_shards=7
+    over 50 docs makes the last shard ragged (8-doc and 7-doc shards
+    coexist, so per-shard array shapes differ and plan keys must not
+    collide)."""
+    ids_o, sc_o = _oracle(collection, queries, oracle_cache, engine, codec)
+    r = Retriever.build(collection.fwd, _cfg(engine, codec, n_shards))
+    if n_shards == 1:
+        assert isinstance(r, Retriever)
+    else:
+        assert isinstance(r, ShardedRetriever)
+        assert [sh.n_docs for sh in r.shards] == [
+            hi - lo for lo, hi in shard_ranges(collection.fwd.n_docs, n_shards)
+        ]
+    ids, scores = r.search(queries)
+    assert np.array_equal(np.asarray(ids), ids_o)
+    assert np.array_equal(np.asarray(scores), sc_o)
+
+
+@pytest.mark.parametrize("engine", ["seismic", "hnsw", "flat"])
+def test_single_doc_shards(engine):
+    """The degenerate scale point: n_shards == n_docs, every shard owns
+    exactly one document (shard size < k, so the per-shard k cap and
+    the merge's sentinel padding both engage)."""
+    coll = generate_collection(
+        SyntheticConfig(name="tiny", dim=128, n_docs=10, n_queries=3,
+                        doc_nnz_mean=16.0, query_nnz_mean=6.0, seed=13),
+        value_format="f16",
+    )
+    Q = np.stack([coll.query_dense(i) for i in range(3)])
+    cfg = RetrieverConfig(engine=engine, k=5, params=ENGINE_PARAMS[engine])
+    ids_o, sc_o = Retriever.build(coll.fwd, cfg).search(Q)
+    r = Retriever.build(coll.fwd, cfg.replace(n_shards=10))
+    assert all(sh.n_docs == 1 for sh in r.shards)
+    ids, scores = r.search(Q)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids_o))
+    assert np.array_equal(np.asarray(scores), np.asarray(sc_o))
+
+
+def test_pipeline_search_batch_parity(collection, queries, oracle_cache):
+    """The micro-batching pipeline works unmodified over shards: same
+    answers through ``search_batch`` as through the oracle."""
+    ids_o, sc_o = _oracle(collection, queries, oracle_cache, "flat",
+                          "uncompressed")
+    r = Retriever.build(collection.fwd, _cfg("flat", n_shards=4))
+    ids, scores = r.search_batch(queries)
+    assert np.array_equal(np.asarray(ids), ids_o)
+    assert np.array_equal(np.asarray(scores), sc_o)
+
+
+def test_out_of_core_lru_parity(collection, queries, oracle_cache):
+    """max_resident=1 forces strict out-of-core round-robin: every
+    query batch re-admits each shard in turn. Answers stay identical;
+    evictions and the peak-residency bound are observable."""
+    ids_o, sc_o = _oracle(collection, queries, oracle_cache, "flat",
+                          "uncompressed")
+    r = Retriever.build(collection.fwd, _cfg("flat", n_shards=4))
+    full = sum(sh.disk_bytes() for sh in r.shards)
+    r.max_resident = 1
+    ids, scores = r.search(queries)
+    assert np.array_equal(np.asarray(ids), ids_o)
+    assert np.array_equal(np.asarray(scores), sc_o)
+    assert len(r._resident) == 1
+    assert r.evictions >= 3
+    assert 0 < r.peak_resident_bytes < full
+    # a second pass recompiles evicted plans; the counter stays honest
+    before = r.plans.compiles
+    r.search(queries)
+    assert r.plans.compiles > before
+
+
+def test_plan_keys_carry_shard_topology(collection, queries):
+    """Plan keys grow the shard-topology component: the facade plan is
+    keyed ``*/S`` and each resident shard's plans are keyed ``s/S``, so
+    ragged shards (different array shapes) never collide on an
+    executable."""
+    r = Retriever.build(collection.fwd, _cfg("flat", n_shards=2))
+    r.search(queries)
+    bucket = r.plans.bucket_for(queries.shape[0])
+    assert r.plans.get(bucket).key.shard == "*/2"
+    assert {sr.plans.get(bucket).key.shard
+            for sr in r._resident.values()} == {"0/2", "1/2"}
+    assert r.plans.compiles >= 2  # one per shard at least
+
+
+# ---------------------------------------------------------------------------
+# artifact tree: mmap'd open + round-trip parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["seismic", "hnsw", "flat"])
+def test_save_open_memory_mapped(collection, queries, tmp_path, engine):
+    """``open_retriever`` on a sharded tree memory-maps every shard
+    payload — O(metadata) open, no array bytes touched until admission
+    — and the reopened tree answers byte-identically."""
+    r = Retriever.build(collection.fwd, _cfg(engine, n_shards=3))
+    ids, scores = r.search(queries)
+    art = r.save(tmp_path / f"tree-{engine}")
+    r2 = open_retriever(art)
+    assert isinstance(r2, ShardedRetriever)
+    assert r2.cfg == r.cfg and r2.n_docs == r.n_docs
+    for sh in r2.shards:
+        mapped = [a for a in sh.arrays.values() if isinstance(a, np.memmap)]
+        assert mapped, "shard arrays must be memory-mapped views"
+        assert all(isinstance(a, np.memmap) for a in sh.arrays.values()
+                   if a.size > 0)
+    ids2, scores2 = r2.search(queries)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids2))
+    assert np.array_equal(np.asarray(scores), np.asarray(scores2))
+
+
+@pytest.fixture(scope="module")
+def saved_tree(collection, tmp_path_factory):
+    """One pristine flat-engine tree; fault tests copy and corrupt."""
+    r = Retriever.build(collection.fwd, _cfg("flat", n_shards=3))
+    return r.save(tmp_path_factory.mktemp("pristine") / "tree")
+
+
+def _corrupt_copy(saved_tree, tmp_path, mutate):
+    tree = tmp_path / "tree"
+    shutil.copytree(saved_tree, tree)
+    mutate(tree)
+    return tree
+
+
+def _edit_json(path, fn):
+    mf = json.loads(path.read_text())
+    fn(mf)
+    path.write_text(json.dumps(mf))
+
+
+def test_truncated_shard_payload_fails(saved_tree, tmp_path):
+    def mutate(tree):
+        npz = tree / "shard_0000" / "arrays.npz"
+        data = npz.read_bytes()
+        npz.write_bytes(data[: len(data) // 2])
+
+    tree = _corrupt_copy(saved_tree, tmp_path, mutate)
+    with pytest.raises(ArtifactError, match="truncat|corrupt"):
+        open_retriever(tree)
+
+
+def test_missing_shard_payload_fails(saved_tree, tmp_path):
+    tree = _corrupt_copy(
+        saved_tree, tmp_path,
+        lambda t: (t / "shard_0001" / "arrays.npz").unlink(),
+    )
+    with pytest.raises(ArtifactError, match="missing shard payload"):
+        open_retriever(tree)
+
+
+def test_shard_count_mismatch_fails(saved_tree, tmp_path):
+    """Top-level n_shards disagrees with the listed shard entries."""
+    tree = _corrupt_copy(
+        saved_tree, tmp_path,
+        lambda t: _edit_json(t / "manifest.json",
+                             lambda mf: mf.__setitem__("n_shards", 4)),
+    )
+    with pytest.raises(ArtifactError, match="shard-count mismatch"):
+        open_retriever(tree)
+
+
+def test_foreign_shard_rejected(saved_tree, tmp_path):
+    """A shard whose own manifest says it belongs to a different-sized
+    tree (n_shards skew) is rejected — it cannot silently serve here."""
+    tree = _corrupt_copy(
+        saved_tree, tmp_path,
+        lambda t: _edit_json(t / "shard_0000" / "manifest.json",
+                             lambda mf: mf.__setitem__("n_shards", 5)),
+    )
+    with pytest.raises(ArtifactError, match="shard-count mismatch"):
+        open_retriever(tree)
+
+
+@pytest.mark.parametrize("delta", [-1, +1], ids=["overlap", "gap"])
+def test_bad_doc_ranges_fail(saved_tree, tmp_path, delta):
+    def mutate(tree):
+        _edit_json(
+            tree / "manifest.json",
+            lambda mf: mf["shards"][1].__setitem__(
+                "doc_lo", mf["shards"][1]["doc_lo"] + delta
+            ),
+        )
+
+    tree = _corrupt_copy(saved_tree, tmp_path, mutate)
+    with pytest.raises(ArtifactError, match="tile"):
+        open_retriever(tree)
+
+
+def test_shard_range_disagreement_fails(saved_tree, tmp_path):
+    """Top-level and per-shard manifests disagree on the doc range."""
+    tree = _corrupt_copy(
+        saved_tree, tmp_path,
+        lambda t: _edit_json(t / "shard_0002" / "manifest.json",
+                             lambda mf: mf.__setitem__(
+                                 "doc_lo", mf["doc_lo"] + 1)),
+    )
+    with pytest.raises(ArtifactError, match="doc range disagrees"):
+        open_retriever(tree)
+
+
+@pytest.mark.parametrize("where", ["manifest.json",
+                                   os.path.join("shard_0001", "manifest.json")],
+                         ids=["top", "shard"])
+def test_version_skew_fails(saved_tree, tmp_path, where):
+    tree = _corrupt_copy(
+        saved_tree, tmp_path,
+        lambda t: _edit_json(t / where,
+                             lambda mf: mf.__setitem__(
+                                 "version", MANIFEST_VERSION + 1)),
+    )
+    with pytest.raises(ArtifactError, match="version"):
+        open_retriever(tree)
+
+
+def test_engine_skew_fails(saved_tree, tmp_path):
+    tree = _corrupt_copy(
+        saved_tree, tmp_path,
+        lambda t: _edit_json(t / "shard_0001" / "manifest.json",
+                             lambda mf: mf.__setitem__("engine", "hnsw")),
+    )
+    with pytest.raises(ArtifactError, match="skew"):
+        open_retriever(tree)
+
+
+def test_compressed_payload_not_mappable(collection, tmp_path):
+    """A tree written with compress=True loads fine through the normal
+    reader path? No — mmap needs ZIP_STORED; the error says how to fix
+    it rather than serving garbage."""
+    r = Retriever.build(collection.fwd, _cfg("flat", n_shards=2))
+    art = r.save(tmp_path / "tree", compress=True)
+    with pytest.raises(ArtifactError, match="compress=False"):
+        mmap_npz(art / "shard_0000" / "arrays.npz")
+
+
+# ---------------------------------------------------------------------------
+# global-id regression: sentinels through the merge, both dedupe modes
+# ---------------------------------------------------------------------------
+
+def test_map_local_ids_never_aliases():
+    """The clip-gather bug class: -1 padding must NOT alias local doc 0
+    and ids ≥ the shard size must NOT alias the shard's last doc — both
+    map to the out-of-corpus sentinel."""
+    # shard owns global docs [40, 45); idmap slot 5 is the sentinel
+    idmap = jnp.asarray(np.array([40, 41, 42, 43, 44, 100], np.int32))
+    ids = jnp.asarray([[-1, 0, 4, 5, 6, 2]], jnp.int32)
+    out = np.asarray(map_local_ids(idmap, ids, 100))
+    assert out.tolist() == [[100, 40, 44, 100, 100, 42]]
+
+
+@pytest.mark.parametrize("dedupe", [False, True])
+def test_sentinels_survive_merge_without_aliasing(dedupe):
+    """-1 and ≥ n_docs ids carry the HIGHEST raw scores here; the merge
+    must mask them to -inf so they never displace a real document, in
+    both dedupe modes."""
+    n, k = 100, 4
+    flat_ids = jnp.asarray([[7, -1, 7, 99, 100, 3]], jnp.int32)
+    flat_scores = jnp.asarray([[5.0, 9.0, 5.0, 1.0, 9.0, 2.0]], jnp.float32)
+    ids, scores = merge_topk(flat_ids, flat_scores, k,
+                             dedupe=dedupe, n_docs_global=n)
+    ids, scores = np.asarray(ids)[0], np.asarray(scores)[0]
+    finite = np.isfinite(scores)
+    # no out-of-corpus id ever carries a finite score
+    assert all(0 <= i < n for i in ids[finite])
+    if dedupe:
+        assert ids[finite].tolist() == [7, 3, 99]
+        assert scores[finite].tolist() == [5.0, 2.0, 1.0]
+    else:
+        assert ids[finite].tolist() == [7, 7, 3, 99]
+        assert scores[finite].tolist() == [5.0, 5.0, 2.0, 1.0]
+
+
+def test_merge_topk_matches_numpy_reference():
+    """Randomized merge property: ids drawn from [-3, n_docs + 3) with
+    per-id-deterministic scores (shards re-score exactly, so duplicates
+    agree) — the merged finite prefix must equal a numpy reference
+    top-k over the valid (unique, when deduping) candidates."""
+
+    def prop(n_docs, width, case_seed):
+        rng = np.random.default_rng(case_seed)
+        k = min(5, width)
+        flat_ids = rng.integers(-3, n_docs + 3, size=(2, width)).astype(np.int32)
+        score_of = lambda i: 1.0 + 0.5 * i  # injective in the id
+        flat_scores = score_of(flat_ids.astype(np.float32))
+        for dedupe in (False, True):
+            ids, scores = merge_topk(
+                jnp.asarray(flat_ids), jnp.asarray(flat_scores), k,
+                dedupe=dedupe, n_docs_global=n_docs,
+            )
+            ids, scores = np.asarray(ids), np.asarray(scores)
+            for q in range(2):
+                valid = flat_ids[q][(flat_ids[q] >= 0)
+                                    & (flat_ids[q] < n_docs)]
+                if dedupe:
+                    valid = np.unique(valid)
+                want = np.sort(valid)[::-1][:k]  # injective ⇒ sort by id
+                finite = np.isfinite(scores[q])
+                assert ids[q][finite].tolist() == want.tolist(), (
+                    f"dedupe={dedupe} q={q}"
+                )
+                np.testing.assert_array_equal(
+                    scores[q][finite], score_of(want.astype(np.float32))
+                )
+
+    run_property(prop, integers(4, 60), integers(1, 24),
+                 integers(0, 10**6), n_cases=30, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# mesh path: shard_map parity on 8 forced host devices (subprocess)
+# ---------------------------------------------------------------------------
+
+_ENV = {
+    **os.environ,
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+    "PYTHONPATH": os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + os.environ.get("PYTHONPATH", "").split(os.pathsep)
+    ),
+}
+
+
+def test_mesh_matches_sequential():
+    """With ≥ n_shards devices the dispatch takes the shard_map path;
+    answers must match the sequential out-of-core path byte-for-byte
+    (a dedupe engine and a disjoint-range engine both covered)."""
+    script = textwrap.dedent(
+        """
+        import numpy as np
+        from repro.data.synthetic import SyntheticConfig, generate_collection
+        from repro.serve.api import Retriever, RetrieverConfig
+
+        coll = generate_collection(
+            SyntheticConfig(name="mesh", dim=256, n_docs=48, n_queries=4,
+                            doc_nnz_mean=24.0, query_nnz_mean=8.0, seed=3),
+            value_format="f16",
+        )
+        Q = np.stack([coll.query_dense(i) for i in range(4)])
+        cases = [
+            ("flat", {}),
+            ("seismic", dict(cut=16, block_budget=512, n_probe=512,
+                             n_postings=10000, block_size=8)),
+        ]
+        for engine, params in cases:
+            cfg = RetrieverConfig(engine=engine, k=10, n_shards=4,
+                                  params=params)
+            seq = Retriever.build(coll.fwd, cfg)
+            seq.use_mesh = False
+            ids_s, sc_s = seq.search(Q)
+            mesh = Retriever.build(coll.fwd, cfg)
+            mesh.use_mesh = True
+            ids_m, sc_m = mesh.search(Q)
+            assert np.array_equal(np.asarray(ids_s), np.asarray(ids_m)), engine
+            assert np.array_equal(np.asarray(sc_s), np.asarray(sc_m)), engine
+        print("mesh parity OK")
+        """
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=_ENV, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"

@@ -1,0 +1,180 @@
+#!/usr/bin/env python
+"""Sharded-serving parity gate (``make shard-parity``, part of ``make
+check``).
+
+Asserts, for every registered engine × codec (mirroring
+``tools/kernel_parity.py``):
+
+1. **top-k parity** — the sharded retriever (n_shards ∈ {4, 7}; 7 over
+   a 50-doc corpus exercises the ragged last shard) returns
+   BYTE-identical ids and scores to the unsharded oracle under
+   exhaustive engine budgets — sharding must be invisible to callers;
+2. **mmap round-trip** — a saved shard tree reopened via
+   ``open_retriever`` serves from ``np.memmap`` views and still
+   answers byte-identically;
+3. **on-disk bytes** — the FORWARD-INDEX row payload (the quantity the
+   paper compresses, and the term that dominates index size at scale)
+   summed over shards stays within 1.02× of the monolithic build for
+   every engine × codec; for the disjoint-range engines (flat, hnsw)
+   the bound also holds for the whole ``arrays.npz`` sum. Seismic's
+   *navigational* structures (block summaries, block→doc lists) are
+   structurally larger when split into self-contained shards — every
+   shard re-blocks its own posting lists, so block-padding waste
+   multiplies with the shard count — which a coarse ≤ 2.5× backstop
+   keeps from regressing further.
+
+Exit status = number of failures (0 = pass).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.layout import available_layouts  # noqa: E402
+from repro.data.synthetic import SyntheticConfig, generate_collection  # noqa: E402
+from repro.serve.api import (  # noqa: E402
+    Retriever,
+    RetrieverConfig,
+    available_engines,
+    open_retriever,
+)
+from repro.serve.sharded import SHARD_DIR_FMT, ShardedRetriever  # noqa: E402
+
+#: budgets exhaustive for the 50-doc parity corpus (candidate sets
+#: identical sharded vs not, so top-k must match byte-for-byte)
+ENGINE_PARAMS = {
+    "seismic": dict(cut=16, block_budget=512, n_probe=512, n_postings=10000,
+                    block_size=8),
+    "hnsw": dict(beam=56, iters=56, n_seeds=4, m=8, ef_construction=48),
+    "flat": {},
+}
+
+#: bytes-gate corpus is larger so fixed per-shard overheads amortize
+BYTES_N_DOCS = 600
+BYTES_TOLERANCE = 1.02
+#: backstop for seismic's whole-archive ratio (see module docstring)
+NAV_BACKSTOP = 2.5
+SHARD_COUNTS = (4, 7)
+
+
+def _fail(errors: list, msg: str) -> None:
+    errors.append(msg)
+    print(f"FAIL {msg}")
+
+
+def _collection(n_docs: int, dim: int, seed: int):
+    return generate_collection(
+        SyntheticConfig(name="shard-parity", dim=dim, n_docs=n_docs,
+                        n_queries=4, doc_nnz_mean=24.0, query_nnz_mean=8.0,
+                        seed=seed),
+        value_format="f16",
+    )
+
+
+def _npz_bytes(tree, n_shards: int) -> int:
+    return sum(
+        os.path.getsize(os.path.join(tree, SHARD_DIR_FMT.format(s), "arrays.npz"))
+        for s in range(n_shards)
+    )
+
+
+def main() -> int:
+    errors: list[str] = []
+    col = _collection(50, 256, seed=7)
+    Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
+    tmp = tempfile.mkdtemp(prefix="shard-parity-")
+    try:
+        for engine in available_engines():
+            for codec in available_layouts():
+                cfg = RetrieverConfig(engine=engine, codec=codec, k=10,
+                                      params=ENGINE_PARAMS[engine])
+                oracle = Retriever.build(col.fwd, cfg)
+                ids_o, sc_o = map(np.asarray, oracle.search(Q))
+                for n_shards in SHARD_COUNTS:
+                    r = Retriever.build(col.fwd, cfg.replace(n_shards=n_shards))
+                    ids, sc = map(np.asarray, r.search(Q))
+                    if not np.array_equal(ids, ids_o):
+                        _fail(errors, f"top-k id parity: {engine}×{codec} S={n_shards}")
+                    elif not np.array_equal(sc, sc_o):
+                        _fail(errors, f"top-k score parity: {engine}×{codec} S={n_shards}")
+                    else:
+                        print(f"ok sharded     {engine}×{codec} S={n_shards}")
+                # mmap round-trip through the artifact tree (S=4)
+                tree = os.path.join(tmp, f"{engine}-{codec}")
+                Retriever.build(col.fwd, cfg.replace(n_shards=4)).save(tree)
+                r2 = open_retriever(tree)
+                mapped = isinstance(r2, ShardedRetriever) and all(
+                    isinstance(a, np.memmap)
+                    for sh in r2.shards for a in sh.arrays.values() if a.size
+                )
+                ids2, sc2 = map(np.asarray, r2.search(Q))
+                if not mapped:
+                    _fail(errors, f"mmap open: {engine}×{codec} not memory-mapped")
+                elif not (np.array_equal(ids2, ids_o) and np.array_equal(sc2, sc_o)):
+                    _fail(errors, f"mmap round-trip parity: {engine}×{codec}")
+                else:
+                    print(f"ok mmap        {engine}×{codec}")
+                shutil.rmtree(tree)
+
+        # on-disk bytes: sum of shard payloads vs monolithic (both
+        # uncompressed npz — the format mmap_npz requires)
+        def row_bytes(arrays) -> int:
+            return sum(np.asarray(v).nbytes for k, v in arrays.items()
+                       if k.endswith("_rows"))
+
+        bcol = _collection(BYTES_N_DOCS, 512, seed=0)
+        for engine in available_engines():
+            for codec in available_layouts():
+                # build-time knobs only (no search here): engine
+                # defaults, except hnsw graph params kept small
+                params = ENGINE_PARAMS[engine] if engine == "hnsw" else {}
+                cfg = RetrieverConfig(engine=engine, codec=codec, k=10,
+                                      params=params)
+                mono_dir = os.path.join(tmp, "mono")
+                mono_r = Retriever.build(bcol.fwd, cfg)
+                mono_r.save(mono_dir, compress=False)
+                mono = os.path.getsize(os.path.join(mono_dir, "arrays.npz"))
+                mono_rows = row_bytes(mono_r.arrays)
+                tree = os.path.join(tmp, "tree")
+                sh_r = Retriever.build(bcol.fwd, cfg.replace(n_shards=4))
+                sh_r.save(tree)
+                sharded = _npz_bytes(tree, 4)
+                sh_rows = sum(row_bytes(sh.arrays) for sh in sh_r.shards)
+                rratio, nratio = sh_rows / mono_rows, sharded / mono
+                npz_bound = (BYTES_TOLERANCE if engine != "seismic"
+                             else NAV_BACKSTOP)
+                if rratio > BYTES_TOLERANCE:
+                    _fail(errors,
+                          f"disk bytes: {engine}×{codec} sharded row payload "
+                          f"{sh_rows} > {BYTES_TOLERANCE}× monolithic "
+                          f"{mono_rows} (ratio {rratio:.3f})")
+                elif nratio > npz_bound:
+                    _fail(errors,
+                          f"disk bytes: {engine}×{codec} sharded npz "
+                          f"{sharded} > {npz_bound}× monolithic {mono} "
+                          f"(ratio {nratio:.3f})")
+                else:
+                    print(f"ok disk-bytes  {engine}×{codec}: rows "
+                          f"{rratio:.3f} ≤ {BYTES_TOLERANCE}, npz "
+                          f"{nratio:.3f} ≤ {npz_bound}")
+                shutil.rmtree(mono_dir)
+                shutil.rmtree(tree)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    if errors:
+        print(f"shard-parity: {len(errors)} failure(s)")
+    else:
+        print("shard-parity OK")
+    return len(errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
