@@ -7,7 +7,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 ROUNDTRIP_DIR ?= /tmp/repro-serve-roundtrip
 ROUNDTRIP_ARGS = --engine all --compare-codecs --n-docs 400 --n-queries 8 --seed 0
 
-.PHONY: test check bench bench-fast docs-check serve-roundtrip kernel-parity shard-parity perf-gate pipeline-smoke clean
+.PHONY: test check bench bench-fast docs-check serve-roundtrip kernel-parity shard-parity mutation-parity perf-gate pipeline-smoke clean
 
 test:            ## tier-1 suite (the CI gate)
 	$(PY) -m pytest -x -q
@@ -27,6 +27,10 @@ kernel-parity:   ## fused kernels vs jnp in both pallas modes: block scan, rows 
 shard-parity:    ## sharded vs unsharded byte-identical top-k (ragged shards included), mmap'd artifact round-trip, on-disk bytes bound — all engines×codecs
 	$(PY) tools/shard_parity.py
 
+mutation-parity: ## live-mutation gate: delta segments + tombstones + crash-safe merge byte-identical to a fresh oracle build, pre- and post-merge, monolithic + sharded — all engines×codecs; then a seeded mutate-under-traffic load generator
+	$(PY) tools/mutation_parity.py
+	$(PY) -m repro.launch.serve --mutate --engine flat --codec streamvbyte --n-docs 60 --n-queries 6 --k 5 --mutations 9
+
 perf-gate:       ## NaN-fail when a freshly measured pallas_compiled row is slower than the committed jnp row for the same codec
 	$(PY) tools/perf_gate.py
 
@@ -34,7 +38,7 @@ pipeline-smoke:  ## micro-batching scheduler smoke: synthetic trace through the 
 	$(PY) -m repro.launch.serve --pipeline --engine flat --codec streamvbyte --n-docs 300 --n-queries 16 --requests 96 --deadline-us 500
 	$(PY) -m repro.launch.serve --pipeline --engine seismic --codec dotvbyte --backend pallas --n-docs 400 --n-queries 8 --requests 48 --n-probe 16
 
-check: docs-check serve-roundtrip kernel-parity shard-parity perf-gate pipeline-smoke ## tier-1 suite + tiny Table-1/2/3/4/5+kernel benchmark pass + docs audit + artifact + parity + perf + pipeline gates
+check: docs-check serve-roundtrip kernel-parity shard-parity mutation-parity perf-gate pipeline-smoke ## tier-1 suite + tiny Table-1..6+kernel benchmark pass + docs audit + artifact + parity + mutation + perf + pipeline gates
 	$(PY) -m benchmarks.run --quick
 
 bench:           ## full benchmark sweep (slow)
@@ -43,7 +47,9 @@ bench:           ## full benchmark sweep (slow)
 bench-fast:      ## reduced-size benchmark sweep
 	$(PY) -m benchmarks.run --fast
 
-clean:           ## remove stray bytecode + tool caches (they pollute find/grep)
+clean:           ## remove stray bytecode, tool caches, and mutable-index artifacts (generation dirs + CURRENT pointers)
 	find . -type d -name __pycache__ -prune -exec rm -rf {} +
 	find . -type f \( -name '*.pyc' -o -name '*.pyo' \) -delete
+	find . -type d -name 'generation_[0-9][0-9][0-9][0-9]' -prune -exec rm -rf {} +
+	find . -type f -name CURRENT -delete
 	rm -rf .pytest_cache .ruff_cache .mypy_cache

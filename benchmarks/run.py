@@ -1,9 +1,10 @@
 """Benchmark entry point — one section per paper table + kernel/roofline
 extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)
-and snapshots the kernel + serving + pipeline + scale families to
-machine-readable ``BENCH_kernels.json`` / ``BENCH_serve.json`` /
-``BENCH_pipeline.json`` / ``BENCH_roofline.json`` / ``BENCH_scale.json``
-at the repo root
+and snapshots the kernel + serving + pipeline + scale + mutation
+families to machine-readable ``BENCH_kernels.json`` /
+``BENCH_serve.json`` / ``BENCH_pipeline.json`` /
+``BENCH_roofline.json`` / ``BENCH_scale.json`` /
+``BENCH_mutation.json`` at the repo root
 (schema: name, µs, structured mode/codec, parsed derived metrics, git
 sha — see ``common.write_bench_json``) so the perf trajectory is
 diffable across PRs.
@@ -31,7 +32,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None,
-              n_docs: int | None = None, scale_rows=None) -> None:
+              n_docs: int | None = None, scale_rows=None,
+              mutation_rows=None) -> None:
     """Write the committed snapshots. ``mode`` (quick/fast/full) is
     recorded in the payload so the perf trajectory is only compared
     like-for-like (``n_docs`` likewise, for the kernel family — the
@@ -62,6 +64,9 @@ def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None,
     if scale_rows:
         write_bench_json(os.path.join(_ROOT, "BENCH_scale.json"),
                          scale_rows, meta={"mode": mode})
+    if mutation_rows:
+        write_bench_json(os.path.join(_ROOT, "BENCH_mutation.json"),
+                         mutation_rows, meta={"mode": mode})
 
 
 def _quick_smoke() -> int:
@@ -82,9 +87,9 @@ def _quick_smoke() -> int:
         return proc.returncode
 
     from . import (kernel_bench, table1_codecs, table2_seismic, table3_graph,
-                   table4_pipeline, table5_scale)
+                   table4_pipeline, table5_scale, table6_mutation)
 
-    print("# tiny table1/table2/table3/table4/table5 + kernels…",
+    print("# tiny table1/table2/table3/table4/table5/table6 + kernels…",
           file=sys.stderr, flush=True)
     rows = table1_codecs.run(n_docs=400, n_queries=2, rgb_iters=2)
     serve_rows = table2_seismic.run(n_docs=400, n_queries=4)
@@ -93,7 +98,10 @@ def _quick_smoke() -> int:
     pipeline_rows = table4_pipeline.run(n_docs=400, n_queries=8, n_requests=64)
     scale_rows = table5_scale.run(n_docs_sweep=(2000,), n_queries=16,
                                   n_requests=32)
+    mutation_rows = table6_mutation.run(n_docs=1000, n_queries=16,
+                                        n_requests=32)
     rows += serve_rows + kernel_rows + pipeline_rows + scale_rows
+    rows += mutation_rows
     emit(rows)
     # a NaN latency means no sweep point reached the accuracy level —
     # or, for the pipeline/amortized-gate rows, that bucketed serving
@@ -106,7 +114,7 @@ def _quick_smoke() -> int:
     # snapshot only after the gate passes — a failing run must not
     # overwrite the committed trajectory with regression numbers
     _snapshot(kernel_rows, serve_rows, mode="quick", pipeline_rows=pipeline_rows,
-              n_docs=300, scale_rows=scale_rows)
+              n_docs=300, scale_rows=scale_rows, mutation_rows=mutation_rows)
     print(f"# quick smoke OK ({len(rows)} rows)", file=sys.stderr)
     return 0
 
@@ -118,7 +126,7 @@ def main() -> None:
                     help="CI smoke: tier-1 pytest + tiny table1/table2/table3")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "table4", "table5",
-                             "kernel", "roofline"])
+                             "table6", "kernel", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -137,7 +145,8 @@ def main() -> None:
         rows.extend(got)
 
     from . import (kernel_bench, roofline, table1_codecs, table2_seismic,
-                   table3_graph, table4_pipeline, table5_scale)
+                   table3_graph, table4_pipeline, table5_scale,
+                   table6_mutation)
 
     if args.fast:
         section("table1", lambda: table1_codecs.run(n_docs=1500, n_queries=2, rgb_iters=3))
@@ -147,6 +156,9 @@ def main() -> None:
                                                       n_requests=128))
         section("table5", lambda: table5_scale.run(n_docs_sweep=(2000,),
                                                    n_queries=16, n_requests=64))
+        section("table6", lambda: table6_mutation.run(n_docs=1500,
+                                                      n_queries=16,
+                                                      n_requests=64))
         section("kernel", lambda: kernel_bench.run(n_docs=800))
     else:
         section("table1", lambda: table1_codecs.run())
@@ -154,6 +166,7 @@ def main() -> None:
         section("table3", lambda: table3_graph.run())
         section("table4", lambda: table4_pipeline.run())
         section("table5", lambda: table5_scale.run())
+        section("table6", lambda: table6_mutation.run())
         section("kernel", lambda: kernel_bench.run())
     section("roofline", roofline.run)
 
@@ -166,6 +179,7 @@ def main() -> None:
         pipeline_rows=by_section.get("table4", []),
         n_docs=800 if args.fast else 2000,
         scale_rows=by_section.get("table5", []),
+        mutation_rows=by_section.get("table6", []),
     )
     emit(rows)
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)

@@ -1,0 +1,133 @@
+"""Table 6 — serving under live index mutation (EXPERIMENTS.md
+§Mutation).
+
+The mutable retriever (DESIGN.md §10) serves delta segments next to the
+base index instead of rebuilding, at the cost of fanning every query
+over base + segments and merging an O(k·parts) candidate strip. This
+table prices that trade, sweeping live segment count against the merged
+(compacted) baseline:
+
+* ``mutation/<engine>-<codec>/segs<n>/bucket8`` — per-query latency
+  through ``MutableRetriever.search`` with ``n`` live delta segments
+  (plus a handful of tombstones once segments exist); derived carries
+  ``p95_us_per_q``, ``us_per_q`` (mean), ``qps``, ``n_live``.
+* ``mutation/<engine>-<codec>/merged/bucket8`` — the same stream after
+  ``merge()`` folds everything into a fresh single-part generation.
+* ``mutation/merge/<engine>-<codec>`` — merge/compaction wall-clock
+  (rebuild + atomic generation flip); derived carries ``n_live`` and
+  the number of segments folded.
+* ``mutation/latency-gate/<engine>-<codec>`` — NaN-fail gate (the
+  standing convention: a NaN ``us`` fails the smoke): 1-live-segment
+  serving p95 must stay within ``GATE_FACTOR``× of the merged p95.
+  One delta segment is the steady state under trickle updates; if it
+  already costs more than this, compaction would have to run after
+  every insert and the mutation path buys nothing.
+
+As everywhere in this harness, absolute µs are CPU-XLA wall clock; the
+reproducible claim is the *shape*: latency degrading gently in live
+segment count, merge amortising the degradation away.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import Row
+
+#: 1-segment p95 may pay fan-out + merge overhead, but no more than
+#: this factor over the compacted generation
+GATE_FACTOR = 1.5
+
+BUCKET = 8
+SEGMENT_COUNTS = (0, 1, 4)
+
+
+def _per_query_us(m, batches) -> tuple[float, float]:
+    """(mean, p95) per-query µs over one warm pass of ``batches``."""
+    np.asarray(m.search(batches[0])[0])  # compile + admit every part
+    samples = []
+    for b in batches:
+        t0 = time.perf_counter()
+        np.asarray(m.search(b)[0])
+        samples.append((time.perf_counter() - t0) * 1e6 / b.shape[0])
+    arr = np.asarray(samples)
+    return float(arr.mean()), float(np.percentile(arr, 95))
+
+
+def run(n_docs: int = 2000, n_queries: int = 32, n_requests: int = 48,
+        engine: str = "flat", codec: str = "streamvbyte") -> list[Row]:
+    from repro.data.synthetic import generate_collection, splade_config
+    from repro.serve.api import RetrieverConfig
+    from repro.serve.segments import MutableRetriever
+
+    col = generate_collection(splade_config(n_docs, n_queries, seed=0),
+                              value_format="f16")
+    Q = np.stack([col.query_dense(i) for i in range(n_queries)])
+    n_disp = max(1, n_requests // BUCKET)
+    batches = [
+        np.asarray(Q[np.arange(i * BUCKET, (i + 1) * BUCKET) % n_queries])
+        for i in range(n_disp)
+    ]
+
+    # reserve a pool of docs to feed the delta segments; the base is
+    # everything else, so corpus size stays ~n_docs at every point
+    seg_batch = max(4, n_docs // 128)
+    pool = max(SEGMENT_COUNTS) * seg_batch
+    base = col.fwd.slice(0, n_docs - pool)
+    cfg = RetrieverConfig(engine=engine, codec=codec, k=10)
+    m = MutableRetriever.create(base, cfg)
+
+    rows: list[Row] = []
+    p95_by_segs: dict[int, float] = {}
+    next_doc = base.n_docs
+    for segs in SEGMENT_COUNTS:
+        while len(m.segments) < segs:
+            m.insert([col.fwd.doc(i)
+                      for i in range(next_doc, next_doc + seg_batch)])
+            next_doc += seg_batch
+        if segs and int(m.base_dead.sum()) < 3:
+            # a few dead rows in the base: the realistic steady state
+            m.delete([1, 3, 5])
+        mean_us, p95 = _per_query_us(m, batches)
+        p95_by_segs[segs] = p95
+        rows.append(Row(
+            f"mutation/{engine}-{codec}/segs{segs}/bucket{BUCKET}",
+            mean_us * BUCKET,
+            f"bucket={BUCKET};us_per_q={mean_us:.1f};"
+            f"p95_us_per_q={p95:.1f};qps={1e6 / mean_us:.0f};"
+            f"n_live={m.n_live}",
+            codec=codec,
+        ))
+
+    t0 = time.perf_counter()
+    folded = len(m.segments)
+    m.merge()
+    merge_us = (time.perf_counter() - t0) * 1e6
+    rows.append(Row(
+        f"mutation/merge/{engine}-{codec}",
+        merge_us,
+        f"segments_folded={folded};n_live={m.n_live};"
+        f"generation={m.generation}",
+        codec=codec,
+    ))
+
+    mean_us, p95_merged = _per_query_us(m, batches)
+    rows.append(Row(
+        f"mutation/{engine}-{codec}/merged/bucket{BUCKET}",
+        mean_us * BUCKET,
+        f"bucket={BUCKET};us_per_q={mean_us:.1f};"
+        f"p95_us_per_q={p95_merged:.1f};qps={1e6 / mean_us:.0f};"
+        f"n_live={m.n_live}",
+        codec=codec,
+    ))
+
+    ok = p95_by_segs[1] <= GATE_FACTOR * p95_merged
+    rows.append(Row(
+        f"mutation/latency-gate/{engine}-{codec}",
+        p95_by_segs[1] if ok else float("nan"),
+        f"merged_p95_us_per_q={p95_merged:.1f};"
+        f"factor={p95_by_segs[1] / p95_merged:.2f};bound={GATE_FACTOR}",
+    ))
+    return rows

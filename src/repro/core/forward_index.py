@@ -163,6 +163,74 @@ class ForwardIndex:
             value_format=self.value_format,
         )
 
+    @staticmethod
+    def concat(parts: Sequence["ForwardIndex"]) -> "ForwardIndex":
+        """Row-wise concatenation of CSR indexes (same dim + format).
+
+        The mutable-index merge step (DESIGN.md §10) stitches the base
+        store and every delta segment with this before re-selecting the
+        live rows — one vectorised pass, no per-doc python loop."""
+        if not parts:
+            raise ValueError("concat needs at least one part")
+        dim = parts[0].dim
+        vf = parts[0].value_format
+        for p in parts[1:]:
+            if p.dim != dim:
+                raise ValueError(f"dim mismatch: {p.dim} != {dim}")
+            if p.value_format.name != vf.name:
+                raise ValueError(
+                    f"value_format mismatch: {p.value_format.name} != {vf.name}"
+                )
+        if len(parts) == 1:
+            return parts[0]
+        offs = [np.zeros(1, np.int64)]
+        base = 0
+        for p in parts:
+            offs.append(p.offsets[1:].astype(np.int64) + base)
+            base += int(p.offsets[-1])
+        return ForwardIndex(
+            components=np.concatenate([p.components for p in parts]),
+            values=np.concatenate([p.values for p in parts]),
+            offsets=np.concatenate(offs),
+            dim=dim,
+            value_format=vf,
+        )
+
+    def append(self, other: "ForwardIndex") -> "ForwardIndex":
+        """``concat([self, other])`` — segment-build convenience."""
+        return ForwardIndex.concat([self, other])
+
+    def select(self, idx: np.ndarray) -> "ForwardIndex":
+        """Row gather: a new index whose row ``r`` is ``self`` row
+        ``idx[r]``, in the given order (repeats allowed). Vectorised —
+        the merge/compaction path extracts live rows in stable-id order
+        with this (DESIGN.md §10)."""
+        idx = np.asarray(idx, dtype=np.int64)
+        if idx.size and (idx.min() < 0 or idx.max() >= self.n_docs):
+            raise ValueError(
+                f"row index outside [0, {self.n_docs}): "
+                f"[{idx.min()}, {idx.max()}]"
+            )
+        lens = np.diff(self.offsets)[idx]
+        new_off = np.zeros(len(idx) + 1, np.int64)
+        np.cumsum(lens, out=new_off[1:])
+        total = int(new_off[-1])
+        # element positions: for each output row, a run of consecutive
+        # source positions starting at the source row's first element
+        starts = self.offsets[:-1][idx]
+        pos = (
+            np.repeat(starts, lens)
+            + np.arange(total, dtype=np.int64)
+            - np.repeat(new_off[:-1], lens)
+        )
+        return ForwardIndex(
+            components=self.components[pos],
+            values=self.values[pos],
+            offsets=new_off,
+            dim=self.dim,
+            value_format=self.value_format,
+        )
+
     def densify(self, i: int) -> np.ndarray:
         c, v = self.doc(i)
         out = np.zeros(self.dim, dtype=np.float32)

@@ -27,6 +27,17 @@ scheduler; every response is verified byte-identical to a direct
 (QPS, p50/p95/p99, hit rate, bucket occupancy, recompiles) is
 reported — the ``make pipeline-smoke`` gate.
 
+``--mutate`` is the live-mutation load generator (DESIGN.md §10): a
+seeded insert/delete/update stream interleaved with the query trace,
+served through the micro-batching pipeline over a ``MutableRetriever``
+(delta segments + tombstones). At every checkpoint — after each
+mutation round and again after the final merge/compaction — EVERY
+response since the previous checkpoint is verified byte-identical to a
+freshly built oracle index over the post-mutation corpus, and the
+ResultCache must show an epoch invalidation per round (a cached answer
+never survives a mutation). Engine budgets are forced exhaustive so
+parity is byte-exact — keep ``--n-docs`` small (≲ 200) in this mode.
+
 The HNSW host build is a few ms per document — prefer ``--n-docs``
 in the low thousands when sweeping the graph engine interactively.
 """
@@ -87,6 +98,107 @@ def _pipeline_loadgen(retriever, Q, args, rng) -> str:
     return ServeStats.summary(pipe.snapshot())
 
 
+def _mutate_loadgen(col, name, codec, args, rng) -> None:
+    """Live-mutation load generator (DESIGN.md §10).
+
+    Base index over the leading ~60% of the collection; the rest is
+    the insert pool. ``--mutations`` seeded events (insert / delete /
+    update) run in three rounds, each followed by a query burst
+    through the micro-batching pipeline and a CHECKPOINT: a fresh
+    oracle ``Retriever.build`` over the current live corpus must match
+    every burst response byte-for-byte (stable id ``live_ids[pos]`` ↔
+    oracle position ``pos``). A final ``merge()`` folds segments +
+    tombstones into a new generation and the parity check repeats
+    post-compaction. Raises AssertionError on any divergence."""
+    from repro.serve.api import Retriever, RetrieverConfig
+    from repro.serve.pipeline import ServeStats, synthetic_trace
+    from repro.serve.segments import MutableRetriever
+
+    fwd = col.fwd
+    n_docs = fwd.n_docs
+    # budgets exhaustive for the whole mutated corpus: candidate sets
+    # must be identical mutable vs oracle for byte parity
+    exhaustive = {
+        "seismic": dict(cut=16, block_budget=1024, n_probe=1024,
+                        n_postings=100000, block_size=8),
+        "hnsw": dict(beam=n_docs + 8, iters=n_docs + 8, n_seeds=4, m=8,
+                     ef_construction=48),
+        "flat": {},
+    }
+    cfg = RetrieverConfig(engine=name, codec=codec, k=args.k,
+                          backend=args.backend or "jnp",
+                          n_shards=args.n_shards,
+                          params=exhaustive.get(name, {}))
+    n_base = max(args.k + 4, (2 * n_docs) // 3)
+    pool = list(range(n_base, n_docs))  # un-inserted doc pool
+    m = MutableRetriever.create(fwd.slice(0, n_base), cfg)
+    pipe = m.pipeline(deadline_us=args.deadline_us,
+                      cache_size=args.cache_size)
+    Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
+
+    def mutate_one() -> str:
+        live = m.live_ids()
+        ops = ["delete", "update"] + (["insert"] if pool else [])
+        # never shrink below k + margin (the oracle needs k live docs)
+        if len(live) <= args.k + 2:
+            ops = ["insert"] if pool else ["update"]
+        op = ops[int(rng.integers(len(ops)))]
+        if op == "insert":
+            take = [pool.pop(0) for _ in range(min(len(pool),
+                                                   int(rng.integers(1, 4))))]
+            m.insert([fwd.doc(i) for i in take])
+        elif op == "delete":
+            m.delete(int(live[int(rng.integers(len(live)))]))
+        else:  # update-in-place: new content under the same stable id
+            victim = int(live[int(rng.integers(len(live)))])
+            c, v = fwd.doc(int(rng.integers(n_docs)))
+            m.update([(c, v)], ids=[victim])
+        return op
+
+    def burst_and_checkpoint(label: str) -> int:
+        trace = synthetic_trace(rng, max(8, args.requests // 4),
+                                Q.shape[0], repeat_frac=args.repeat_frac)
+        tickets = []
+        for qi in trace:
+            pipe.poll()
+            tickets.append(pipe.submit(Q[qi]))
+        pipe.flush()
+        live_fwd, live = m.live_corpus()
+        oracle = Retriever.build(live_fwd, cfg.replace(n_shards=1))
+        oids, osc = map(np.asarray, oracle.search(Q))
+        for qi, t in zip(trace, tickets):
+            assert np.array_equal(np.asarray(t.ids), live[oids[qi]]), (
+                f"{name}/{codec} {label}: mutable top-k ids diverge from "
+                f"the post-mutation oracle (query {qi})")
+            assert np.array_equal(np.asarray(t.scores), osc[qi]), (
+                f"{name}/{codec} {label}: mutable top-k scores diverge "
+                f"from the post-mutation oracle (query {qi})")
+        return len(trace)
+
+    served = burst_and_checkpoint("pre-mutation")
+    rounds, ops = 3, []
+    for r in range(rounds):
+        lo = (args.mutations * r) // rounds
+        hi = (args.mutations * (r + 1)) // rounds
+        ops += [mutate_one() for _ in range(lo, hi)]
+        served += burst_and_checkpoint(f"round {r + 1}")
+    m.merge()
+    served += burst_and_checkpoint("post-merge")
+    snap = pipe.snapshot()
+    # one epoch invalidation per mutated round + one for the merge
+    rounds = min(args.mutations, rounds)
+    assert snap["cache_invalidations"] >= rounds + 1, (
+        f"{name}/{codec}: ResultCache survived a mutation "
+        f"(invalidations={snap['cache_invalidations']})")
+    from collections import Counter
+
+    mix = ",".join(f"{k}={v}" for k, v in sorted(Counter(ops).items()))
+    print(f"{name:8s} codec={codec:13s} mutation parity OK "
+          f"({served} responses, {args.mutations} mutations [{mix}], "
+          f"{len(m.base_ids)} docs after merge, gen={m.generation}) "
+          f"[{ServeStats.summary(snap)}]")
+
+
 def main() -> None:
     from repro.core.layout import available_layouts
     from repro.serve.api import available_engines
@@ -115,6 +227,15 @@ def main() -> None:
                          "drive a synthetic traffic trace through the "
                          "micro-batching scheduler, verify parity vs "
                          "direct search, report ServeStats")
+    ap.add_argument("--mutate", action="store_true",
+                    help="live-mutation load generator (DESIGN.md §10): "
+                         "seeded insert/delete/update stream interleaved "
+                         "with the query trace over a MutableRetriever, "
+                         "per-response parity vs a fresh oracle at every "
+                         "checkpoint, then merge + parity again; "
+                         "exhaustive budgets — keep --n-docs small")
+    ap.add_argument("--mutations", type=int, default=12,
+                    help="--mutate stream length (events across 3 rounds)")
     ap.add_argument("--requests", type=int, default=256,
                     help="trace length for --pipeline")
     ap.add_argument("--deadline-us", type=float, default=1000.0,
@@ -154,6 +275,9 @@ def main() -> None:
     if args.pipeline and (args.save_index or args.load_index):
         ap.error("--pipeline is a serving-loop mode; run it without "
                  "--save-index/--load-index")
+    if args.mutate and (args.pipeline or args.save_index or args.load_index):
+        ap.error("--mutate is a serving-loop mode; run it without "
+                 "--pipeline/--save-index/--load-index")
 
     from repro.core.seismic import exact_top_k, recall_at_k
     from repro.data.synthetic import generate_collection, lilsr_config, splade_config
@@ -172,6 +296,13 @@ def main() -> None:
     else:
         engines = (args.engine,)
     codecs = codecs_known if args.compare_codecs else (args.codec,)
+
+    if args.mutate:
+        for name in engines:
+            for codec in codecs:
+                _mutate_loadgen(col, name, codec, args,
+                                np.random.default_rng(args.seed + 2))
+        return
 
     search_params = {
         "seismic": dict(cut=args.cut, block_budget=512, n_probe=args.n_probe,

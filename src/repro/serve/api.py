@@ -580,8 +580,18 @@ def open_retriever(path):
     (``format="repro.serve.retriever-sharded"``, written by
     ``Retriever.build(..., n_shards=S)``) dispatches to
     ``ShardedRetriever.open``, which memory-maps every shard's arrays —
-    O(metadata) open regardless of corpus size (DESIGN.md §9)."""
+    O(metadata) open regardless of corpus size (DESIGN.md §9).
+
+    A *mutable* root — a directory holding a ``CURRENT`` pointer file
+    written by ``MutableRetriever`` (DESIGN.md §10) — dispatches to
+    ``segments.open_mutable``, which follows ``CURRENT`` to the live
+    generation directory and reopens base + delta segments +
+    tombstones exactly as last committed."""
     path = pathlib.Path(path)
+    if (path / "CURRENT").is_file():
+        from . import segments
+
+        return segments.open_mutable(path)
     manifest = load_manifest(path)
     fmt = manifest.get("format")
     if fmt == _SHARDED_FORMAT:

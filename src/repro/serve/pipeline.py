@@ -28,12 +28,19 @@ meets *traffic* instead of one frozen batch. Four layers, stacked:
 * ``ResultCache`` — an LRU over the *quantized sparse query* (nonzero
   component ids + values rounded to the index's storage dtype): the
   repeat-heavy head of real query logs short-circuits dispatch
-  entirely and replays the exact top-k previously served.
+  entirely and replays the exact top-k previously served. A cached
+  answer is only valid for the index state that produced it:
+  ``invalidate()`` flushes every entry, and the ``epoch`` tag lets the
+  pipeline invalidate automatically whenever the owning retriever's
+  ``epoch`` attribute moves (a ``MutableRetriever`` bumps it on every
+  insert/delete/update and on each generation flip — DESIGN.md §10),
+  so a mutation can never replay a pre-mutation top-k.
 
 * ``ServeStats`` — the metrics contract: QPS, p50/p95/p99 end-to-end
   latency, result-cache hit rate, per-bucket dispatch counts and
-  occupancy (real queries / bucket capacity), and the plan-cache
-  recompile count.
+  occupancy (real queries / bucket capacity), the plan-cache recompile
+  count, and the result-cache invalidation counters (flushes and
+  entries dropped).
 
 Determinism contract (tests/test_pipeline.py, ``make pipeline-smoke``):
 bucketed/padded/cached serving returns byte-identical top-k ids and
@@ -139,7 +146,13 @@ class PlanKey:
     for a monolithic index, ``"<shard>/<n_shards>"`` for a per-shard
     sub-retriever inside a ``ShardedRetriever`` — shards of one tree
     (whose array shapes may differ, e.g. the ragged last shard) never
-    collide on a plan key."""
+    collide on a plan key.
+
+    ``gen`` is the index-generation component (DESIGN.md §10): ``""``
+    for an immutable index, ``"g<generation>"`` for the fan-out facade
+    of a ``MutableRetriever`` — a generation flip (merge/compaction
+    commit) changes the component, so stale facade plans are retired
+    rather than silently reused against the new base."""
 
     engine: str
     codec: str
@@ -148,6 +161,7 @@ class PlanKey:
     k: int
     bucket: int
     shard: str = ""
+    gen: str = ""
 
 
 class SearchPlan:
@@ -277,7 +291,17 @@ class ResultCache:
     COPIES: a caller mutating the arrays it was handed can never
     corrupt later replays (and cached rows don't pin whole dispatch
     batches alive). ``capacity=0`` disables caching (every lookup
-    misses, nothing is stored)."""
+    misses, nothing is stored).
+
+    A cached result is a statement about ONE index state.
+    ``invalidate()`` flushes the cache when that state changes (the
+    index mutated, a merge committed a new generation); the ``epoch``
+    attribute tags which index epoch the current entries belong to, so
+    the pipeline can compare it against the owning retriever's
+    ``epoch`` and invalidate lazily on the next admission
+    (DESIGN.md §10). ``invalidations`` / ``invalidated_entries`` count
+    flushes and the entries they dropped — surfaced in
+    ``ServeStats.snapshot`` as the staleness-hygiene metric."""
 
     def __init__(self, capacity: int = 1024):
         if capacity < 0:
@@ -286,6 +310,10 @@ class ResultCache:
         self._items: "OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = OrderedDict()
         self.hits = 0
         self.lookups = 0
+        #: index epoch the current entries were computed against
+        self.epoch: int = 0
+        self.invalidations = 0
+        self.invalidated_entries = 0
 
     def __len__(self) -> int:
         return len(self._items)
@@ -308,6 +336,23 @@ class ResultCache:
         self._items.move_to_end(key)
         while len(self._items) > self.capacity:
             self._items.popitem(last=False)
+
+    def invalidate(self, epoch: Optional[int] = None) -> int:
+        """Flush every entry; returns how many were dropped.
+
+        ``epoch`` (when given) records the index epoch the cache is now
+        current for — the pipeline passes the retriever's epoch so the
+        flush happens exactly once per index change, not per lookup.
+        An empty flush still counts as an invalidation: the caller
+        declared the previous state dead, whether or not anything was
+        cached under it."""
+        n = len(self._items)
+        self._items.clear()
+        self.invalidations += 1
+        self.invalidated_entries += n
+        if epoch is not None:
+            self.epoch = int(epoch)
+        return n
 
     @property
     def hit_rate(self) -> float:
@@ -365,6 +410,12 @@ class ServeStats:
             "p95_us": self.percentile(95),
             "p99_us": self.percentile(99),
             "cache_hit_rate": cache.hit_rate if cache is not None else 0.0,
+            "cache_invalidations": (
+                cache.invalidations if cache is not None else 0
+            ),
+            "cache_invalidated_entries": (
+                cache.invalidated_entries if cache is not None else 0
+            ),
             "dispatches": dict(sorted(self.dispatches.items())),
             "bucket_occupancy": occ,
             "recompiles": plans.compiles if plans is not None else 0,
@@ -380,6 +431,7 @@ class ServeStats:
             f"served={snap['n_queries']} qps={snap['qps']:.0f} "
             f"p50={snap['p50_us']:.0f}µs p95={snap['p95_us']:.0f}µs "
             f"p99={snap['p99_us']:.0f}µs hit_rate={snap['cache_hit_rate']:.0%} "
+            f"invalidations={snap.get('cache_invalidations', 0)} "
             f"recompiles={snap['recompiles']} buckets[{occ}]"
         )
 
@@ -485,6 +537,12 @@ class Pipeline:
     def submit(self, q) -> PendingQuery:
         q = np.asarray(q, dtype=np.float32)
         now = self._clock()
+        # epoch sync: a mutable retriever bumps ``epoch`` on every index
+        # change (insert/delete/merge); any cached answer predating the
+        # bump is stale and must not be served (DESIGN.md §10)
+        ep = getattr(self.retriever, "epoch", None)
+        if ep is not None and ep != self.cache.epoch:
+            self.cache.invalidate(epoch=ep)
         # key computation is an O(dim) scan — skip it entirely when the
         # cache is disabled (the strict-exactness path stays lean)
         caching = self.cache.capacity > 0

@@ -298,6 +298,11 @@ class ShardedRetriever:
         self.evictions = 0
         self.peak_resident_bytes = 0
         self._mesh_state = None
+        #: live tombstones (mutable-index integration, DESIGN.md §10):
+        #: sorted global doc ids masked to -inf in the shard merge
+        self._tombstones = np.zeros(0, np.int64)
+        self._tomb_mask = None  # jnp bool [n_docs + 1] when non-empty
+        self._shard_tombs = [0] * cfg.n_shards
         self.plans = ShardedPlanCache(self)
         self._pipeline: serve_pipeline.Pipeline | None = None
 
@@ -321,6 +326,45 @@ class ShardedRetriever:
             value_format=fwd.value_format.name,
         )
 
+    # -- tombstones (mutable-index integration, DESIGN.md §10) ----------
+    def set_tombstones(self, ids) -> None:
+        """Install the live tombstone set: global doc ids whose
+        candidates must be masked to ``-inf`` in the shard merge (a
+        ``MutableRetriever`` over a sharded base routes deletes here).
+
+        Per-shard routing is by doc range: each shard's candidate
+        budget grows by ITS OWN tombstone count
+        (``k_local = min(n_local, k + tombs_s)``) so the shard still
+        surfaces ``k`` *live* candidates even when every tombstoned doc
+        outranks them — the parity-preserving extension of the
+        shard-smaller-than-k rule. Resident shards whose budget changed
+        are evicted (their compiled plans are stale; re-admission
+        recompiles, counted honestly)."""
+        ids = np.unique(np.asarray(ids, dtype=np.int64).reshape(-1))
+        if ids.size and (int(ids[0]) < 0 or int(ids[-1]) >= self.n_docs):
+            raise ValueError(
+                f"tombstone ids outside [0, {self.n_docs}): "
+                f"[{ids[0]}, {ids[-1]}]"
+            )
+        bounds = [sh.doc_lo for sh in self.shards] + [self.n_docs]
+        new_tombs = [int(c) for c in np.diff(np.searchsorted(ids, bounds))]
+        for s in list(self._resident):
+            if new_tombs[s] != self._shard_tombs[s]:
+                old = self._resident.pop(s)
+                self._evicted_compiles += old.plans.compiles
+                self.evictions += 1
+        self._shard_tombs = new_tombs
+        self._tombstones = ids
+        if ids.size:
+            # one extra slot so the out-of-corpus sentinel id n_docs
+            # indexes cleanly (and reads False: already masked)
+            mask = np.zeros(self.n_docs + 1, dtype=bool)
+            mask[ids] = True
+            self._tomb_mask = jnp.asarray(mask)
+        else:
+            self._tomb_mask = None
+        self._mesh_state = None  # the mesh path bakes k_local at trace
+
     # -- residency (the out-of-core core) -------------------------------
     def _shard_retriever(self, s: int) -> Retriever:
         """The per-shard sub-``Retriever``, admitted to the bounded
@@ -336,9 +380,14 @@ class ShardedRetriever:
         sh = self.shards[s]
         # a shard smaller than k serves its ENTIRE doc range as the
         # candidate list — the merge needs no more, and engines whose
-        # score vector is shard-sized (flat) cannot top-k past it
+        # score vector is shard-sized (flat) cannot top-k past it; live
+        # tombstones extend the budget by the shard's own dead count so
+        # k live candidates always survive the mask (set_tombstones)
         r = Retriever(
-            self.cfg.replace(n_shards=1, k=min(self.cfg.k, sh.n_docs)),
+            self.cfg.replace(
+                n_shards=1,
+                k=min(sh.n_docs, self.cfg.k + self._shard_tombs[s]),
+            ),
             sh.arrays,
             n_docs=sh.n_docs,
             dim=self.dim,
@@ -390,7 +439,15 @@ class ShardedRetriever:
         for s in range(self.cfg.n_shards):
             r = self._shard_retriever(s)
             ids, scores = r.plans.search(Q)
-            flat_i.append(self._global_ids(s, ids))
+            gids = self._global_ids(s, ids)
+            if self._tomb_mask is not None:
+                # tombstone filtering in the shard merge: dead global
+                # ids go to the out-of-corpus sentinel at -inf, exactly
+                # like padding — merge_topk masks both the same way
+                dead = jnp.take(self._tomb_mask, gids)
+                gids = jnp.where(dead, jnp.int32(self.n_docs), gids)
+                scores = jnp.where(dead, -jnp.inf, scores)
+            flat_i.append(gids)
             flat_s.append(scores)
         flat_i = jnp.concatenate(flat_i, axis=1)
         flat_s = jnp.concatenate(flat_s, axis=1)
@@ -414,6 +471,17 @@ class ShardedRetriever:
         driver over the stacked shard arrays, taken when the host has
         ≥ n_shards devices (unless ``use_mesh`` overrides)."""
         if self.use_mesh is False or self.cfg.n_shards == 1:
+            return None
+        if self._tomb_mask is not None:
+            # the mesh driver bakes per-shard k_local and the id maps at
+            # trace time; live tombstones would need a re-trace per
+            # mutation — serve sequentially until the next merge folds
+            # them into a fresh generation
+            if self.use_mesh:
+                raise ValueError(
+                    "use_mesh=True is incompatible with live tombstones; "
+                    "merge the tombstones into a new generation first"
+                )
             return None
         if self._mesh_state is not None:
             return self._mesh_state

@@ -1,0 +1,303 @@
+"""Live index mutation tests (DESIGN.md §10) — the ISSUE-8 acceptance
+suite:
+
+* **mutation parity** — for every engine × codec, a
+  ``MutableRetriever`` at {0, 1, 3} live delta segments (with
+  tombstones in base AND segments, plus an update-in-place) returns
+  BYTE-identical top-k ids and scores to an oracle ``Retriever.build``
+  over the post-mutation corpus, both before and after
+  merge/compaction (stable id ``live_ids[pos]`` ↔ oracle position).
+* **id semantics** — delete-then-reinsert serves the NEW rows under
+  the reused stable id without resurrecting the old copy;
+  update-in-place keeps the id; inserting a live id / deleting a dead
+  one fail loudly.
+* **shard boundaries** — tombstones over a sharded base route to the
+  owning shards by doc range (including whole-shard and
+  boundary-straddling deletes) and the shard merge masks them without
+  losing live candidates.
+* **crash injection** — a crash between the segment/generation write
+  and the atomic commit (``state.json`` / ``CURRENT`` flip) leaves the
+  previous state loadable via ``open_retriever``, and a retry
+  reclaims the orphan directory.
+* **cache staleness** — a ResultCache answer never survives a
+  mutation or a generation flip (epoch-tag invalidation), and the
+  fan-out plan is retired (``gen`` key component) on merge.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.forward_index import ForwardIndex
+from repro.core.layout import available_layouts
+from repro.data.synthetic import SyntheticConfig, generate_collection
+from repro.serve.api import (
+    ArtifactError,
+    Retriever,
+    RetrieverConfig,
+    available_engines,
+    open_retriever,
+)
+from repro.serve.segments import InjectedCrash, MutableRetriever
+
+#: budgets EXHAUSTIVE for the 50-doc collection (same recipe as the
+#: sharded suite): mutable fan-out and oracle see identical candidate
+#: sets, so the top-k must match byte-for-byte.
+ENGINE_PARAMS = {
+    "seismic": dict(cut=16, block_budget=512, n_probe=512, n_postings=10000,
+                    block_size=8),
+    "hnsw": dict(beam=64, iters=64, n_seeds=4, m=8, ef_construction=48),
+    "flat": {},
+}
+
+N_BASE = 40
+
+
+def _cfg(engine, codec="uncompressed", n_shards=1, k=10):
+    return RetrieverConfig(engine=engine, codec=codec, k=k, n_shards=n_shards,
+                           params=ENGINE_PARAMS[engine])
+
+
+@pytest.fixture(scope="module")
+def collection():
+    cfg = SyntheticConfig(
+        name="segments-test", dim=256, n_docs=50, n_queries=4,
+        doc_nnz_mean=24.0, query_nnz_mean=8.0, seed=7,
+    )
+    return generate_collection(cfg, value_format="f16")
+
+
+@pytest.fixture(scope="module")
+def queries(collection):
+    return np.stack(
+        [collection.query_dense(i) for i in range(collection.n_queries)]
+    )
+
+
+def _assert_oracle_parity(m, cfg, Q, label):
+    """Mutable top-k == oracle over the live corpus, byte-for-byte."""
+    live_fwd, live = m.live_corpus()
+    oracle = Retriever.build(live_fwd, cfg.replace(n_shards=1))
+    oi, osc = map(np.asarray, oracle.search(Q))
+    mi, ms = map(np.asarray, m.search(Q))
+    np.testing.assert_array_equal(mi, live[oi], err_msg=f"{label}: ids")
+    np.testing.assert_array_equal(ms, osc, err_msg=f"{label}: scores")
+
+
+@pytest.mark.parametrize("engine", available_engines())
+@pytest.mark.parametrize("codec", available_layouts())
+def test_mutation_parity_segment_sweep(collection, queries, engine, codec):
+    """0 → 1 → 3 live segments (tombstones in base and segments, one
+    update-in-place), parity at every step, then merge + parity."""
+    fwd = collection.fwd
+    cfg = _cfg(engine, codec, k=5)
+    m = MutableRetriever.create(fwd.slice(0, N_BASE), cfg)
+    assert len(m.segments) == 0
+    m.delete([3, 17])  # tombstones at 0 segments
+    _assert_oracle_parity(m, cfg, queries, f"{engine}/{codec} 0 segments")
+
+    m.insert([fwd.doc(i) for i in range(N_BASE, N_BASE + 4)])
+    assert len(m.segments) == 1
+    _assert_oracle_parity(m, cfg, queries, f"{engine}/{codec} 1 segment")
+
+    m.insert([fwd.doc(i) for i in range(44, 47)])
+    m.delete([41, 45])  # tombstones inside segments
+    m.update([fwd.doc(47)], ids=[10])  # → the third segment
+    assert len(m.segments) == 3
+    _assert_oracle_parity(m, cfg, queries, f"{engine}/{codec} 3 segments")
+
+    expect_live = m.live_ids()
+    m.merge()
+    assert len(m.segments) == 0 and m.generation == 1
+    np.testing.assert_array_equal(m.base_ids, expect_live)
+    _assert_oracle_parity(m, cfg, queries, f"{engine}/{codec} post-merge")
+
+
+def test_delete_then_reinsert_and_update_semantics(collection, queries):
+    fwd = collection.fwd
+    cfg = _cfg("flat", "streamvbyte", k=5)
+    m = MutableRetriever.create(fwd.slice(0, N_BASE), cfg)
+
+    # a live id cannot be inserted again without a delete
+    with pytest.raises(ValueError, match="still live"):
+        m.insert([fwd.doc(41)], ids=[7])
+    with pytest.raises(KeyError):
+        m.delete([N_BASE + 99])
+
+    # delete-then-reinsert under the same stable id serves the NEW
+    # content — the tombstoned base copy must not resurface
+    m.delete([7])
+    assert 7 not in set(m.live_ids())
+    m.insert([fwd.doc(44)], ids=[7])
+    assert 7 in set(m.live_ids())
+    _assert_oracle_parity(m, cfg, queries, "reinserted id")
+
+    # the served score for id 7 is the NEW row's score
+    c, v = fwd.doc(44)
+    q = np.zeros(fwd.dim, np.float32)
+    q[c] = 1.0
+    ids, scores = map(np.asarray, m.search(q[None, :]))
+    row = np.flatnonzero(ids[0] == 7)
+    assert row.size == 1
+    assert np.isclose(scores[0][row[0]], np.float32(v.sum()), rtol=1e-3)
+
+    # update-in-place: same id, double deletion of the old copy fails
+    m.update([fwd.doc(45)], ids=[7])
+    assert 7 in set(m.live_ids())
+    _assert_oracle_parity(m, cfg, queries, "updated id")
+    # the update's tombstone landed on the SEGMENT copy (newest wins):
+    # deleting once more kills the updated row, then the id is gone
+    m.delete([7])
+    with pytest.raises(KeyError):
+        m.delete([7])
+    assert m.n_live == N_BASE - 1
+    _assert_oracle_parity(m, cfg, queries, "after final delete")
+
+
+@pytest.mark.parametrize("engine", available_engines())
+def test_tombstone_masking_at_shard_boundaries(collection, queries, engine):
+    """Sharded base: deletes routed per shard by doc range — boundary
+    docs, a whole shard's range, and the id-space extremes — never
+    lose live candidates or resurrect dead ones."""
+    fwd = collection.fwd
+    cfg = _cfg(engine, "dotvbyte", n_shards=5, k=5)
+    m = MutableRetriever.create(fwd.slice(0, N_BASE), cfg)
+    base = m.base
+    ranges = [(sh.doc_lo, sh.doc_hi) for sh in base.shards]
+    # boundary docs of shard 1 + the WHOLE of shard 2 + the extremes
+    lo1, hi1 = ranges[1]
+    lo2, hi2 = ranges[2]
+    victims = sorted({0, lo1, hi1 - 1, *range(lo2, hi2), N_BASE - 1})
+    m.delete(victims)
+    _assert_oracle_parity(m, cfg, queries, f"{engine} shard-boundary dels")
+    # tombstones routed to their owning shards by doc range (installed
+    # lazily at fan-out time, so assert after the search)
+    assert sum(base._shard_tombs) == len(victims)
+    assert base._shard_tombs[2] == hi2 - lo2
+
+    # fold into generation 1 and mutate again: the fresh sharded base
+    # re-routes tombstones over its NEW doc ranges
+    m.merge()
+    m.delete([int(m.live_ids()[0])])
+    _assert_oracle_parity(m, cfg, queries, f"{engine} post-merge delete")
+
+
+def test_crash_between_write_and_flip_preserves_generation(
+    collection, queries, tmp_path
+):
+    fwd = collection.fwd
+    cfg = _cfg("flat", "bitpack", k=5)
+    root = tmp_path / "idx"
+    m = MutableRetriever.create(fwd.slice(0, N_BASE), cfg, root=root)
+    m.insert([fwd.doc(40)])
+    m.delete([5])
+    want_ids, want_sc = map(np.asarray, m.search(queries))
+
+    # crash between the segment write and the state.json commit: the
+    # orphan directory must be invisible to open and reclaimed on retry
+    with pytest.raises(InjectedCrash):
+        m.insert([fwd.doc(41)], _crash_before_commit=True)
+    r = open_retriever(root)
+    assert isinstance(r, MutableRetriever)
+    assert len(r.segments) == 1 and r.n_live == m.n_live
+    np.testing.assert_array_equal(np.asarray(r.search(queries)[0]), want_ids)
+    m.insert([fwd.doc(41)])  # retry reclaims segment_0001
+
+    # crash between the generation write and the CURRENT flip: the
+    # previous generation (with its segments + tombstones) still opens
+    with pytest.raises(InjectedCrash):
+        m.merge(crash_before_flip=True)
+    r = open_retriever(root)
+    assert r.generation == 0 and len(r.segments) == 2
+    a, b = map(np.asarray, r.search(queries))
+    c, d = map(np.asarray, m.search(queries))
+    np.testing.assert_array_equal(a, c)
+    np.testing.assert_array_equal(b, d)
+
+    # the retried merge flips cleanly; the reopened handle serves the
+    # new generation byte-identically
+    m.merge()
+    r = open_retriever(root)
+    assert r.generation == 1 and not r.segments
+    np.testing.assert_array_equal(
+        np.asarray(r.search(queries)[0]), np.asarray(m.search(queries)[0])
+    )
+
+    # a CURRENT pointing at a missing generation fails loudly
+    (root / "CURRENT").write_text("generation_0099")
+    with pytest.raises(ArtifactError, match="generation"):
+        open_retriever(root)
+
+
+def test_result_cache_staleness_and_plan_retirement(collection, queries):
+    """A cached answer must not survive a mutation or a generation
+    flip — the epoch-tag invalidation regression."""
+    fwd = collection.fwd
+    cfg = _cfg("flat", "uncompressed", k=5)
+    m = MutableRetriever.create(fwd.slice(0, N_BASE), cfg)
+    pipe = m.pipeline(cache_size=64, deadline_us=0.0)
+    q = queries[0]
+
+    t1 = pipe.submit(q); pipe.flush()
+    t2 = pipe.submit(q); pipe.flush()
+    assert t2.from_cache
+    ids_before = np.asarray(t1.ids)
+
+    # tombstone the top hit: the cached answer is now a lie
+    m.delete([int(ids_before[0])])
+    t3 = pipe.submit(q); pipe.flush()
+    assert not t3.from_cache, "cached answer survived a mutation"
+    assert int(np.asarray(t3.ids)[0]) != int(ids_before[0])
+    live_fwd, live = m.live_corpus()
+    oracle = Retriever.build(live_fwd, cfg)
+    oi, osc = map(np.asarray, oracle.search(q[None, :]))
+    np.testing.assert_array_equal(np.asarray(t3.ids), live[oi[0]])
+    np.testing.assert_array_equal(np.asarray(t3.scores), osc[0])
+    snap = pipe.snapshot()
+    assert snap["cache_invalidations"] >= 1
+    assert snap["cache_invalidated_entries"] >= 1
+
+    # generation flip: cache flushed again AND the fan-out plan retires
+    t4 = pipe.submit(q); pipe.flush()
+    assert t4.from_cache
+    retired_before = m.plans.retired
+    m.merge()
+    t5 = pipe.submit(q); pipe.flush()
+    assert not t5.from_cache, "cached answer survived a generation flip"
+    np.testing.assert_array_equal(np.asarray(t5.ids), np.asarray(t4.ids))
+    assert m.plans.retired > retired_before
+    key = m.plans.get(pipe.plans.bucket_for(1)).key
+    assert key.gen == f"g{m.generation}" and key.shard == "mut"
+
+
+def test_forward_index_concat_select_append():
+    """The merge primitives: concat/select/append round-trip the CSR
+    rows (values kept in the stored dtype, bytes untouched)."""
+    rng = np.random.default_rng(0)
+    docs = []
+    for _ in range(12):
+        n = int(rng.integers(0, 6))
+        docs.append((np.sort(rng.choice(64, size=n, replace=False)),
+                     rng.random(n).astype(np.float32)))
+    whole = ForwardIndex.from_docs(docs, dim=64, value_format="f16")
+    parts = [whole.slice(0, 5), whole.slice(5, 8), whole.slice(8, 12)]
+    cat = ForwardIndex.concat(parts)
+    np.testing.assert_array_equal(cat.components, whole.components)
+    np.testing.assert_array_equal(cat.values, whole.values)
+    np.testing.assert_array_equal(cat.offsets, whole.offsets)
+    assert parts[0].append(parts[1]).n_docs == 8
+
+    idx = np.array([11, 0, 7, 7, 3])
+    sel = whole.select(idx)
+    assert sel.n_docs == len(idx)
+    for r, src in enumerate(idx):
+        np.testing.assert_array_equal(sel.doc(r)[0], whole.doc(src)[0])
+        np.testing.assert_array_equal(sel.doc_raw_values(r),
+                                      whole.doc_raw_values(src))
+    with pytest.raises(ValueError):
+        whole.select(np.array([12]))
+    with pytest.raises(ValueError):
+        ForwardIndex.concat([whole,
+                             ForwardIndex.from_docs(docs, 32, "f16")])
+    with pytest.raises(ValueError):
+        ForwardIndex.concat([whole,
+                             ForwardIndex.from_docs(docs, 64, "f32")])
