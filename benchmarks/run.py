@@ -1,10 +1,10 @@
 """Benchmark entry point — one section per paper table + kernel/roofline
 extras. Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)
-and snapshots the kernel + serving + pipeline + scale + mutation
-families to machine-readable ``BENCH_kernels.json`` /
+and snapshots the kernel + serving + pipeline + scale + mutation +
+overlap families to machine-readable ``BENCH_kernels.json`` /
 ``BENCH_serve.json`` / ``BENCH_pipeline.json`` /
 ``BENCH_roofline.json`` / ``BENCH_scale.json`` /
-``BENCH_mutation.json`` at the repo root
+``BENCH_mutation.json`` / ``BENCH_overlap.json`` at the repo root
 (schema: name, µs, structured mode/codec, parsed derived metrics, git
 sha — see ``common.write_bench_json``) so the perf trajectory is
 diffable across PRs.
@@ -33,7 +33,7 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None,
               n_docs: int | None = None, scale_rows=None,
-              mutation_rows=None) -> None:
+              mutation_rows=None, overlap_rows=None) -> None:
     """Write the committed snapshots. ``mode`` (quick/fast/full) is
     recorded in the payload so the perf trajectory is only compared
     like-for-like (``n_docs`` likewise, for the kernel family — the
@@ -67,6 +67,9 @@ def _snapshot(kernel_rows, serve_rows, mode: str, pipeline_rows=None,
     if mutation_rows:
         write_bench_json(os.path.join(_ROOT, "BENCH_mutation.json"),
                          mutation_rows, meta={"mode": mode})
+    if overlap_rows:
+        write_bench_json(os.path.join(_ROOT, "BENCH_overlap.json"),
+                         overlap_rows, meta={"mode": mode})
 
 
 def _quick_smoke() -> int:
@@ -87,9 +90,10 @@ def _quick_smoke() -> int:
         return proc.returncode
 
     from . import (kernel_bench, table1_codecs, table2_seismic, table3_graph,
-                   table4_pipeline, table5_scale, table6_mutation)
+                   table4_pipeline, table5_scale, table6_mutation,
+                   table7_overlap)
 
-    print("# tiny table1/table2/table3/table4/table5/table6 + kernels…",
+    print("# tiny table1/table2/table3/table4/table5/table6/table7 + kernels…",
           file=sys.stderr, flush=True)
     rows = table1_codecs.run(n_docs=400, n_queries=2, rgb_iters=2)
     serve_rows = table2_seismic.run(n_docs=400, n_queries=4)
@@ -100,8 +104,10 @@ def _quick_smoke() -> int:
                                   n_requests=32)
     mutation_rows = table6_mutation.run(n_docs=1000, n_queries=16,
                                         n_requests=32)
+    overlap_rows = table7_overlap.run(n_docs=1000, n_queries=16,
+                                      n_requests=8)
     rows += serve_rows + kernel_rows + pipeline_rows + scale_rows
-    rows += mutation_rows
+    rows += mutation_rows + overlap_rows
     emit(rows)
     # a NaN latency means no sweep point reached the accuracy level —
     # or, for the pipeline/amortized-gate rows, that bucketed serving
@@ -114,7 +120,8 @@ def _quick_smoke() -> int:
     # snapshot only after the gate passes — a failing run must not
     # overwrite the committed trajectory with regression numbers
     _snapshot(kernel_rows, serve_rows, mode="quick", pipeline_rows=pipeline_rows,
-              n_docs=300, scale_rows=scale_rows, mutation_rows=mutation_rows)
+              n_docs=300, scale_rows=scale_rows, mutation_rows=mutation_rows,
+              overlap_rows=overlap_rows)
     print(f"# quick smoke OK ({len(rows)} rows)", file=sys.stderr)
     return 0
 
@@ -126,7 +133,7 @@ def main() -> None:
                     help="CI smoke: tier-1 pytest + tiny table1/table2/table3")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "table3", "table4", "table5",
-                             "table6", "kernel", "roofline"])
+                             "table6", "table7", "kernel", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -146,7 +153,7 @@ def main() -> None:
 
     from . import (kernel_bench, roofline, table1_codecs, table2_seismic,
                    table3_graph, table4_pipeline, table5_scale,
-                   table6_mutation)
+                   table6_mutation, table7_overlap)
 
     if args.fast:
         section("table1", lambda: table1_codecs.run(n_docs=1500, n_queries=2, rgb_iters=3))
@@ -159,6 +166,9 @@ def main() -> None:
         section("table6", lambda: table6_mutation.run(n_docs=1500,
                                                       n_queries=16,
                                                       n_requests=64))
+        section("table7", lambda: table7_overlap.run(n_docs=1200,
+                                                     n_queries=16,
+                                                     n_requests=8))
         section("kernel", lambda: kernel_bench.run(n_docs=800))
     else:
         section("table1", lambda: table1_codecs.run())
@@ -167,6 +177,7 @@ def main() -> None:
         section("table4", lambda: table4_pipeline.run())
         section("table5", lambda: table5_scale.run())
         section("table6", lambda: table6_mutation.run())
+        section("table7", lambda: table7_overlap.run())
         section("kernel", lambda: kernel_bench.run())
     section("roofline", roofline.run)
 
@@ -180,6 +191,7 @@ def main() -> None:
         n_docs=800 if args.fast else 2000,
         scale_rows=by_section.get("table5", []),
         mutation_rows=by_section.get("table6", []),
+        overlap_rows=by_section.get("table7", []),
     )
     emit(rows)
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)

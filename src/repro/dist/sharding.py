@@ -33,6 +33,7 @@ __all__ = [
     "to_shardings",
     "replicate",
     "index_mesh",
+    "tombstone_budget",
     "lm_param_specs",
     "kv_cache_spec",
     "gnn_batch_spec",
@@ -64,6 +65,24 @@ def index_mesh(n_shards: int, devices=None) -> Mesh | None:
         np.asarray(devices[:n_shards]).reshape(1, n_shards),
         ("data", "model"),
     )
+
+
+def tombstone_budget(k: int, n_local: int, n_tombstones: int) -> int:
+    """Per-shard candidate budget under live tombstones
+    (DESIGN.md §11): every shard surfaces ``k + n_tombstones``
+    candidates (capped at its padded size) so ``k`` LIVE docs survive
+    the merge's dead-doc mask even when every tombstoned doc outranks
+    them. Uniform across shards by construction — ``shard_map`` bakes
+    ONE ``k_local`` into the SPMD program, and byte-parity between the
+    mesh and sequential paths requires identical per-shard candidate
+    sets — so the budget (hence the trace) only changes when the
+    tombstone COUNT changes, never with the set's contents."""
+    if k < 1 or n_local < 1 or n_tombstones < 0:
+        raise ValueError(
+            f"invalid budget inputs: k={k}, n_local={n_local}, "
+            f"n_tombstones={n_tombstones}"
+        )
+    return min(n_local, k + n_tombstones)
 
 
 def to_shardings(mesh: Mesh, specs):

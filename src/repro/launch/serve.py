@@ -81,6 +81,9 @@ def _pipeline_loadgen(retriever, Q, args, rng) -> str:
 
     pipe = retriever.pipeline(deadline_us=args.deadline_us,
                               cache_size=args.cache_size)
+    # compile cost out of the measured trace (benchmarks/common.py
+    # warmup discipline): p50/p95/p99 below cover warm dispatches only
+    warm = pipe.warm()
     gap = 1.0 / args.trace_qps if args.trace_qps > 0 else 0.0
     tickets = []
     for qi in trace:
@@ -95,7 +98,10 @@ def _pipeline_loadgen(retriever, Q, args, rng) -> str:
             f"pipeline top-k ids diverge from direct search (query {qi})")
         assert np.array_equal(t.scores, direct_scores[qi]), (
             f"pipeline top-k scores diverge from direct search (query {qi})")
-    return ServeStats.summary(pipe.snapshot())
+    snap = pipe.snapshot()
+    return (f"{ServeStats.summary(snap)} "
+            f"warm_compiles={warm} "
+            f"trace_recompiles={snap['recompiles'] - warm}")
 
 
 def _mutate_loadgen(col, name, codec, args, rng) -> None:
@@ -107,9 +113,11 @@ def _mutate_loadgen(col, name, codec, args, rng) -> None:
     through the micro-batching pipeline and a CHECKPOINT: a fresh
     oracle ``Retriever.build`` over the current live corpus must match
     every burst response byte-for-byte (stable id ``live_ids[pos]`` ↔
-    oracle position ``pos``). A final ``merge()`` folds segments +
-    tombstones into a new generation and the parity check repeats
-    post-compaction. Raises AssertionError on any divergence."""
+    oracle position ``pos``). The final merge runs in the BACKGROUND
+    (DESIGN.md §11) with queries streaming through the commit; those
+    during-merge responses join the post-merge checkpoint (compaction
+    does not change the live corpus, so one oracle covers both sides
+    of the flip). Raises AssertionError on any divergence."""
     from repro.serve.api import Retriever, RetrieverConfig
     from repro.serve.pipeline import ServeStats, synthetic_trace
     from repro.serve.segments import MutableRetriever
@@ -155,7 +163,10 @@ def _mutate_loadgen(col, name, codec, args, rng) -> None:
             m.update([(c, v)], ids=[victim])
         return op
 
-    def burst_and_checkpoint(label: str) -> int:
+    def burst_and_checkpoint(label: str, pre=()) -> int:
+        # fresh segment/part plans compile on first touch — warm them
+        # out of the burst (same discipline as the --pipeline trace)
+        pipe.warm()
         trace = synthetic_trace(rng, max(8, args.requests // 4),
                                 Q.shape[0], repeat_frac=args.repeat_frac)
         tickets = []
@@ -166,14 +177,14 @@ def _mutate_loadgen(col, name, codec, args, rng) -> None:
         live_fwd, live = m.live_corpus()
         oracle = Retriever.build(live_fwd, cfg.replace(n_shards=1))
         oids, osc = map(np.asarray, oracle.search(Q))
-        for qi, t in zip(trace, tickets):
+        for qi, t in list(pre) + list(zip(trace, tickets)):
             assert np.array_equal(np.asarray(t.ids), live[oids[qi]]), (
                 f"{name}/{codec} {label}: mutable top-k ids diverge from "
                 f"the post-mutation oracle (query {qi})")
             assert np.array_equal(np.asarray(t.scores), osc[qi]), (
                 f"{name}/{codec} {label}: mutable top-k scores diverge "
                 f"from the post-mutation oracle (query {qi})")
-        return len(trace)
+        return len(pre) + len(trace)
 
     served = burst_and_checkpoint("pre-mutation")
     rounds, ops = 3, []
@@ -182,8 +193,18 @@ def _mutate_loadgen(col, name, codec, args, rng) -> None:
         hi = (args.mutations * (r + 1)) // rounds
         ops += [mutate_one() for _ in range(lo, hi)]
         served += burst_and_checkpoint(f"round {r + 1}")
-    m.merge()
-    served += burst_and_checkpoint("post-merge")
+    # background compaction with queries streaming THROUGH the commit
+    # (DESIGN.md §11): responses served while the merge builds + flips
+    # join the post-merge parity set — compaction must not perturb them
+    handle = m.merge(background=True)
+    during = []
+    while not handle.done() and len(during) < 4 * args.requests:
+        pipe.poll()
+        qi = int(rng.integers(Q.shape[0]))
+        during.append((qi, pipe.submit(Q[qi])))
+    pipe.flush()
+    handle.result()
+    served += burst_and_checkpoint("post-merge", pre=during)
     snap = pipe.snapshot()
     # one epoch invalidation per mutated round + one for the merge
     rounds = min(args.mutations, rounds)
@@ -194,7 +215,8 @@ def _mutate_loadgen(col, name, codec, args, rng) -> None:
 
     mix = ",".join(f"{k}={v}" for k, v in sorted(Counter(ops).items()))
     print(f"{name:8s} codec={codec:13s} mutation parity OK "
-          f"({served} responses, {args.mutations} mutations [{mix}], "
+          f"({served} responses, {len(during)} during background merge, "
+          f"{args.mutations} mutations [{mix}], "
           f"{len(m.base_ids)} docs after merge, gen={m.generation}) "
           f"[{ServeStats.summary(snap)}]")
 
@@ -261,6 +283,10 @@ def main() -> None:
     ap.add_argument("--max-resident", type=int, default=None,
                     help="bound on simultaneously-resident shards "
                          "(sequential sharded path; default: all)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the background shard prefetcher on "
+                         "the sequential sharded path (DESIGN.md §11); "
+                         "every rotation then pages in on the hot path")
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--n-queries", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -346,6 +372,8 @@ def main() -> None:
                     retriever, "max_resident"
                 ):
                     retriever.max_resident = args.max_resident
+                if args.no_prefetch and hasattr(retriever, "prefetch"):
+                    retriever.prefetch = False
                 # the backend is a serving choice, not an index format
                 # (DESIGN.md §7): an explicit --backend re-wraps the
                 # loaded arrays under the requested path (monolithic
@@ -369,6 +397,8 @@ def main() -> None:
                     retriever, "max_resident"
                 ):
                     retriever.max_resident = args.max_resident
+                if args.no_prefetch and hasattr(retriever, "prefetch"):
+                    retriever.prefetch = False
             if args.pipeline:
                 rng = np.random.default_rng(args.seed + 1)
                 summary = _pipeline_loadgen(retriever, Q, args, rng)

@@ -49,15 +49,28 @@ engine × codec × backend.
 
 The wall clock is injectable (``clock=``) so deadline semantics are
 testable with a fake clock; production uses ``time.perf_counter``.
+
+Threading model (DESIGN.md §11): every layer here is safe to drive
+from multiple threads — ``PlanCache.get`` creates plans under a lock,
+``ResultCache`` serializes get/put/invalidate, ``ServeStats`` guards
+its counters, and ``Pipeline`` holds one scheduler lock across
+admission/dispatch (one dispatcher at a time; submitters from other
+threads queue on the lock, never on a torn queue). The overlap
+counters (``prefetch_hits``/``prefetch_misses``/``merge_wall_us``/
+``blocked_swap_us``) are synced off the serving stack at snapshot
+time, so the prefetch and background-merge wins are observable, not
+just benchmarked.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict, deque
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -169,13 +182,41 @@ class SearchPlan:
     the bucket shape, run the jit'd engine ``search_batch``, slice the
     padding back off. Padded slots carry the zero query — ``vmap``
     keeps per-query results independent, so padding never perturbs the
-    real rows (asserted by the parity suite)."""
+    real rows (asserted by the parity suite).
 
-    __slots__ = ("key", "_fn")
+    ``warm(dim)`` ahead-of-time compiles the bucket-shaped executable
+    (``jit.lower(...).compile()``) without running a search — the
+    prefetcher (DESIGN.md §11) stages compiles off the serving hot
+    path. Calls whose padded batch matches the warmed shape/dtype run
+    the AOT executable directly; anything else falls back to ordinary
+    jit dispatch (which shares XLA's compilation cache, so nothing
+    compiles twice)."""
+
+    __slots__ = ("key", "_fn", "_compiled", "_warm_sig", "_lock")
 
     def __init__(self, key: PlanKey, fn: Callable):
         self.key = key
         self._fn = fn
+        self._compiled: Optional[Callable] = None
+        self._warm_sig: Optional[Tuple[int, int, np.dtype]] = None
+        self._lock = threading.Lock()
+
+    def warm(self, dim: int, dtype=jnp.float32) -> bool:
+        """AOT-compile this plan for ``[bucket, dim]`` batches of
+        ``dtype``. Idempotent; returns True iff a compile happened.
+        Only jit-backed plans can lower — facade plans (sharded /
+        mutable fan-out dispatch through sub-plans) return False and
+        are warmed by executing instead (``Pipeline.warm``)."""
+        if not hasattr(self._fn, "lower"):
+            return False
+        with self._lock:
+            if self._compiled is not None:
+                return False
+            spec = jax.ShapeDtypeStruct((self.key.bucket, int(dim)), dtype)
+            compiled = self._fn.lower(spec).compile()
+            self._warm_sig = (self.key.bucket, int(dim), np.dtype(dtype))
+            self._compiled = compiled
+            return True
 
     def __call__(self, Q) -> Tuple[jnp.ndarray, jnp.ndarray]:
         Q = jnp.asarray(Q)
@@ -186,7 +227,11 @@ class SearchPlan:
             Q = jnp.concatenate(
                 [Q, jnp.zeros((bucket - n, Q.shape[1]), Q.dtype)]
             )
-        ids, scores = self._fn(Q)
+        fn = self._fn
+        if (self._compiled is not None
+                and (bucket, Q.shape[1], np.dtype(Q.dtype)) == self._warm_sig):
+            fn = self._compiled
+        ids, scores = fn(Q)
         return ids[:n], scores[:n]
 
 
@@ -226,6 +271,7 @@ class PlanCache:
         )
         self._plans: Dict[int, SearchPlan] = {}
         self.compiles = 0
+        self._lock = threading.Lock()
 
     def bucket_for(self, n: int) -> int:
         """Smallest covering bucket; beyond the largest, the next power
@@ -241,13 +287,15 @@ class PlanCache:
         """The plan for ``bucket``, compiled on first request. Ad hoc
         beyond-the-largest buckets get a cached plan too, but the
         configured bucket SET stays fixed — a one-off oversized batch
-        must not raise the scheduler's dispatch threshold."""
-        plan = self._plans.get(bucket)
-        if plan is None:
-            plan = SearchPlan(self._key(bucket=bucket), self._dispatch)
-            self._plans[bucket] = plan
-            self.compiles += 1
-        return plan
+        must not raise the scheduler's dispatch threshold. Thread-safe:
+        concurrent first requests for one bucket create one plan."""
+        with self._lock:
+            plan = self._plans.get(bucket)
+            if plan is None:
+                plan = SearchPlan(self._key(bucket=bucket), self._dispatch)
+                self._plans[bucket] = plan
+                self.compiles += 1
+            return plan
 
     def search(self, Q) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Pad ``Q`` to its covering bucket and run the warm plan.
@@ -314,28 +362,35 @@ class ResultCache:
         self.epoch: int = 0
         self.invalidations = 0
         self.invalidated_entries = 0
+        # get/put/invalidate race between serving threads and a
+        # background-merge commit (DESIGN.md §11); RLock so a holder
+        # can re-enter through the property accessors
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._items)
+        with self._lock:
+            return len(self._items)
 
     def get(self, key: bytes) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-        self.lookups += 1
-        got = self._items.get(key)
-        if got is None:
-            return None
-        self._items.move_to_end(key)
-        self.hits += 1
-        return got
+        with self._lock:
+            self.lookups += 1
+            got = self._items.get(key)
+            if got is None:
+                return None
+            self._items.move_to_end(key)
+            self.hits += 1
+            return got
 
     def put(self, key: bytes, ids: np.ndarray, scores: np.ndarray) -> None:
         if self.capacity == 0:
             return
         ids, scores = np.array(ids), np.array(scores)  # own the memory
         ids.flags.writeable = scores.flags.writeable = False
-        self._items[key] = (ids, scores)
-        self._items.move_to_end(key)
-        while len(self._items) > self.capacity:
-            self._items.popitem(last=False)
+        with self._lock:
+            self._items[key] = (ids, scores)
+            self._items.move_to_end(key)
+            while len(self._items) > self.capacity:
+                self._items.popitem(last=False)
 
     def invalidate(self, epoch: Optional[int] = None) -> int:
         """Flush every entry; returns how many were dropped.
@@ -345,14 +400,17 @@ class ResultCache:
         flush happens exactly once per index change, not per lookup.
         An empty flush still counts as an invalidation: the caller
         declared the previous state dead, whether or not anything was
-        cached under it."""
-        n = len(self._items)
-        self._items.clear()
-        self.invalidations += 1
-        self.invalidated_entries += n
-        if epoch is not None:
-            self.epoch = int(epoch)
-        return n
+        cached under it. Atomic: a concurrent ``get`` sees either the
+        pre-flush entries (tagged stale by the epoch check upstream) or
+        an empty cache, never a torn map."""
+        with self._lock:
+            n = len(self._items)
+            self._items.clear()
+            self.invalidations += 1
+            self.invalidated_entries += n
+            if epoch is not None:
+                self.epoch = int(epoch)
+            return n
 
     @property
     def hit_rate(self) -> float:
@@ -373,7 +431,11 @@ class ServeStats:
     pipeline must not grow without bound, and recent percentiles are
     the ones that matter operationally). ``snapshot()`` returns one
     flat dict: qps, p50/p95/p99_us, cache_hit_rate, n_queries,
-    dispatches + occupancy per bucket, recompiles."""
+    dispatches + occupancy per bucket, recompiles, and the overlap
+    counters (``prefetch_hits/prefetch_misses`` from the sharded
+    prefetcher, ``merge_wall_us/blocked_swap_us`` from background
+    compaction — DESIGN.md §11). Recording is lock-guarded so serving
+    threads and a background merge can feed one stats block."""
 
     def __init__(self, clock: Callable[[], float], window: int = 8192):
         self._clock = clock
@@ -382,30 +444,74 @@ class ServeStats:
         self.latencies_us = deque(maxlen=window)
         self.dispatches: Dict[int, int] = {}  # bucket → dispatch count
         self.occupancy: Dict[int, int] = {}  # bucket → Σ real queries
+        # overlap counters (DESIGN.md §11) — synced off the serving
+        # stack by ``sync_overlap`` / set directly by owners
+        self.prefetch_hits = 0       # shard rotations served from the staged buffer
+        self.prefetch_misses = 0     # rotations that paid page-in on the hot path
+        self.merge_wall_us = 0.0     # Σ background-merge build wall-clock
+        self.blocked_swap_us = 0.0   # Σ time queries were blocked on commit swaps
+        self._lock = threading.RLock()
+
+    def reset_clock(self) -> None:
+        """Restart the QPS clock (e.g. after ``Pipeline.warm`` so the
+        warmup wall-clock doesn't dilute the measured trace)."""
+        with self._lock:
+            self.t_start = self._clock()
 
     def record_dispatch(self, bucket: int, n_real: int) -> None:
-        self.dispatches[bucket] = self.dispatches.get(bucket, 0) + 1
-        self.occupancy[bucket] = self.occupancy.get(bucket, 0) + n_real
+        with self._lock:
+            self.dispatches[bucket] = self.dispatches.get(bucket, 0) + 1
+            self.occupancy[bucket] = self.occupancy.get(bucket, 0) + n_real
 
     def record_query(self, latency_us: float) -> None:
-        self.n_queries += 1
-        self.latencies_us.append(latency_us)
+        with self._lock:
+            self.n_queries += 1
+            self.latencies_us.append(latency_us)
 
     def percentile(self, p: float) -> float:
-        if not self.latencies_us:
-            return float("nan")
-        return float(np.percentile(np.asarray(list(self.latencies_us)), p))
+        with self._lock:
+            if not self.latencies_us:
+                return float("nan")
+            samples = np.asarray(list(self.latencies_us))
+        return float(np.percentile(samples, p))
+
+    def sync_overlap(self, retriever) -> None:
+        """Pull the overlap counters off the serving stack: prefetch
+        hits/misses live on a ``ShardedRetriever`` (possibly the base
+        of a ``MutableRetriever``), merge/swap timings on a
+        ``MutableRetriever``. Objects without the attributes contribute
+        zero, so this is safe over any retriever."""
+        srcs = [retriever, getattr(retriever, "base", None)]
+        srcs = [r for r in srcs if r is not None]
+        with self._lock:
+            self.prefetch_hits = sum(
+                int(getattr(r, "prefetch_hits", 0)) for r in srcs)
+            self.prefetch_misses = sum(
+                int(getattr(r, "prefetch_misses", 0)) for r in srcs)
+            self.merge_wall_us = sum(
+                float(getattr(r, "merge_wall_us", 0.0)) for r in srcs)
+            self.blocked_swap_us = sum(
+                float(getattr(r, "blocked_swap_us", 0.0)) for r in srcs)
 
     def snapshot(self, cache: Optional[ResultCache] = None,
                  plans: Optional[PlanCache] = None) -> dict:
-        elapsed = max(self._clock() - self.t_start, 1e-9)
-        occ = {
-            b: self.occupancy[b] / (b * self.dispatches[b])
-            for b in sorted(self.dispatches)
-        }
+        with self._lock:
+            elapsed = max(self._clock() - self.t_start, 1e-9)
+            dispatches = dict(sorted(self.dispatches.items()))
+            occ = {
+                b: self.occupancy[b] / (b * dispatches[b])
+                for b in dispatches
+            }
+            overlap = {
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_misses": self.prefetch_misses,
+                "merge_wall_us": self.merge_wall_us,
+                "blocked_swap_us": self.blocked_swap_us,
+            }
+            n_queries = self.n_queries
         return {
-            "n_queries": self.n_queries,
-            "qps": self.n_queries / elapsed,
+            "n_queries": n_queries,
+            "qps": n_queries / elapsed,
             "p50_us": self.percentile(50),
             "p95_us": self.percentile(95),
             "p99_us": self.percentile(99),
@@ -416,9 +522,10 @@ class ServeStats:
             "cache_invalidated_entries": (
                 cache.invalidated_entries if cache is not None else 0
             ),
-            "dispatches": dict(sorted(self.dispatches.items())),
+            "dispatches": dispatches,
             "bucket_occupancy": occ,
             "recompiles": plans.compiles if plans is not None else 0,
+            **overlap,
         }
 
     @staticmethod
@@ -427,13 +534,21 @@ class ServeStats:
             f"b{b}×{snap['dispatches'][b]}@{snap['bucket_occupancy'][b]:.0%}"
             for b in snap["dispatches"]
         )
-        return (
+        out = (
             f"served={snap['n_queries']} qps={snap['qps']:.0f} "
             f"p50={snap['p50_us']:.0f}µs p95={snap['p95_us']:.0f}µs "
             f"p99={snap['p99_us']:.0f}µs hit_rate={snap['cache_hit_rate']:.0%} "
             f"invalidations={snap.get('cache_invalidations', 0)} "
             f"recompiles={snap['recompiles']} buckets[{occ}]"
         )
+        pf = snap.get("prefetch_hits", 0) + snap.get("prefetch_misses", 0)
+        if pf:
+            out += (f" prefetch={snap['prefetch_hits']}h/"
+                    f"{snap['prefetch_misses']}m")
+        if snap.get("merge_wall_us", 0.0):
+            out += (f" merge_wall={snap['merge_wall_us'] / 1e3:.0f}ms"
+                    f" blocked_swap={snap['blocked_swap_us']:.0f}µs")
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -532,54 +647,83 @@ class Pipeline:
         self._clock = clock
         self.stats = ServeStats(clock)
         self._queue: List[PendingQuery] = []
+        # one scheduler lock across admission + dispatch: submitters
+        # from other threads serialize here, so the queue is never torn
+        # and at most one dispatch runs at a time (DESIGN.md §11);
+        # RLock because submit → _dispatch re-enters
+        self._lock = threading.RLock()
+
+    # -- warmup ---------------------------------------------------------
+    def warm(self) -> int:
+        """Pre-build every configured bucket's plan by executing a
+        zero-query batch through it — compile cost moves out of the
+        measured trace, the same discipline as ``benchmarks/common.py``
+        ``timeit_us(warmup=…)``. Bypasses stats and the result cache
+        (the zero query would otherwise pollute both) and restarts the
+        QPS clock. Returns the number of plans the warmup created
+        (recompiles during the subsequent trace stay visible in
+        ``snapshot()['recompiles']`` on top of this baseline)."""
+        dim = int(self.retriever.dim)
+        before = self.plans.compiles
+        for b in self.plans.buckets:
+            plan = self.plans.get(b)
+            np.asarray(plan(np.zeros((1, dim), np.float32))[0])
+        self.stats.reset_clock()
+        return self.plans.compiles - before
 
     # -- admission ------------------------------------------------------
     def submit(self, q) -> PendingQuery:
         q = np.asarray(q, dtype=np.float32)
         now = self._clock()
-        # epoch sync: a mutable retriever bumps ``epoch`` on every index
-        # change (insert/delete/merge); any cached answer predating the
-        # bump is stale and must not be served (DESIGN.md §10)
-        ep = getattr(self.retriever, "epoch", None)
-        if ep is not None and ep != self.cache.epoch:
-            self.cache.invalidate(epoch=ep)
-        # key computation is an O(dim) scan — skip it entirely when the
-        # cache is disabled (the strict-exactness path stays lean)
-        caching = self.cache.capacity > 0
-        key = quantized_query_key(q, self.key_dtype) if caching else b""
-        ticket = PendingQuery(self, q, key, now)
-        if caching:
-            hit = self.cache.get(ticket.key)
-            if hit is not None:
-                ticket.from_cache = True
-                ticket._complete(hit[0], hit[1], self._clock(), self.stats)
-                return ticket
-        self._queue.append(ticket)
-        if len(self._queue) >= self.plans.buckets[-1]:
-            self._dispatch()
-        return ticket
+        with self._lock:
+            # epoch sync: a mutable retriever bumps ``epoch`` on every
+            # index change (insert/delete/merge commit); any cached
+            # answer predating the bump is stale and must not be served
+            # (DESIGN.md §10) — under the scheduler lock, so a commit
+            # landing mid-admission can't interleave a stale hit
+            ep = getattr(self.retriever, "epoch", None)
+            if ep is not None and ep != self.cache.epoch:
+                self.cache.invalidate(epoch=ep)
+            # key computation is an O(dim) scan — skip it entirely when
+            # the cache is disabled (the strict-exactness path stays lean)
+            caching = self.cache.capacity > 0
+            key = quantized_query_key(q, self.key_dtype) if caching else b""
+            ticket = PendingQuery(self, q, key, now)
+            if caching:
+                hit = self.cache.get(ticket.key)
+                if hit is not None:
+                    ticket.from_cache = True
+                    ticket._complete(hit[0], hit[1], self._clock(), self.stats)
+                    return ticket
+            self._queue.append(ticket)
+            if len(self._queue) >= self.plans.buckets[-1]:
+                self._dispatch()
+            return ticket
 
     # -- scheduling -----------------------------------------------------
     def poll(self) -> int:
         """Fire the deadline if the oldest queued query has expired;
         returns how many queries were dispatched."""
-        if not self._queue:
+        with self._lock:
+            if not self._queue:
+                return 0
+            waited_us = 1e6 * (self._clock() - self._queue[0].t_submit)
+            if waited_us >= self.deadline_us:
+                return self._dispatch()
             return 0
-        waited_us = 1e6 * (self._clock() - self._queue[0].t_submit)
-        if waited_us >= self.deadline_us:
-            return self._dispatch()
-        return 0
 
     def flush(self) -> int:
         """Dispatch every queued query (possibly several buckets)."""
-        n = 0
-        while self._queue:
-            n += self._dispatch()
-        return n
+        with self._lock:
+            n = 0
+            while self._queue:
+                n += self._dispatch()
+            return n
 
     def _dispatch(self) -> int:
         """Coalesce the queue head into its smallest covering bucket,
-        run the plan, de-multiplex per-query top-k, feed the cache."""
+        run the plan, de-multiplex per-query top-k, feed the cache.
+        Callers hold ``_lock``."""
         if not self._queue:
             return 0
         cap = self.plans.buckets[-1]
@@ -613,4 +757,5 @@ class Pipeline:
         return ids, scores
 
     def snapshot(self) -> dict:
+        self.stats.sync_overlap(self.retriever)
         return self.stats.snapshot(cache=self.cache, plans=self.plans)

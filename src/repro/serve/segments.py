@@ -59,6 +59,8 @@ import json
 import os
 import pathlib
 import shutil
+import threading
+import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -74,6 +76,7 @@ from .sharded import ShardedRetriever
 __all__ = [
     "InjectedCrash",
     "DeltaSegment",
+    "MergeHandle",
     "MutablePlanCache",
     "MutableRetriever",
     "open_mutable",
@@ -95,6 +98,58 @@ class InjectedCrash(RuntimeError):
     ``crash_before_flip``) to simulate a process death between the
     payload write and the atomic commit — the window the crash-safety
     tests pin down."""
+
+
+class MergeHandle:
+    """Handle on a background compaction (``merge(background=True)``,
+    DESIGN.md §11): the generation build runs on a worker thread while
+    queries keep serving generation N; ``result()`` joins and returns
+    the new base (re-raising anything the merge raised — an injected
+    crash surfaces here, not in the serving threads).
+
+    The worker demotes itself to a higher nice value (per-thread on
+    Linux), so on a saturated host the compaction soaks up idle cycles
+    between query bursts instead of time-slicing evenly against the
+    serving path — the standard background-maintenance discipline."""
+
+    #: nice increment for the merge worker (0 disables the demotion)
+    NICENESS = 10
+
+    def __init__(self, run):
+        self._result = None
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, args=(run,), name="mutable-merge", daemon=True
+        )
+        self._thread.start()
+
+    def _run(self, run) -> None:
+        try:
+            if self.NICENESS:
+                # Linux scopes setpriority to a single thread when
+                # given a thread id; elsewhere this raises and the
+                # merge simply runs at normal priority
+                os.setpriority(
+                    os.PRIO_PROCESS, threading.get_native_id(),
+                    os.getpriority(os.PRIO_PROCESS, 0) + self.NICENESS,
+                )
+        except (AttributeError, OSError):
+            pass
+        try:
+            self._result = run()
+        except BaseException as e:  # surfaces via result()
+            self._exc = e
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def result(self, timeout: Optional[float] = None):
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"merge still running after {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
 
 
 def _atomic_write(path: pathlib.Path, text: str) -> None:
@@ -189,6 +244,7 @@ class MutablePlanCache:
         self.k = cfg.k
         self._plans: Dict[int, serve_pipeline.SearchPlan] = {}
         self.retired = 0
+        self._lock = threading.Lock()
 
     bucket_for = serve_pipeline.PlanCache.bucket_for
 
@@ -197,23 +253,24 @@ class MutablePlanCache:
         return self.retriever._part_compiles()
 
     def get(self, bucket: int) -> serve_pipeline.SearchPlan:
-        gen = f"g{self.retriever.generation}"
-        plan = self._plans.get(bucket)
-        if plan is not None and plan.key.gen != gen:
-            self.retired += 1
-            plan = None
-        if plan is None:
-            from repro.kernels.modes import backend_mode, resolve_mode
+        with self._lock:
+            gen = f"g{self.retriever.generation}"
+            plan = self._plans.get(bucket)
+            if plan is not None and plan.key.gen != gen:
+                self.retired += 1
+                plan = None
+            if plan is None:
+                from repro.kernels.modes import backend_mode, resolve_mode
 
-            cfg = self.retriever.cfg
-            key = serve_pipeline.PlanKey(
-                cfg.engine, cfg.codec, cfg.backend,
-                resolve_mode(backend_mode(cfg.backend)), cfg.k, bucket,
-                shard="mut", gen=gen,
-            )
-            plan = serve_pipeline.SearchPlan(key, self.retriever._dispatch)
-            self._plans[bucket] = plan
-        return plan
+                cfg = self.retriever.cfg
+                key = serve_pipeline.PlanKey(
+                    cfg.engine, cfg.codec, cfg.backend,
+                    resolve_mode(backend_mode(cfg.backend)), cfg.k, bucket,
+                    shard="mut", gen=gen,
+                )
+                plan = serve_pipeline.SearchPlan(key, self.retriever._dispatch)
+                self._plans[bucket] = plan
+            return plan
 
     def search(self, Q):
         Q = jnp.asarray(Q)
@@ -280,6 +337,20 @@ class MutableRetriever:
         self._handles: Optional[List[_Part]] = None
         self._wrappers: Dict[object, Retriever] = {}
         self._retired_compiles = 0
+        # threading model (DESIGN.md §11): single writer — every
+        # mutation (insert/delete/update/merge) holds _write_lock for
+        # its whole run, so a background merge freezes the logical
+        # corpus without read-side locks; _state_lock guards only the
+        # brief in-memory windows readers race (part-list build, the
+        # post-flip field swap, tombstone-mask flips)
+        self._write_lock = threading.RLock()
+        self._state_lock = threading.RLock()
+        #: overlap counters (surfaced via ServeStats.sync_overlap):
+        #: Σ merge build wall-clock, Σ commit-swap critical-section
+        #: wall-clock (the bound on how long any query can block on a
+        #: generation flip)
+        self.merge_wall_us = 0.0
+        self.blocked_swap_us = 0.0
         self.plans = MutablePlanCache(self)
         self._pipeline: serve_pipeline.Pipeline | None = None
 
@@ -368,6 +439,11 @@ class MutableRetriever:
         the segment artifact is written completely, then ``state.json``
         flips atomically — a crash in between leaves an orphan
         directory that open ignores and a retry reclaims."""
+        with self._write_lock:
+            return self._insert_locked(docs, ids, _crash_before_commit)
+
+    def _insert_locked(self, docs, ids, _crash_before_commit: bool
+                       ) -> np.ndarray:
         seg_fwd = (
             docs if isinstance(docs, ForwardIndex)
             else ForwardIndex.from_docs(docs, self.dim, self.value_format)
@@ -416,12 +492,14 @@ class MutableRetriever:
             np.savez(sdir / STORE_FILE, **_store_dict(seg_fwd, ids))
         if _crash_before_commit:
             raise InjectedCrash(f"crash before committing {name}")
-        self.segments.append(
-            DeltaSegment(ids=ids, fwd=seg_fwd, arrays=arrays,
-                         dead=np.zeros(n, bool))
-        )
-        self.next_id = max(self.next_id, int(ids.max()) + 1)
-        self._commit_state()
+        with self._state_lock:
+            self.segments.append(
+                DeltaSegment(ids=ids, fwd=seg_fwd, arrays=arrays,
+                             dead=np.zeros(n, bool))
+            )
+            self.next_id = max(self.next_id, int(ids.max()) + 1)
+            self._commit_memory()
+        self._write_state()
         return ids
 
     def delete(self, ids) -> None:
@@ -429,74 +507,138 @@ class MutableRetriever:
         if one is not live). Deletes touch only ``state.json`` — the
         segment/base payloads stay immutable."""
         ids = np.atleast_1d(np.asarray(ids, np.int64))
-        for i in ids:
-            hit = self._find_live(int(i))
-            if hit is None:
-                raise KeyError(f"doc id {int(i)} is not live")
-            kind, si, row = hit
-            if kind == "seg":
-                self.segments[si].dead[row] = True
-            else:
-                self.base_dead[row] = True
-        self._commit_state()
+        with self._write_lock:
+            with self._state_lock:
+                for i in ids:
+                    hit = self._find_live(int(i))
+                    if hit is None:
+                        raise KeyError(f"doc id {int(i)} is not live")
+                    kind, si, row = hit
+                    if kind == "seg":
+                        self.segments[si].dead[row] = True
+                    else:
+                        self.base_dead[row] = True
+                self._commit_memory()
+            self._write_state()
 
     def update(self, docs, ids) -> np.ndarray:
         """Update-in-place: tombstone the live copies, re-insert the
         new rows as a delta segment under the SAME stable ids."""
         ids = np.atleast_1d(np.asarray(ids, np.int64))
-        self.delete(ids)
-        return self.insert(docs, ids=ids)
+        with self._write_lock:
+            self.delete(ids)
+            return self.insert(docs, ids=ids)
 
-    def _commit_state(self) -> None:
+    def _commit_memory(self) -> None:
+        """In-memory commit of a mutation: epoch bump + part-list
+        invalidation, under ``_state_lock`` (callers hold it) so a
+        concurrent reader sees either the old or the new index state,
+        never a torn one."""
         self.epoch += 1
         self._handles = None
-        self._write_state()
 
     # -- merge / compaction ---------------------------------------------
-    def merge(self, *, crash_before_flip: bool = False):
+    def merge(self, *, crash_before_flip: bool = False,
+              background: bool = False):
         """Fold every segment + tombstone into a fresh base index and
         commit via the atomic generation flip: write
         ``generation_{g+1}/`` completely (base artifact, row store,
         ``state.json``), then atomically repoint ``CURRENT``. A crash
         before the flip (``crash_before_flip`` injects one) leaves the
         previous generation untouched and loadable; in-memory state
-        mutates only after the flip succeeds. Returns the new base."""
-        merged, new_ids = self.live_corpus()
-        if merged.n_docs == 0:
-            raise ValueError("merge would produce an empty corpus")
-        cfg = self.cfg
-        if cfg.n_shards > merged.n_docs:
-            # every shard must own ≥ 1 doc; a shrunken corpus falls
-            # back to fewer shards rather than failing the merge
-            cfg = cfg.replace(n_shards=max(1, merged.n_docs))
-        new_base = Retriever.build(merged, cfg)
-        next_gen = self.generation + 1
-        if self.root is not None:
-            gdir = self.root / GEN_DIR_FMT.format(next_gen)
-            if gdir.exists():  # orphan of a crashed earlier merge
-                shutil.rmtree(gdir)
-            self._write_generation(new_base, merged, new_ids, next_gen)
-            if crash_before_flip:
-                raise InjectedCrash(
-                    f"crash before flipping CURRENT to generation {next_gen}"
-                )
-            _atomic_write(
-                self.root / CURRENT_FILE, GEN_DIR_FMT.format(next_gen)
+        mutates only after the flip succeeds. Returns the new base.
+
+        ``background=True`` (DESIGN.md §11) runs the whole build on a
+        worker thread and returns a ``MergeHandle`` immediately:
+        queries keep serving generation N throughout (compaction does
+        not change the live corpus, so their answers stay correct and
+        oracle-identical), other writers block on the write lock, and
+        the commit swaps fields under ``_state_lock`` — a critical
+        section of plain assignments, timed into ``blocked_swap_us``.
+        The epoch bump makes the pipeline drop cached results on its
+        next admission, exactly as a foreground merge does. A
+        background merge also pre-builds the next generation's base
+        wrapper and AOT-warms its bucket plans on the worker thread, so
+        the first post-flip query pays a dispatch, not a compile."""
+        if background:
+            return MergeHandle(
+                lambda: self._merge_sync(crash_before_flip, prewarm=True)
             )
-        elif crash_before_flip:
-            raise InjectedCrash("crash before the in-memory generation flip")
-        # ---- memory commit (post-flip only) ----
-        self._retire_parts()
-        self.cfg = cfg
-        self.base = new_base
-        self.base_fwd = merged
-        self.base_ids = new_ids
-        self.base_dead = np.zeros(len(new_ids), bool)
-        self.segments = []
-        self.generation = next_gen
-        self.epoch += 1
-        self._handles = None
-        return new_base
+        return self._merge_sync(crash_before_flip)
+
+    def _merge_sync(self, crash_before_flip: bool, *, prewarm: bool = False):
+        with self._write_lock:
+            t0 = time.perf_counter()
+            merged, new_ids = self.live_corpus()
+            if merged.n_docs == 0:
+                raise ValueError("merge would produce an empty corpus")
+            cfg = self.cfg
+            if cfg.n_shards > merged.n_docs:
+                # every shard must own ≥ 1 doc; a shrunken corpus falls
+                # back to fewer shards rather than failing the merge
+                cfg = cfg.replace(n_shards=max(1, merged.n_docs))
+            new_base = Retriever.build(merged, cfg)
+            next_gen = self.generation + 1
+            if self.root is not None:
+                gdir = self.root / GEN_DIR_FMT.format(next_gen)
+                if gdir.exists():  # orphan of a crashed earlier merge
+                    shutil.rmtree(gdir)
+                self._write_generation(new_base, merged, new_ids, next_gen)
+                if crash_before_flip:
+                    raise InjectedCrash(
+                        f"crash before flipping CURRENT to generation "
+                        f"{next_gen}"
+                    )
+                _atomic_write(
+                    self.root / CURRENT_FILE, GEN_DIR_FMT.format(next_gen)
+                )
+            elif crash_before_flip:
+                raise InjectedCrash(
+                    "crash before the in-memory generation flip"
+                )
+            new_wrapper = None
+            if prewarm and not isinstance(new_base, ShardedRetriever):
+                # stage generation N+1's serving plans on THIS (worker)
+                # thread before the flip (DESIGN.md §11): build the
+                # post-merge base wrapper and AOT-compile its bucket
+                # plans, so the swap below installs warm executables and
+                # no query pays the first-touch compile of a fresh
+                # generation
+                k_b = min(new_base.n_docs, cfg.k)
+                new_wrapper = Retriever(
+                    cfg.replace(n_shards=1, k=k_b), new_base.arrays,
+                    n_docs=new_base.n_docs, dim=self.dim,
+                    value_scale=self.value_scale,
+                    value_format=self.value_format, shard="mut:base",
+                )
+                for b in self.plans.buckets:
+                    new_wrapper.plans.get(b).warm(int(self.dim))
+            # ---- memory commit (post-flip only): plain assignments
+            # under the state lock, so a concurrent reader sees either
+            # generation N or N+1 in full, never a mix ----
+            new_dead = np.zeros(len(new_ids), bool)
+            with self._state_lock:
+                # timed INSIDE the lock: this is the only window a
+                # reader can be blocked by the commit (waiting for the
+                # lock before it is ours measures readers blocking US,
+                # which is them making progress, not an outage)
+                t_swap = time.perf_counter()
+                self._retire_parts()
+                if new_wrapper is not None:
+                    self._wrappers["base"] = new_wrapper
+                self.cfg = cfg
+                self.base = new_base
+                self.base_fwd = merged
+                self.base_ids = new_ids
+                self.base_dead = new_dead
+                self.segments = []
+                self.generation = next_gen
+                self.epoch += 1
+                self._handles = None
+                self.blocked_swap_us += (
+                    time.perf_counter() - t_swap) * 1e6
+            self.merge_wall_us += (time.perf_counter() - t0) * 1e6
+            return new_base
 
     def _retire_parts(self) -> None:
         """Fold every live part's compile counter into the retired
@@ -577,43 +719,54 @@ class MutableRetriever:
         return jnp.asarray(m)
 
     def _parts(self) -> List[_Part]:
-        if self._handles is not None:
-            return self._handles
-        k = self.cfg.k
-        parts: List[_Part] = []
-        n_base = len(self.base_ids)
-        if isinstance(self.base, ShardedRetriever):
-            # the sharded base filters its own tombstones in the shard
-            # merge (per-shard routing by doc range) and already
-            # returns its top-k LIVE candidates — no budget extension
-            # needed at this level
-            self.base.set_tombstones(np.flatnonzero(self.base_dead))
-            parts.append(_Part(
-                self.base.plans,
-                self._idmap(self.base_ids, self.base_dead), n_base,
-            ))
-        else:
-            k_b = min(n_base, k + int(self.base_dead.sum()))
-            r = self._wrapper("base", self.base.arrays, n_base, k_b, "base")
-            parts.append(_Part(
-                r.plans, self._idmap(self.base_ids, self.base_dead), n_base,
-            ))
-        for i, s in enumerate(self.segments):
-            k_s = min(s.n_docs, k + int(s.dead.sum()))
-            r = self._wrapper(("seg", i), s.arrays, s.n_docs, k_s, f"seg{i}")
-            parts.append(_Part(
-                r.plans, self._idmap(s.ids, s.dead), s.n_docs,
-            ))
-        self._handles = parts
-        return parts
+        """The current fan-out part list, built (and memoized) under
+        ``_state_lock``: a reader gets a SNAPSHOT — a plain list whose
+        parts stay valid even if a merge commits mid-dispatch (the old
+        generation's arrays/plans live as long as the list does, and
+        compaction does not change the live corpus, so in-flight
+        queries against the old parts stay oracle-correct)."""
+        with self._state_lock:
+            if self._handles is not None:
+                return self._handles
+            k = self.cfg.k
+            parts: List[_Part] = []
+            n_base = len(self.base_ids)
+            if isinstance(self.base, ShardedRetriever):
+                # the sharded base filters its own tombstones in the
+                # shard merge (uniform tombstone-extended budgets) and
+                # already returns its top-k LIVE candidates — no budget
+                # extension needed at this level
+                self.base.set_tombstones(np.flatnonzero(self.base_dead))
+                parts.append(_Part(
+                    self.base.plans,
+                    self._idmap(self.base_ids, self.base_dead), n_base,
+                ))
+            else:
+                k_b = min(n_base, k + int(self.base_dead.sum()))
+                r = self._wrapper("base", self.base.arrays, n_base, k_b,
+                                  "base")
+                parts.append(_Part(
+                    r.plans, self._idmap(self.base_ids, self.base_dead),
+                    n_base,
+                ))
+            for i, s in enumerate(self.segments):
+                k_s = min(s.n_docs, k + int(s.dead.sum()))
+                r = self._wrapper(("seg", i), s.arrays, s.n_docs, k_s,
+                                  f"seg{i}")
+                parts.append(_Part(
+                    r.plans, self._idmap(s.ids, s.dead), s.n_docs,
+                ))
+            self._handles = parts
+            return parts
 
     def _part_compiles(self) -> int:
-        n = self._retired_compiles + sum(
-            r.plans.compiles for r in self._wrappers.values()
-        )
-        if isinstance(self.base, ShardedRetriever):
-            n += self.base.plans.compiles
-        return n
+        with self._state_lock:
+            n = self._retired_compiles + sum(
+                r.plans.compiles for r in self._wrappers.values()
+            )
+            if isinstance(self.base, ShardedRetriever):
+                n += self.base.plans.compiles
+            return n
 
     def _dispatch(self, Q):
         """One padded ``[bucket, dim]`` batch → merged stable-id top-k
@@ -621,9 +774,14 @@ class MutableRetriever:
         (dead rows and sentinels → -1 at -inf), sentinel-safe dedupe
         merge keyed on stable id — ties break toward the lower stable
         id, matching the oracle's positional tie-break over its
-        stable-id-ordered corpus."""
+        stable-id-ordered corpus. Parts and the id-space sentinel are
+        snapshotted together, so a merge committing mid-dispatch can't
+        mix generations within one batch."""
+        with self._state_lock:
+            parts = self._parts()
+            sentinel = self.next_id
         flat_i, flat_s = [], []
-        for p in self._parts():
+        for p in parts:
             ids, scores = p.plans.search(Q)
             valid = (ids >= 0) & (ids <= p.n_local)
             gids = jnp.take(p.idmap, jnp.clip(ids, 0, p.n_local))
@@ -640,7 +798,7 @@ class MutableRetriever:
                              constant_values=-jnp.inf)
         return api.merge_topk(
             flat_i, flat_s, self.cfg.k,
-            dedupe=True, n_docs_global=self.next_id,
+            dedupe=True, n_docs_global=sentinel,
         )
 
     # -- serving (the Retriever surface) --------------------------------

@@ -34,6 +34,17 @@ which ``plans.compiles`` keeps counting: recompiles are the honest
 cost of running out-of-core. ``resident_bytes()`` /
 ``peak_resident_bytes`` expose the quantity the LRU bounds
 (gated by ``benchmarks/table5_scale.py``).
+
+Prefetch (DESIGN.md §11): the sequential out-of-core loop stages the
+NEXT shard on a bounded worker pool while the device scores the
+current one — the staging slot is ONE explicit buffer on top of the
+``max_resident`` LRU (a classic double buffer: page-in + host→device
+transfer + an AOT plan warm happen off the hot path, and the shard
+that opens the next rotation is already resident-in-waiting).
+``prefetch_hits`` / ``prefetch_misses`` count rotations served from
+the staged buffer vs. rotations that paid admission on the critical
+path; staged-but-discarded work folds its compiles into the evicted
+counter, so recompile accounting stays honest either way.
 """
 
 from __future__ import annotations
@@ -42,9 +53,11 @@ import dataclasses
 import json
 import pathlib
 import struct
+import threading
 import zipfile
 from collections import OrderedDict
-from typing import Dict, Mapping, Optional, Sequence
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +81,23 @@ __all__ = [
 
 #: on-disk name of shard ``s`` inside a sharded artifact tree
 SHARD_DIR_FMT = "shard_{:04d}"
+
+# one bounded staging worker shared by every ShardedRetriever in the
+# process: staging tasks are independent and short, and a shared
+# daemon pool avoids spawning (and leaking) a thread per retriever —
+# tests build hundreds of them
+_PREFETCH_POOL: Optional[ThreadPoolExecutor] = None
+_PREFETCH_POOL_LOCK = threading.Lock()
+
+
+def _prefetch_pool() -> ThreadPoolExecutor:
+    global _PREFETCH_POOL
+    with _PREFETCH_POOL_LOCK:
+        if _PREFETCH_POOL is None:
+            _PREFETCH_POOL = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="shard-prefetch"
+            )
+        return _PREFETCH_POOL
 
 
 def shard_ranges(n_docs: int, n_shards: int) -> list[tuple[int, int]]:
@@ -215,6 +245,7 @@ class ShardedPlanCache:
         self.buckets = serve_pipeline.plan_buckets(cfg.batch_size, buckets)
         self.k = cfg.k
         self._plans: Dict[int, serve_pipeline.SearchPlan] = {}
+        self._lock = threading.Lock()
 
     # same covering-bucket policy as the monolithic cache
     bucket_for = serve_pipeline.PlanCache.bucket_for
@@ -222,26 +253,28 @@ class ShardedPlanCache:
     @property
     def compiles(self) -> int:
         r = self.retriever
-        return r._evicted_compiles + sum(
-            sr.plans.compiles for sr in r._resident.values()
-        )
+        with r._admit_lock:
+            return r._evicted_compiles + sum(
+                sr.plans.compiles for sr in r._resident.values()
+            )
 
     def get(self, bucket: int) -> serve_pipeline.SearchPlan:
-        plan = self._plans.get(bucket)
-        if plan is None:
-            from repro.kernels.modes import backend_mode, resolve_mode
+        with self._lock:
+            plan = self._plans.get(bucket)
+            if plan is None:
+                from repro.kernels.modes import backend_mode, resolve_mode
 
-            cfg = self.retriever.cfg
-            key = serve_pipeline.PlanKey(
-                cfg.engine, cfg.codec, cfg.backend,
-                resolve_mode(backend_mode(cfg.backend)), cfg.k, bucket,
-                shard=f"*/{cfg.n_shards}",
-            )
-            plan = serve_pipeline.SearchPlan(
-                key, self.retriever._dispatch_shards
-            )
-            self._plans[bucket] = plan
-        return plan
+                cfg = self.retriever.cfg
+                key = serve_pipeline.PlanKey(
+                    cfg.engine, cfg.codec, cfg.backend,
+                    resolve_mode(backend_mode(cfg.backend)), cfg.k, bucket,
+                    shard=f"*/{cfg.n_shards}",
+                )
+                plan = serve_pipeline.SearchPlan(
+                    key, self.retriever._dispatch_shards
+                )
+                self._plans[bucket] = plan
+            return plan
 
     def search(self, Q):
         Q = jnp.asarray(Q)
@@ -298,11 +331,29 @@ class ShardedRetriever:
         self.evictions = 0
         self.peak_resident_bytes = 0
         self._mesh_state = None
+        self._mesh_static = None  # stacked shard arrays (tombstone-free)
         #: live tombstones (mutable-index integration, DESIGN.md §10):
         #: sorted global doc ids masked to -inf in the shard merge
         self._tombstones = np.zeros(0, np.int64)
         self._tomb_mask = None  # jnp bool [n_docs + 1] when non-empty
         self._shard_tombs = [0] * cfg.n_shards
+        # per-shard serving constants, hoisted OUT of the dispatch
+        # rotation (admission must cost page-in + compile, not
+        # re-derived host-side setup): candidate budget + sub-config
+        # per shard, recomputed only when the tombstone set changes
+        self._shard_k = [min(sh.n_docs, cfg.k) for sh in self.shards]
+        self._shard_cfg = [
+            cfg.replace(n_shards=1, k=b) for b in self._shard_k
+        ]
+        #: overlap the sequential rotation with staging of the next
+        #: shard (DESIGN.md §11); flip off for the synchronous baseline
+        self.prefetch = True
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self._staged: Optional[Tuple[int, "Future[Retriever]"]] = None
+        # guards _resident/_staged/counters: the scheduler thread and
+        # direct .search callers race the staging worker's hand-off
+        self._admit_lock = threading.RLock()
         self.plans = ShardedPlanCache(self)
         self._pipeline: serve_pipeline.Pipeline | None = None
 
@@ -332,14 +383,20 @@ class ShardedRetriever:
         candidates must be masked to ``-inf`` in the shard merge (a
         ``MutableRetriever`` over a sharded base routes deletes here).
 
-        Per-shard routing is by doc range: each shard's candidate
-        budget grows by ITS OWN tombstone count
-        (``k_local = min(n_local, k + tombs_s)``) so the shard still
+        Every shard's candidate budget grows by the TOTAL tombstone
+        count — ``k_local = min(n_docs_s, k + n_tombs)``
+        (``dist.sharding.tombstone_budget``) — so each shard still
         surfaces ``k`` *live* candidates even when every tombstoned doc
-        outranks them — the parity-preserving extension of the
-        shard-smaller-than-k rule. Resident shards whose budget changed
-        are evicted (their compiled plans are stale; re-admission
-        recompiles, counted honestly)."""
+        outranks them: the parity-preserving extension of the
+        shard-smaller-than-k rule. The budget is deliberately UNIFORM
+        rather than per-shard-routed: the mesh path's shard_map bakes
+        ONE ``k_local`` across devices (SPMD), and dedupe-merging
+        engines tie-break by doc id over the gathered candidate strip,
+        so byte-parity between the sequential and mesh paths requires
+        both to surface identical per-shard candidate sets. Resident
+        (or staged) shards whose budget changed are evicted — their
+        compiled plans are stale; re-admission recompiles, counted
+        honestly."""
         ids = np.unique(np.asarray(ids, dtype=np.int64).reshape(-1))
         if ids.size and (int(ids[0]) < 0 or int(ids[-1]) >= self.n_docs):
             raise ValueError(
@@ -348,46 +405,50 @@ class ShardedRetriever:
             )
         bounds = [sh.doc_lo for sh in self.shards] + [self.n_docs]
         new_tombs = [int(c) for c in np.diff(np.searchsorted(ids, bounds))]
-        for s in list(self._resident):
-            if new_tombs[s] != self._shard_tombs[s]:
-                old = self._resident.pop(s)
-                self._evicted_compiles += old.plans.compiles
-                self.evictions += 1
-        self._shard_tombs = new_tombs
-        self._tombstones = ids
-        if ids.size:
-            # one extra slot so the out-of-corpus sentinel id n_docs
-            # indexes cleanly (and reads False: already masked)
-            mask = np.zeros(self.n_docs + 1, dtype=bool)
-            mask[ids] = True
-            self._tomb_mask = jnp.asarray(mask)
-        else:
-            self._tomb_mask = None
-        self._mesh_state = None  # the mesh path bakes k_local at trace
+        new_k = [
+            min(sh.n_docs, self.cfg.k + int(ids.size)) for sh in self.shards
+        ]
+        with self._admit_lock:
+            for s in list(self._resident):
+                if new_k[s] != self._shard_k[s]:
+                    old = self._resident.pop(s)
+                    self._evicted_compiles += old.plans.compiles
+                    self.evictions += 1
+            st = self._staged
+            if st is not None and new_k[st[0]] != self._shard_k[st[0]]:
+                # the staged build carries the old budget — retire it
+                # (compiles fold into the evicted counter, as always)
+                self._staged = None
+                self._evicted_compiles += st[1].result().plans.compiles
+            self._shard_tombs = new_tombs
+            self._shard_k = new_k
+            self._shard_cfg = [
+                self.cfg.replace(n_shards=1, k=b) for b in new_k
+            ]
+            self._tombstones = ids
+            if ids.size:
+                # one extra slot so the out-of-corpus sentinel id n_docs
+                # indexes cleanly (and reads False: already masked)
+                mask = np.zeros(self.n_docs + 1, dtype=bool)
+                mask[ids] = True
+                self._tomb_mask = jnp.asarray(mask)
+            else:
+                self._tomb_mask = None
+            self._mesh_state = None  # the mesh path bakes k_local at trace
 
     # -- residency (the out-of-core core) -------------------------------
-    def _shard_retriever(self, s: int) -> Retriever:
-        """The per-shard sub-``Retriever``, admitted to the bounded
-        LRU: materializes the shard's (possibly memory-mapped) arrays
-        onto the device; admission beyond ``max_resident`` evicts the
-        least-recently-used shard — device arrays and compiled plans
-        both drop (re-admission recompiles; ``plans.compiles`` counts
-        it)."""
-        r = self._resident.get(s)
-        if r is not None:
-            self._resident.move_to_end(s)
-            return r
+    def _build_shard(self, s: int) -> Retriever:
+        """Materialize shard ``s`` as a sub-``Retriever``: pages the
+        (possibly memory-mapped) arrays in and puts them on the device.
+        Pure build — no LRU mutation, so the staging worker can run it
+        off-thread. A shard smaller than its budget serves its ENTIRE
+        doc range as the candidate list — the merge needs no more, and
+        engines whose score vector is shard-sized (flat) cannot top-k
+        past it (budgets hoisted in ``_shard_cfg``, see
+        ``set_tombstones``)."""
         sh = self.shards[s]
-        # a shard smaller than k serves its ENTIRE doc range as the
-        # candidate list — the merge needs no more, and engines whose
-        # score vector is shard-sized (flat) cannot top-k past it; live
-        # tombstones extend the budget by the shard's own dead count so
-        # k live candidates always survive the mask (set_tombstones)
-        r = Retriever(
-            self.cfg.replace(
-                n_shards=1,
-                k=min(sh.n_docs, self.cfg.k + self._shard_tombs[s]),
-            ),
+        return Retriever(
+            self._shard_cfg[s],
             sh.arrays,
             n_docs=sh.n_docs,
             dim=self.dim,
@@ -395,15 +456,95 @@ class ShardedRetriever:
             value_format=self.value_format,
             shard=f"{s}/{self.cfg.n_shards}",
         )
-        self._resident[s] = r
-        while len(self._resident) > self.max_resident:
-            _, old = self._resident.popitem(last=False)
-            self._evicted_compiles += old.plans.compiles
-            self.evictions += 1
-        self.peak_resident_bytes = max(
-            self.peak_resident_bytes, self.resident_bytes()
-        )
+
+    def _stage(self, s: int, bucket: int) -> None:
+        """Double-buffer: queue shard ``s`` for staging on the shared
+        worker pool — page-in + device put (``_build_shard``) + an AOT
+        warm of the ``bucket`` plan — while the caller scores the
+        current shard. One staged shard at a time (the explicit extra
+        buffer the threading model documents); an already-resident or
+        already-staged shard is a no-op, and a stale staging for a
+        different shard is retired with its compiles counted."""
+        with self._admit_lock:
+            if s in self._resident:
+                return
+            st = self._staged
+            if st is not None:
+                if st[0] == s:
+                    return
+                self._staged = None
+                self._evicted_compiles += st[1].result().plans.compiles
+            dim = self.dim
+
+            def task() -> Retriever:
+                r = self._build_shard(s)
+                plan = r.plans.get(r.plans.bucket_for(bucket))
+                plan.warm(dim)
+                return r
+
+            self._staged = (s, _prefetch_pool().submit(task))
+
+    def _consume_staged(self, s: int) -> Optional[Retriever]:
+        """Take shard ``s`` out of the staging buffer if it's there —
+        blocking on an in-flight build (still a win: the build started
+        a rotation ago). A staged retriever whose budget went stale
+        between staging and admission is discarded, compiles counted.
+        Callers hold ``_admit_lock``."""
+        st = self._staged
+        if st is None or st[0] != s:
+            return None
+        self._staged = None
+        r = st[1].result()
+        if r.cfg.k != self._shard_k[s]:
+            self._evicted_compiles += r.plans.compiles
+            return None
         return r
+
+    def _staged_bytes(self) -> int:
+        st = self._staged
+        if st is None or not st[1].done() or st[1].exception() is not None:
+            return 0
+        return sum(int(a.nbytes) for a in st[1].result().arrays.values())
+
+    def _shard_retriever(self, s: int) -> Retriever:
+        """The per-shard sub-``Retriever``, admitted to the bounded
+        LRU: served from residency, else from the staging buffer
+        (``prefetch_hits``), else built on the critical path
+        (``prefetch_misses``); admission beyond ``max_resident`` evicts
+        the least-recently-used shard — device arrays and compiled
+        plans both drop (re-admission recompiles; ``plans.compiles``
+        counts it). ``peak_resident_bytes`` includes a completed staged
+        build: the double buffer is real memory the bound must own."""
+        with self._admit_lock:
+            # sample BEFORE consuming the staging buffer: the moment a
+            # staged build completes while the previous shard is still
+            # resident is exactly the double-buffer transient the peak
+            # must own (sampling after _consume_staged would miss it)
+            self.peak_resident_bytes = max(
+                self.peak_resident_bytes,
+                self.resident_bytes() + self._staged_bytes(),
+            )
+            r = self._resident.get(s)
+            if r is not None:
+                self._resident.move_to_end(s)
+                return r
+            r = self._consume_staged(s)
+            if r is not None:
+                self.prefetch_hits += 1
+            else:
+                if self.prefetch and self.cfg.n_shards > 1:
+                    self.prefetch_misses += 1
+                r = self._build_shard(s)
+            self._resident[s] = r
+            while len(self._resident) > self.max_resident:
+                _, old = self._resident.popitem(last=False)
+                self._evicted_compiles += old.plans.compiles
+                self.evictions += 1
+            self.peak_resident_bytes = max(
+                self.peak_resident_bytes,
+                self.resident_bytes() + self._staged_bytes(),
+            )
+            return r
 
     def resident_bytes(self) -> int:
         """Device bytes currently held by resident shard sub-indexes —
@@ -431,13 +572,21 @@ class ShardedRetriever:
         return jnp.where(valid, ids + sh.doc_lo, jnp.int32(self.n_docs))
 
     def _dispatch_shards(self, Q):
-        """One padded ``[bucket, dim]`` batch → merged global top-k."""
+        """One padded ``[bucket, dim]`` batch → merged global top-k.
+        The sequential rotation stages shard ``s+1`` (wrapping — the
+        wrap primes the NEXT batch's opening shard during the
+        inter-batch gap) while shard ``s`` scores."""
         if self._mesh():
             fn, arrays, idmaps = self._mesh_state
             return fn(arrays, idmaps, Q)
+        S = self.cfg.n_shards
+        do_prefetch = self.prefetch and S > 1
+        bucket = int(Q.shape[0])
         flat_i, flat_s = [], []
-        for s in range(self.cfg.n_shards):
+        for s in range(S):
             r = self._shard_retriever(s)
+            if do_prefetch:
+                self._stage((s + 1) % S, bucket)
             ids, scores = r.plans.search(Q)
             gids = self._global_ids(s, ids)
             if self._tomb_mask is not None:
@@ -469,23 +618,22 @@ class ShardedRetriever:
         """Build (once) and report the mesh path: a
         ``dist.sharding.index_mesh`` + ``api.make_sharded_search``
         driver over the stacked shard arrays, taken when the host has
-        ≥ n_shards devices (unless ``use_mesh`` overrides)."""
+        ≥ n_shards devices (unless ``use_mesh`` overrides).
+
+        Live tombstones ride the mesh (DESIGN.md §11): dead docs are
+        baked into the ID-MAP DATA — their local slot maps to the
+        out-of-corpus sentinel, which the merge masks to ``-inf`` —
+        and every shard's candidate budget is the uniform
+        ``tombstone_budget`` (one ``k_local`` across devices: SPMD).
+        Idmaps are runtime arguments, so mutating the tombstone SET
+        never re-traces; only a changed budget (the tombstone COUNT
+        moved) rebuilds the driver, against the cached stacked
+        arrays."""
         if self.use_mesh is False or self.cfg.n_shards == 1:
-            return None
-        if self._tomb_mask is not None:
-            # the mesh driver bakes per-shard k_local and the id maps at
-            # trace time; live tombstones would need a re-trace per
-            # mutation — serve sequentially until the next merge folds
-            # them into a fresh generation
-            if self.use_mesh:
-                raise ValueError(
-                    "use_mesh=True is incompatible with live tombstones; "
-                    "merge the tombstones into a new generation first"
-                )
             return None
         if self._mesh_state is not None:
             return self._mesh_state
-        from repro.dist.sharding import index_mesh
+        from repro.dist.sharding import index_mesh, tombstone_budget
 
         mesh = index_mesh(self.cfg.n_shards)
         if mesh is None:
@@ -496,16 +644,18 @@ class ShardedRetriever:
                 )
             return None
         n_local = max(sh.n_docs for sh in self.shards)
-        # zero-padding to common shapes is safe: padding rows are
-        # unreachable (in-shard ids never exceed the shard's own
-        # sentinel) and zero rows score 0 → idmap sends them to the
-        # out-of-corpus sentinel, which the merge masks
-        stacked = {
-            k: jnp.asarray(v)
-            for k, v in layout.pad_stack(
-                [dict(sh.arrays) for sh in self.shards]
-            ).items()
-        }
+        if self._mesh_static is None:
+            # zero-padding to common shapes is safe: padding rows are
+            # unreachable (in-shard ids never exceed the shard's own
+            # sentinel) and zero rows score 0 → idmap sends them to the
+            # out-of-corpus sentinel, which the merge masks
+            self._mesh_static = {
+                k: jnp.asarray(v)
+                for k, v in layout.pad_stack(
+                    [dict(sh.arrays) for sh in self.shards]
+                ).items()
+            }
+        stacked = self._mesh_static
         idmaps = np.full(
             (self.cfg.n_shards, n_local + 1), self.n_docs, dtype=np.int32
         )
@@ -513,10 +663,18 @@ class ShardedRetriever:
             idmaps[s, : sh.n_docs] = np.arange(
                 sh.doc_lo, sh.doc_hi, dtype=np.int32
             )
+            if self._shard_tombs[s]:
+                dead = self._tombstones[
+                    (self._tombstones >= sh.doc_lo)
+                    & (self._tombstones < sh.doc_hi)
+                ]
+                idmaps[s, dead - sh.doc_lo] = self.n_docs
         fn = api.make_sharded_search(
             mesh, self.cfg, n_local, self.n_docs, self.value_scale,
             index_axis="model", query_axes=(),
-            k_local=min(self.cfg.k, n_local),
+            k_local=tombstone_budget(
+                self.cfg.k, n_local, int(self._tombstones.size)
+            ),
         )
         self._mesh_state = (fn, stacked, jnp.asarray(idmaps))
         return self._mesh_state

@@ -1,0 +1,451 @@
+"""Overlapped serving (DESIGN.md §11): host prefetch on the
+out-of-core sharded path, background compaction with queries racing
+the commit flip, thread-safety of the serving surfaces
+(Pipeline/ResultCache/ServeStats), and the tombstone-aware mesh.
+
+The correctness bar everywhere: overlap is a latency mechanism, never
+an answer mechanism — every path must stay byte-identical to its
+synchronous twin, and every counter must account honestly for work
+that moved off the hot path."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import SyntheticConfig, generate_collection
+from repro.dist.sharding import tombstone_budget
+from repro.serve.api import Retriever, RetrieverConfig, open_retriever
+from repro.serve.pipeline import ResultCache, ServeStats
+from repro.serve.segments import InjectedCrash, MergeHandle, MutableRetriever
+
+
+def _coll(n_docs=60, n_queries=6, seed=3):
+    return generate_collection(
+        SyntheticConfig(name="overlap", dim=128, n_docs=n_docs,
+                        n_queries=n_queries, doc_nnz_mean=16.0,
+                        query_nnz_mean=6.0, seed=seed),
+        value_format="f16",
+    )
+
+
+def _queries(col):
+    return np.stack([col.query_dense(i) for i in range(col.n_queries)])
+
+
+# ---------------------------------------------------------------------------
+# host prefetch: parity, counters, staged-buffer hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_parity_and_counters(tmp_path):
+    """Prefetch on/off answer byte-identically at max_resident=1; the
+    prefetcher actually consumes staged shards (hits) while the
+    disabled path records neither hits nor misses."""
+    col = _coll()
+    Q = _queries(col)
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", k=10,
+                          n_shards=3)
+    tree = tmp_path / "tree"
+    Retriever.build(col.fwd, cfg).save(tree)
+
+    off = open_retriever(tree)
+    off.use_mesh = False
+    off.max_resident = 1
+    off.prefetch = False
+    for _ in range(2):
+        ids_off, sc_off = map(np.asarray, off.search(Q))
+    assert off.prefetch_hits == 0 and off.prefetch_misses == 0
+
+    on = open_retriever(tree)
+    on.use_mesh = False
+    on.max_resident = 1
+    on.prefetch = True
+    for _ in range(2):
+        ids_on, sc_on = map(np.asarray, on.search(Q))
+    np.testing.assert_array_equal(ids_on, ids_off)
+    np.testing.assert_array_equal(sc_on, sc_off)
+    # the very first rotation can never hit (nothing staged yet); by
+    # the second pass the wrap-around stage has landed, so rotations
+    # consume staged shards from there on
+    assert on.prefetch_hits > 0
+    assert on.prefetch_misses >= 1
+
+
+def test_prefetch_peak_counts_staged_bytes(tmp_path):
+    """Double-buffering is not free residency: the staged shard's bytes
+    count into peak_resident_bytes, so prefetch-on peaks strictly above
+    the prefetch-off single-shard peak."""
+    col = _coll()
+    Q = _queries(col)
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", k=10,
+                          n_shards=3)
+    tree = tmp_path / "tree"
+    Retriever.build(col.fwd, cfg).save(tree)
+    peaks = {}
+    for prefetch in (False, True):
+        r = open_retriever(tree)
+        r.use_mesh = False
+        r.max_resident = 1
+        r.prefetch = prefetch
+        for _ in range(2):
+            r.search(Q)
+        peaks[prefetch] = r.peak_resident_bytes
+    assert peaks[True] > peaks[False]
+
+
+def test_prefetch_staged_discard_on_budget_change(tmp_path):
+    """A tombstone-set change retires any staged build whose candidate
+    budget went stale — its compiles fold into the honest eviction
+    accounting and the next rotation pages in at the new budget,
+    answering byte-identically to a fresh retriever with the same
+    tombstones."""
+    col = _coll()
+    Q = _queries(col)
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", k=10,
+                          n_shards=3)
+    tree = tmp_path / "tree"
+    Retriever.build(col.fwd, cfg).save(tree)
+
+    r = open_retriever(tree)
+    r.use_mesh = False
+    r.max_resident = 1
+    r.prefetch = True
+    r.search(Q)  # leaves the wrap-around shard staged
+    victims = np.asarray([0, 25, 59], np.int64)
+    r.set_tombstones(victims)
+    assert r._staged is None  # the stale staged build was retired
+    ids, sc = map(np.asarray, r.search(Q))
+
+    fresh = open_retriever(tree)
+    fresh.use_mesh = False
+    fresh.max_resident = 1
+    fresh.prefetch = False
+    fresh.set_tombstones(victims)
+    ids_f, sc_f = map(np.asarray, fresh.search(Q))
+    np.testing.assert_array_equal(ids, ids_f)
+    np.testing.assert_array_equal(sc, sc_f)
+    assert not np.intersect1d(ids.ravel(), victims).size
+
+
+def test_uniform_tombstone_budgets():
+    """Budgets are UNIFORM across shards — min(n_docs_s, k + total) —
+    because byte-parity between the mesh (one SPMD k_local) and the
+    sequential rotation requires identical per-shard candidate sets."""
+    col = _coll()
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", k=10,
+                          n_shards=3)
+    r = Retriever.build(col.fwd, cfg)
+    assert r._shard_k == [min(sh.n_docs, 10) for sh in r.shards]
+    victims = np.asarray([0, 1, 59], np.int64)  # shards 0 and 2 only
+    r.set_tombstones(victims)
+    assert r._shard_k == [
+        min(sh.n_docs, 10 + len(victims)) for sh in r.shards
+    ]
+    # per-shard tombstone ROUTING counts stay local (shard 1 is clean);
+    # only the candidate budget is uniform
+    assert r._shard_tombs[1] == 0 and sum(r._shard_tombs) == len(victims)
+
+
+def test_tombstone_budget_contract():
+    assert tombstone_budget(10, 100, 0) == 10
+    assert tombstone_budget(10, 100, 5) == 15
+    assert tombstone_budget(10, 12, 5) == 12  # capped at the shard
+    for bad in [(0, 10, 0), (10, 0, 0), (10, 10, -1)]:
+        with pytest.raises(ValueError):
+            tombstone_budget(*bad)
+
+
+# ---------------------------------------------------------------------------
+# background compaction: handle semantics, parity through the flip
+# ---------------------------------------------------------------------------
+
+
+def _mutable(col, n_base=45):
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", k=10)
+    m = MutableRetriever.create(col.fwd.slice(0, n_base), cfg)
+    m.insert([col.fwd.doc(i) for i in range(n_base, col.fwd.n_docs)])
+    m.delete([1, 3, n_base + 1])
+    return m
+
+
+def test_background_merge_commits_and_prewarms():
+    col = _coll()
+    Q = _queries(col)
+    m = _mutable(col)
+    ids0, sc0 = map(np.asarray, m.search(Q))
+    gen0, epoch0 = m.generation, m.epoch
+
+    handle = m.merge(background=True)
+    assert isinstance(handle, MergeHandle)
+    new_base = handle.result(timeout=600)
+    assert handle.done()
+    assert m.generation == gen0 + 1 and m.epoch == epoch0 + 1
+    assert not m.segments and new_base is m.base
+    # the worker pre-warmed the next generation's plans: serving it
+    # must reuse the wrapper the merge built, not compile a fresh one
+    assert "base" in m._wrappers
+    compiles = m.plans.compiles
+    ids1, sc1 = map(np.asarray, m.search(Q))
+    assert m.plans.compiles == compiles
+    np.testing.assert_array_equal(ids1, ids0)
+    np.testing.assert_array_equal(sc1, sc0)
+    assert m.merge_wall_us > 0 and m.blocked_swap_us > 0
+
+
+def test_background_merge_crash_surfaces_in_result():
+    col = _coll()
+    Q = _queries(col)
+    m = _mutable(col)
+    ids0 = np.asarray(m.search(Q)[0])
+    gen0, n_segs = m.generation, len(m.segments)
+
+    handle = m.merge(background=True, crash_before_flip=True)
+    with pytest.raises(InjectedCrash):
+        handle.result(timeout=600)
+    # the crash never reached the commit: state intact, still servable
+    assert m.generation == gen0 and len(m.segments) == n_segs
+    np.testing.assert_array_equal(np.asarray(m.search(Q)[0]), ids0)
+    # a retry merges cleanly
+    m.merge()
+    assert m.generation == gen0 + 1
+    np.testing.assert_array_equal(np.asarray(m.search(Q)[0]), ids0)
+
+
+def test_merge_handle_result_timeout():
+    col = _coll()
+    m = _mutable(col)
+    handle = m.merge(background=True)
+    try:
+        handle.result(timeout=0.0)
+    except TimeoutError:
+        pass  # caught it mid-build — the interesting branch
+    assert handle.result(timeout=600) is m.base
+
+
+def test_background_merge_excludes_writers():
+    """Single-writer discipline: a mutation issued while a background
+    merge runs blocks on the write lock and lands AFTER the flip."""
+    col = _coll(n_docs=200)
+    m = _mutable(col, n_base=180)
+    handle = m.merge(background=True)
+    # wait for the (niced) worker to actually take the write lock, so
+    # the insert below contends with a merge in flight rather than
+    # sneaking in before it starts
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        if m._write_lock.acquire(blocking=False):
+            m._write_lock.release()
+            if handle.done():
+                break
+            time.sleep(0.002)
+        else:
+            break
+    ids = m.insert([col.fwd.doc(0)])  # blocks until the merge commits
+    assert handle.done(), "insert returned while the merge still ran"
+    handle.result(timeout=600)
+    assert m.generation == 1
+    assert len(m.segments) == 1 and m.segments[0].ids[0] == ids[0]
+
+
+# ---------------------------------------------------------------------------
+# thread-safety of the serving surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_result_cache_thread_hammer():
+    cache = ResultCache(capacity=32)
+    errors: list = []
+    n_iters = 300
+
+    def worker(seed: int) -> None:
+        rng = np.random.default_rng(seed)
+        try:
+            for i in range(n_iters):
+                key = bytes([int(rng.integers(64))])
+                roll = rng.random()
+                if roll < 0.1:
+                    cache.invalidate(epoch=i)
+                elif roll < 0.55:
+                    cache.put(key, np.arange(4), np.ones(4))
+                else:
+                    got = cache.get(key)
+                    if got is not None:
+                        assert got[0].shape == (4,)
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(cache) <= 32
+    assert cache.lookups >= cache.hits
+    assert cache.invalidations >= 1
+
+
+def test_serve_stats_thread_hammer():
+    stats = ServeStats(clock=time.perf_counter)
+    n_threads, n_iters = 4, 500
+
+    def worker() -> None:
+        for i in range(n_iters):
+            stats.record_query(float(i % 97))
+            stats.record_dispatch(8, 5)
+            if i % 50 == 0:
+                stats.percentile(95)
+                stats.snapshot()
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = stats.snapshot()
+    assert snap["n_queries"] == n_threads * n_iters
+    assert stats.dispatches[8] == n_threads * n_iters
+    assert stats.occupancy[8] == 5 * n_threads * n_iters
+
+
+def test_pipeline_stress_during_background_merge():
+    """Several threads hammer Pipeline.submit while another invalidates
+    the cache and reads stats, and a background merge builds + commits
+    mid-storm. Every response — in every phase — must equal the
+    constant oracle (compaction does not change the live corpus), and
+    the commit's epoch bump must reach the result cache."""
+    col = _coll()
+    Q = _queries(col)
+    m = _mutable(col)
+    pipe = m.pipeline(deadline_us=300.0, cache_size=32)
+    pipe.warm()
+    oracle_ids, oracle_sc = map(np.asarray, m.search(Q))
+
+    stop = threading.Event()
+    failures: list = []
+    served = [0, 0]
+
+    def submitter(tid: int) -> None:
+        rng = np.random.default_rng(tid)
+        try:
+            while not stop.is_set():
+                qi = int(rng.integers(Q.shape[0]))
+                ids, sc = pipe.submit(Q[qi]).result()
+                if not (np.array_equal(np.asarray(ids), oracle_ids[qi])
+                        and np.array_equal(np.asarray(sc), oracle_sc[qi])):
+                    failures.append(f"thread {tid} query {qi} diverged")
+                    stop.set()
+                    return
+                served[tid] += 1
+        except BaseException as e:  # pragma: no cover
+            failures.append(repr(e))
+            stop.set()
+
+    def chaos() -> None:
+        while not stop.is_set():
+            pipe.cache.invalidate()
+            pipe.snapshot()
+            pipe.stats.percentile(95)
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(2)]
+    threads.append(threading.Thread(target=chaos))
+    for t in threads:
+        t.start()
+    try:
+        handle = m.merge(background=True)
+        handle.result(timeout=600)
+        # keep the storm going past the flip so post-commit serving is
+        # exercised under the same load
+        targets = [n + 3 for n in served]
+        deadline = time.monotonic() + 120
+        while (any(served[t] < targets[t] for t in range(2))
+               and not stop.is_set() and time.monotonic() < deadline):
+            time.sleep(0.001)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+    assert not failures, failures
+    assert all(n > 0 for n in served)
+    assert m.generation == 1
+    # one post-storm submission syncs the cache epoch to the retriever
+    ids, _ = pipe.submit(Q[0]).result()
+    np.testing.assert_array_equal(np.asarray(ids), oracle_ids[0])
+    assert pipe.cache.epoch == m.epoch
+
+
+# ---------------------------------------------------------------------------
+# mesh path with live tombstones (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_ENV = {
+    **os.environ,
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+    "PYTHONPATH": os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + os.environ.get("PYTHONPATH", "").split(os.pathsep)
+    ),
+}
+
+
+def test_mesh_serves_live_tombstones():
+    """With ≥ n_shards devices and live tombstones the dispatch STAYS
+    on the shard_map path (use_mesh=True raises on fallback) and
+    answers byte-identically to the sequential rotation — for a
+    dedupe engine and a disjoint-range engine, and again after the
+    tombstone set is replaced."""
+    script = textwrap.dedent(
+        """
+        import numpy as np
+        from repro.data.synthetic import SyntheticConfig, generate_collection
+        from repro.serve.api import Retriever, RetrieverConfig
+
+        coll = generate_collection(
+            SyntheticConfig(name="mesh-tombs", dim=256, n_docs=48,
+                            n_queries=4, doc_nnz_mean=24.0,
+                            query_nnz_mean=8.0, seed=3),
+            value_format="f16",
+        )
+        Q = np.stack([coll.query_dense(i) for i in range(4)])
+        cases = [
+            ("flat", {}),
+            ("seismic", dict(cut=16, block_budget=512, n_probe=512,
+                             n_postings=10000, block_size=8)),
+        ]
+        for engine, params in cases:
+            cfg = RetrieverConfig(engine=engine, k=10, n_shards=4,
+                                  params=params)
+            r = Retriever.build(coll.fwd, cfg)
+            for victims in ([0, 11, 12, 30, 47], [1, 13, 14, 31, 46]):
+                victims = np.asarray(victims, np.int64)
+                r.set_tombstones(victims)
+                r.use_mesh = False
+                ids_s, sc_s = map(np.asarray, r.search(Q))
+                r.use_mesh = True  # raises instead of falling back
+                ids_m, sc_m = map(np.asarray, r.search(Q))
+                assert np.array_equal(ids_s, ids_m), engine
+                assert np.array_equal(sc_s, sc_m), engine
+                dead = np.intersect1d(ids_m.ravel(), victims)
+                assert not dead.size, (engine, dead)
+        print("mesh tombstone parity OK")
+        """
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=_ENV, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    assert "mesh tombstone parity OK" in proc.stdout

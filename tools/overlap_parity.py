@@ -1,0 +1,174 @@
+#!/usr/bin/env python
+"""Overlapped-serving parity gate (``make overlap-parity``, part of
+``make check``).
+
+Overlap must be invisible in the bytes (DESIGN.md §11): prefetch,
+background compaction and the tombstone-aware mesh are latency
+mechanisms, never answer mechanisms. For every registered engine ×
+codec this asserts:
+
+1. **prefetch parity** — the out-of-core sequential path over an
+   mmap'd shard tree at ``max_resident=1`` answers BYTE-identically
+   with the host prefetcher on and off, and the prefetcher actually
+   ran (staged buffers consumed, ``prefetch_hits`` > 0);
+2. **mesh + live tombstones** — with the host forced to 8 devices,
+   ``use_mesh=True`` (which raises rather than falling back) over a
+   tombstoned sharded index answers byte-identically to the
+   sequential rotation over the same index, and no tombstoned doc
+   surfaces in the top-k;
+3. **background-merge parity** — queries racing a
+   ``merge(background=True)`` from submission THROUGH the commit flip
+   return byte-identical answers to the pre-merge result (compaction
+   does not change the live corpus), and the post-flip generation
+   answers byte-identically too.
+
+Exit status = number of failures (0 = pass).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+# the mesh leg needs ≥ n_shards devices: force host platform devices
+# BEFORE jax initializes (same trick as the sharded test suite)
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8"
+).strip()
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.layout import available_layouts  # noqa: E402
+from repro.data.synthetic import SyntheticConfig, generate_collection  # noqa: E402
+from repro.serve.api import (  # noqa: E402
+    Retriever,
+    RetrieverConfig,
+    available_engines,
+    open_retriever,
+)
+from repro.serve.segments import MutableRetriever  # noqa: E402
+
+#: budgets exhaustive for the 50-doc parity corpus (candidate sets
+#: identical across serving paths, so top-k must match byte-for-byte)
+ENGINE_PARAMS = {
+    "seismic": dict(cut=16, block_budget=512, n_probe=512, n_postings=10000,
+                    block_size=8),
+    "hnsw": dict(beam=56, iters=56, n_seeds=4, m=8, ef_construction=48),
+    "flat": {},
+}
+
+N_SHARDS = 4
+#: dead docs spanning shards (50-doc corpus → shard ranges of ~13/12)
+TOMBSTONES = (0, 12, 13, 26, 49)
+
+
+def _fail(errors: list, msg: str) -> None:
+    errors.append(msg)
+    print(f"FAIL {msg}")
+
+
+def _collection():
+    return generate_collection(
+        SyntheticConfig(name="overlap-parity", dim=256, n_docs=50,
+                        n_queries=4, doc_nnz_mean=24.0, query_nnz_mean=8.0,
+                        seed=7),
+        value_format="f16",
+    )
+
+
+def _prefetch_leg(errors, col, Q, cfg, engine, codec, tmp) -> None:
+    tree = os.path.join(tmp, f"{engine}-{codec}")
+    Retriever.build(col.fwd, cfg.replace(n_shards=N_SHARDS)).save(tree)
+    res = {}
+    for label, prefetch in (("off", False), ("on", True)):
+        r = open_retriever(tree)
+        r.use_mesh = False  # this leg prices the out-of-core rotation
+        r.max_resident = 1
+        r.prefetch = prefetch
+        for _ in range(2):  # two passes: the wrap-around stage lands
+            ids, sc = map(np.asarray, r.search(Q))
+        res[label] = (ids, sc, r.prefetch_hits)
+    (ids0, sc0, _), (ids1, sc1, hits) = res["off"], res["on"]
+    if not (np.array_equal(ids0, ids1) and np.array_equal(sc0, sc1)):
+        _fail(errors, f"prefetch parity: {engine}×{codec} on≠off")
+    elif hits == 0:
+        _fail(errors, f"prefetch inert: {engine}×{codec} consumed no "
+                      f"staged shard (hits=0)")
+    else:
+        print(f"ok prefetch    {engine}×{codec} (hits={hits})")
+    shutil.rmtree(tree)
+
+
+def _mesh_leg(errors, col, Q, cfg, engine, codec) -> None:
+    r = Retriever.build(col.fwd, cfg.replace(n_shards=N_SHARDS))
+    r.set_tombstones(np.asarray(TOMBSTONES, np.int64))
+    r.use_mesh = False
+    ids_seq, sc_seq = map(np.asarray, r.search(Q))
+    r.use_mesh = True  # raises instead of falling back sequential
+    ids_m, sc_m = map(np.asarray, r.search(Q))
+    dead_served = np.intersect1d(ids_m.ravel(), np.asarray(TOMBSTONES))
+    if not (np.array_equal(ids_m, ids_seq) and np.array_equal(sc_m, sc_seq)):
+        _fail(errors, f"mesh tombstone parity: {engine}×{codec} "
+                      f"mesh ≠ sequential")
+    elif dead_served.size:
+        _fail(errors, f"mesh tombstones: {engine}×{codec} served dead "
+                      f"docs {dead_served.tolist()}")
+    else:
+        print(f"ok mesh-tombs  {engine}×{codec}")
+
+
+def _merge_leg(errors, col, Q, cfg, engine, codec) -> None:
+    m = MutableRetriever.create(col.fwd.slice(0, 40), cfg)
+    m.insert([col.fwd.doc(i) for i in range(40, 50)])
+    m.delete([1, 3, 41])
+    ids0, sc0 = map(np.asarray, m.search(Q))
+    handle = m.merge(background=True)
+    during = 0
+    while not handle.done() and during < 25:
+        ids, sc = map(np.asarray, m.search(Q))
+        if not (np.array_equal(ids, ids0) and np.array_equal(sc, sc0)):
+            _fail(errors, f"merge parity: {engine}×{codec} diverged "
+                          f"DURING background merge (iteration {during})")
+            handle.result()
+            return
+        during += 1
+    handle.result()
+    ids2, sc2 = map(np.asarray, m.search(Q))
+    if not (np.array_equal(ids2, ids0) and np.array_equal(sc2, sc0)):
+        _fail(errors, f"merge parity: {engine}×{codec} post-flip "
+                      f"generation diverged")
+    else:
+        print(f"ok bg-merge    {engine}×{codec} "
+              f"(gen={m.generation}, {during} during-merge checks)")
+
+
+def main() -> int:
+    errors: list[str] = []
+    col = _collection()
+    Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
+    tmp = tempfile.mkdtemp(prefix="overlap-parity-")
+    try:
+        for engine in available_engines():
+            for codec in available_layouts():
+                cfg = RetrieverConfig(engine=engine, codec=codec, k=10,
+                                      params=ENGINE_PARAMS[engine])
+                _prefetch_leg(errors, col, Q, cfg, engine, codec, tmp)
+                _mesh_leg(errors, col, Q, cfg, engine, codec)
+                _merge_leg(errors, col, Q, cfg, engine, codec)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    if errors:
+        print(f"overlap-parity: {len(errors)} failure(s)")
+    else:
+        print("overlap-parity OK")
+    return len(errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

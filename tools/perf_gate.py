@@ -14,6 +14,12 @@ tiled kernels bought, it does not demand wins the snapshot never
 claimed (e.g. the decode-free ``uncompressed`` rescoring row, where
 fusion buys HBM bytes rather than CPU wall-clock). Rows are selected
 via the structured ``mode``/``codec`` fields, never by name parsing.
+
+The overlap leg guards the host prefetcher the same way: when the
+committed ``BENCH_overlap.json`` records a prefetch win (a non-NaN
+``overlap/prefetch-gate`` row), the prefetch-on/off paced stream is
+re-measured fresh and the gate row NaN-fails if prefetch-on p95
+regresses past prefetch-off (EXPERIMENTS.md §Overlap).
 """
 
 from __future__ import annotations
@@ -37,11 +43,57 @@ def _family(name: str) -> str:
     return parts[1] if len(parts) > 1 else name
 
 
+def _overlap_gate() -> int:
+    """NaN-fail when a freshly measured prefetch-on p95 regresses past
+    prefetch-off — only once the committed ``BENCH_overlap.json``
+    records that win (same locked-in-wins philosophy as the kernel
+    leg)."""
+    path = os.path.join(_ROOT, "BENCH_overlap.json")
+    if not os.path.isfile(path):
+        print("perf-gate: no committed BENCH_overlap.json — overlap leg "
+              "skipped")
+        return 0
+    with open(path) as f:
+        snap = json.load(f)
+    committed_win = any(
+        row["name"].startswith("overlap/prefetch-gate/")
+        and row.get("us") is not None
+        for row in snap.get("rows", [])
+    )
+    if not committed_win:
+        print("perf-gate: committed overlap snapshot records no prefetch "
+              "win — overlap leg skipped")
+        return 0
+
+    import numpy as np
+
+    from benchmarks.table7_overlap import _prefetch_rows
+    from repro.data.synthetic import generate_collection, splade_config
+
+    print("# perf-gate: re-measuring prefetch-on/off paced stream…",
+          file=sys.stderr, flush=True)
+    col = generate_collection(splade_config(800, 16, seed=0),
+                              value_format="f16")
+    Q = np.stack([col.query_dense(i) for i in range(16)])
+    failures = 0
+    for r in _prefetch_rows(col, Q, 8, "flat", "streamvbyte"):
+        if "/prefetch-gate/" not in r.name:
+            continue
+        if math.isnan(r.us):
+            failures += 1
+            print(f"FAIL {r.name}: fresh us=nan — prefetch-on p95 "
+                  f"regressed past prefetch-off ({r.derived})")
+        else:
+            print(f"ok   {r.name}: fresh prefetch-on p95 holds "
+                  f"({r.derived})")
+    return failures
+
+
 def main() -> int:
     bench_path = os.path.join(_ROOT, "BENCH_kernels.json")
     if not os.path.isfile(bench_path):
         print("perf-gate: no committed BENCH_kernels.json — nothing to guard")
-        return 0
+        return _overlap_gate()
     with open(bench_path) as f:
         snap = json.load(f)
     n_docs = int(snap.get("n_docs", 300))
@@ -65,7 +117,7 @@ def main() -> int:
     if not gated:
         print("perf-gate: committed snapshot records no compiled wins — "
               "nothing to guard (is BENCH_kernels.json stale?)")
-        return 0
+        return _overlap_gate()
 
     from benchmarks.kernel_bench import run as bench_run
 
@@ -93,10 +145,12 @@ def main() -> int:
         else:
             print(f"ok   {fam}/{codec}: fresh compiled {r.us:.1f}µs "
                   f"≤ committed jnp {jnp_us:.1f}µs")
+    failures += _overlap_gate()
     if failures:
-        print(f"perf-gate: {failures} compiled regression(s)")
+        print(f"perf-gate: {failures} regression(s)")
     else:
-        print(f"perf-gate OK ({len(gated)} locked-in win(s) re-verified)")
+        print(f"perf-gate OK ({len(gated)} locked-in kernel win(s) "
+              f"re-verified)")
     return failures
 
 
