@@ -38,9 +38,12 @@ class Row:
     """One measured configuration.
 
     ``mode`` (kernel execution mode — jnp | pallas_interpret |
-    pallas_compiled) and ``codec`` are STRUCTURED fields: consumers
-    (the perf gate, the roofline) select rows by them rather than
-    parsing the display name, which stays free-form."""
+    pallas_compiled), ``codec`` and ``vq`` (value codec, DESIGN.md
+    §12) are STRUCTURED fields: consumers (the perf gate, the
+    roofline) select rows by them rather than parsing the display
+    name, which stays free-form. ``vq=None`` marks a pre-value-codec
+    row (implicitly f16 values); rows that sweep the value-codec axis
+    set it explicitly."""
 
     def __init__(
         self,
@@ -50,9 +53,10 @@ class Row:
         *,
         mode: str | None = None,
         codec: str | None = None,
+        vq: str | None = None,
     ):
         self.name, self.us, self.derived = name, us_per_call, derived
-        self.mode, self.codec = mode, codec
+        self.mode, self.codec, self.vq = mode, codec, vq
 
     def csv(self) -> str:
         return f"{self.name},{self.us:.1f},{self.derived}"
@@ -121,6 +125,7 @@ def write_bench_json(
                 # structured row identity (never parsed out of the name)
                 **({"mode": r.mode} if r.mode is not None else {}),
                 **({"codec": r.codec} if r.codec is not None else {}),
+                **({"vq": r.vq} if r.vq is not None else {}),
                 "derived": {
                     k: (v if not isinstance(v, float) or np.isfinite(v) else None)
                     for k, v in _parse_derived(r.derived).items()

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import layout
+from repro.core import values as value_codecs
 from repro.core.forward_index import pack_forward_index
 from repro.core.scoring import score_candidate_rows, score_packed
 from repro.data.synthetic import generate_collection, splade_config
@@ -59,6 +60,9 @@ RESCORE_CODECS = ("uncompressed", "dotvbyte", "streamvbyte", "bitpack")
 
 #: execution modes benchmarked per family
 MEASURED_MODES = ("jnp", "pallas_interpret", "pallas_compiled")
+
+#: quantized value codecs swept on the rescoring family (DESIGN.md §12)
+VALUE_CODEC_SWEEP = ("u8_sq", "u4_sq", "pq")
 
 #: codec → fused block-scan entry point (mode-dispatching ops wrapper)
 _SCAN_FUSED = {
@@ -89,16 +93,44 @@ def scan_hbm_bytes(packed, *, fused: bool) -> int:
 def rows_payload_bytes(arrays, codec: str, n_cand: int) -> int:
     """Encoded bytes the rescoring of ``n_cand`` rows must read from
     HBM: the codec payload + values + nnz of the gathered rows (per-row
-    widths as stored, padding included — that is what actually DMAs)."""
+    widths as stored, padding included — that is what actually DMAs).
+
+    Value-codec aware (DESIGN.md §12): under a quantized ``vq`` the
+    ``vals_rows`` term is already the stored CODE width × u8, the
+    scalar-quant clip columns add 8 B/row, and the PQ codebook is read
+    once per query (not per row)."""
     per_row = arrays["vals_rows"].shape[1] * arrays["vals_rows"].dtype.itemsize
     per_row += 4  # nnz i32
+    for k in ("vq_lo_rows", "vq_scale_rows", "vq_lo4_rows", "vq_scale4_rows"):
+        if k in arrays:
+            per_row += 4  # per-row f32 clip column, gathered with the row
     if codec == "uncompressed":
         per_row += arrays["comps_rows"].shape[1] * 4
     elif codec == "bitpack":
         per_row += arrays["words_rows"].shape[1] * 4 + 4
     else:
         per_row += arrays["ctrl_rows"].shape[1] + arrays["data_rows"].shape[1]
-    return per_row * n_cand
+    once = 0
+    if "vq_codebook" in arrays:  # query-resident, read once per query
+        once = int(np.prod(arrays["vq_codebook"].shape)) * 4
+    return per_row * n_cand + once
+
+
+def rows_bits_per_posting(arrays, codec: str) -> float:
+    """Stored bits per posting of the whole packed row form — ids +
+    values + clip ranges + codebooks, padding included (the artifact's
+    actual footprint over its live postings)."""
+    nnz = int(np.asarray(arrays["nnz_rows"]).sum())
+    keys = ["vals_rows", "vq_lo_rows", "vq_scale_rows",
+            "vq_lo4_rows", "vq_scale4_rows", "vq_codebook"]
+    if codec == "uncompressed":
+        keys += ["comps_rows"]
+    elif codec == "bitpack":
+        keys += ["words_rows", "widths_rows"]
+    else:
+        keys += ["ctrl_rows", "data_rows"]
+    total = sum(int(np.asarray(arrays[k]).nbytes) for k in keys if k in arrays)
+    return 8.0 * total / max(nnz, 1)
 
 
 def rows_hbm_bytes(arrays, codec: str, n_cand: int, *, fused: bool) -> int:
@@ -244,9 +276,54 @@ def run(
             )
             rows.append(
                 Row(f"kernel/rescoring/pallas_compiled/{codec}", us,
-                    f"hbm_bytes_per_q={hbm_fused};flops_per_q={rows_flops}",
+                    f"hbm_bytes_per_q={hbm_fused};flops_per_q={rows_flops};"
+                    f"bits_per_posting={rows_bits_per_posting(arrays, codec):.1f}",
                     mode="pallas_compiled", codec=codec)
             )
+
+    # --- value-codec sweep: quantized fused rescoring (DESIGN.md §12) --
+    # the bandwidth-bound path re-measured with in-kernel dequant; rows
+    # carry the structured ``vq`` field, so the perf gate's values leg
+    # can hold u8_sq against the committed f16 rows by field, not name
+    for codec in RESCORE_CODECS:
+        for vq in VALUE_CODEC_SWEEP:
+            arrays = {
+                k: jnp.asarray(v)
+                for k, v in layout.pack_rows(
+                    col.fwd, codec=codec, vq=vq
+                ).arrays().items()
+            }
+            bpp = rows_bits_per_posting(arrays, codec)
+            hbm_fused = rows_hbm_bytes(arrays, codec, len(cand), fused=True)
+            # FMAs over the LOGICAL (decoded) row width — the code
+            # stream is narrower, but every decoded slot still dots
+            logical = int(arrays["vals_rows"].shape[1]) * value_codecs.code_factor(vq)
+            vq_flops = 2 * len(cand) * logical
+            if "jnp" in modes:
+                us = timeit_us(
+                    lambda a=arrays, c=codec: score_candidate_rows(
+                        c, a, dj, qj, scale, backend="jnp"
+                    ).block_until_ready()
+                )
+                rows.append(
+                    Row(f"kernel/rescoring/jnp/{codec}+{vq}", us,
+                        f"hbm_bytes_per_q={rows_hbm_bytes(arrays, codec, len(cand), fused=False)};"
+                        f"bits_per_posting={bpp:.1f}",
+                        mode="jnp", codec=codec, vq=vq)
+                )
+            if "pallas_compiled" in modes:
+                fused = get_kernels(codec).rows_scores
+                us = timeit_us(
+                    lambda a=arrays, f=fused: np.asarray(
+                        f(a, dj, qj, scale, "pallas_compiled")
+                    )
+                )
+                rows.append(
+                    Row(f"kernel/rescoring/pallas_compiled/{codec}+{vq}", us,
+                        f"hbm_bytes_per_q={hbm_fused};flops_per_q={vq_flops};"
+                        f"bits_per_posting={bpp:.1f}",
+                        mode="pallas_compiled", codec=codec, vq=vq)
+                )
 
     if not sweep:
         return rows

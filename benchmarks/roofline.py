@@ -95,15 +95,18 @@ def kernel_roofline(kernel_rows: list[Row]) -> list[Row]:
         cmp_s = flops_q / PEAK_VPU_FLOPS
         bound_us = max(mem_s, cmp_s) * 1e6
         intensity = flops_q / bytes_q
+        # the value codec joins the identity AFTER the codec component,
+        # so ``name.split("/")`` positions stay stable for f16 rows
+        vq_suffix = f"+{r.vq}" if r.vq else ""
         out.append(
             Row(
-                f"roofline/kernel/{family}/{r.mode}/{r.codec}",
+                f"roofline/kernel/{family}/{r.mode}/{r.codec}{vq_suffix}",
                 bound_us,
                 f"intensity_flop_per_byte={intensity:.2f};"
                 f"dominant={'memory' if mem_s >= cmp_s else 'compute'};"
                 f"hbm_bytes_per_q={bytes_q:.0f};flops_per_q={flops_q:.0f};"
                 f"measured_cpu_us={r.us:.1f}",
-                mode=r.mode, codec=r.codec,
+                mode=r.mode, codec=r.codec, vq=r.vq,
             )
         )
     return out
@@ -111,15 +114,15 @@ def kernel_roofline(kernel_rows: list[Row]) -> list[Row]:
 
 def kernel_markdown_table(roof_rows: list[Row]) -> str:
     head = (
-        "| kernel | mode | codec | FLOP/B | dominant | HBM B/q "
-        "| bound µs/q (nominal TPU) |\n|---|---|---|---|---|---|---|\n"
+        "| kernel | mode | codec | vq | FLOP/B | dominant | HBM B/q "
+        "| bound µs/q (nominal TPU) |\n|---|---|---|---|---|---|---|---|\n"
     )
     lines = []
     for r in roof_rows:
         d = _parse_derived(r.derived)
         family = r.name.split("/")[2]
         lines.append(
-            f"| {family} | {r.mode} | {r.codec} "
+            f"| {family} | {r.mode} | {r.codec} | {r.vq or 'f16'} "
             f"| {d['intensity_flop_per_byte']:.2f} | {d['dominant']} "
             f"| {d['hbm_bytes_per_q']:.0f} | {r.us:.1f} |"
         )

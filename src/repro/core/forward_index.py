@@ -329,6 +329,12 @@ class PackedBlocks:
     words: np.ndarray | None = None
     widths: np.ndarray | None = None
     comps: np.ndarray | None = None
+    #: value codec (DESIGN.md §12): quantized vqs store u8 codes in
+    #: ``vals`` plus per-block clip ranges or a shared codebook
+    vq: str = "f16"
+    vq_lo: np.ndarray | None = None
+    vq_scale: np.ndarray | None = None
+    vq_codebook: np.ndarray | None = None
 
     @property
     def n_blocks(self) -> int:
@@ -347,7 +353,8 @@ class PackedBlocks:
             "vals": self.vals,
             "doc_ids": self.doc_ids,
         }
-        for k in ("ctrl", "data", "words", "widths", "comps"):
+        for k in ("ctrl", "data", "words", "widths", "comps",
+                  "vq_lo", "vq_scale", "vq_codebook"):
             a = getattr(self, k)
             if a is not None:
                 out[k] = a
@@ -364,6 +371,8 @@ def pack_forward_index(
     block_size: int = 512,
     max_docs_per_block: int | None = None,
     seg_dtype=np.int32,
+    vq: str = "f16",
+    vq_clip=None,
 ) -> PackedBlocks:
     """Build the TPU packed block layout from a CSR forward index.
 
@@ -373,7 +382,9 @@ def pack_forward_index(
 
     ``seg_dtype=np.int8`` is the §Perf "metadata slimming" layout: the
     per-element doc-slot id fits i8 whenever max_docs_per_block ≤ 127,
-    cutting the dominant metadata stream 4×."""
+    cutting the dominant metadata stream 4×.  ``vq`` selects the VALUE
+    codec (DESIGN.md §12): quantized block values are per-block
+    scalar-quant codes / PQ codes riding in ``vals``."""
     from .layout import pack_blocks
 
     return pack_blocks(
@@ -382,6 +393,8 @@ def pack_forward_index(
         block_size=block_size,
         max_docs_per_block=max_docs_per_block,
         seg_dtype=seg_dtype,
+        vq=vq,
+        vq_clip=vq_clip,
     )
 
 

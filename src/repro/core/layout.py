@@ -52,6 +52,7 @@ from typing import Callable, Dict, Mapping, Sequence
 
 import numpy as np
 
+from . import values as value_codecs
 from .codecs import get_codec
 from .codecs.bitpack import pack_block
 from .codecs.dotvbyte import control_bits
@@ -314,12 +315,23 @@ def pack_blocks(
     block_size: int = 512,
     max_docs_per_block: int | None = None,
     seg_dtype=np.int32,
+    vq: str = "f16",
+    vq_clip: tuple[float, float] | None = None,
 ) -> PackedBlocks:
     """Build the TPU packed block layout under any registered codec.
 
     ``seg_dtype=np.int8`` is the §Perf "metadata slimming" layout: the
     per-element doc-slot id fits i8 whenever max_docs_per_block ≤ 127,
-    cutting the dominant metadata stream 4×."""
+    cutting the dominant metadata stream 4×.
+
+    ``vq`` selects the VALUE codec (DESIGN.md §12, ``core/values``):
+    ``"f16"`` stores the raw storage dtype (today's layout, bit-exact);
+    the quantized codecs replace ``vals`` with u8 codes (width divided
+    by the pack factor) plus per-block clip ranges (``vq_lo``/
+    ``vq_scale``) or a shared ``vq_codebook``.  ``vq_clip`` overrides
+    the fitted ranges with one global (lo, hi) in STORAGE units — the
+    QAT export path."""
+    value_codecs.check_vq(vq)
     lc = get_layout(codec)
     if block_size % 128:
         raise ValueError("block_size must be a multiple of 128 (TPU lanes)")
@@ -354,6 +366,7 @@ def pack_blocks(
             doc_ids[b, s_idx] = d
             pos += n
 
+    vals, vq_extras = value_codecs.encode_block_values(vals, seg, vq, clip=vq_clip)
     out = PackedBlocks(
         codec=codec,
         block_size=T,
@@ -365,7 +378,10 @@ def pack_blocks(
         start_abs=start_abs,
         vals=vals,
         doc_ids=doc_ids,
+        vq=vq,
     )
+    for field, arr in vq_extras.items():
+        setattr(out, field, arr)
     if lc.decode_free:
         out.comps = _resolve_absolute(gaps_all, seg, start_pos, start_abs)
         return out
@@ -424,6 +440,10 @@ class PackedRows:
     vals_rows: np.ndarray
     nnz_rows: np.ndarray
     payload: dict[str, np.ndarray]
+    #: value codec (DESIGN.md §12): quantized vqs store codes in
+    #: ``vals_rows`` (u8, width l_max // code_factor) and their clip
+    #: ranges / codebook in ``payload``
+    vq: str = "f16"
 
     def arrays(self) -> dict[str, np.ndarray]:
         return {"vals_rows": self.vals_rows, "nnz_rows": self.nnz_rows, **self.payload}
@@ -457,6 +477,8 @@ def pack_rows(
     codec: str = "uncompressed",
     l_max: int | None = None,
     doc_range: tuple[int, int] | None = None,
+    vq: str = "f16",
+    vq_clip: tuple[float, float] | None = None,
 ) -> PackedRows:
     """Build the per-document row layout under any registered codec.
 
@@ -465,7 +487,18 @@ def pack_rows(
     path of the sharded artifact layer (DESIGN.md §9). Doc-row gaps are
     per-document (the first gap is the absolute component), so a row
     packed from a slice is byte-identical to the same doc's row in a
-    whole-collection pack at equal row capacity."""
+    whole-collection pack at equal row capacity.
+
+    ``vq`` selects the VALUE codec (DESIGN.md §12, ``core/values``):
+    quantized vqs replace ``vals_rows`` with u8 codes and add the clip
+    ranges / codebook to the payload.  Scalar-quant clip ranges are
+    fitted per row on each row's own live values, so the per-document
+    byte-parity invariant above holds for value bytes too (PQ codebooks
+    are per-build — see DESIGN.md §12).  ``vq_clip=(lo, hi)`` overrides
+    the fit with one global range in STORAGE units (the QAT export
+    path); the row capacity rounds to ``LANE_MULTIPLE · code_factor``
+    so stored code widths stay lane-aligned."""
+    value_codecs.check_vq(vq)
     if doc_range is not None:
         fwd = fwd.slice(*doc_range)
     lc = get_layout(codec)
@@ -473,8 +506,9 @@ def pack_rows(
     cap = max(l_max or 0, nnz_max, 1)
     # lane-aligned row capacity (DMA contract, DESIGN.md §3): a row tile
     # of any stream starts on a lane boundary; also covers every codec's
-    # control grouping (8)
-    cap = _round_up(cap, _LANES)
+    # control grouping (8).  Sub-byte / PQ value codecs round by their
+    # pack factor too, so the STORED code width is itself lane-aligned.
+    cap = _round_up(cap, _LANES * value_codecs.code_factor(vq))
     gaps, vals_rows, nnz_rows = _row_gap_matrix(fwd, cap)
     if lc.decode_free:
         comps = np.cumsum(gaps.astype(np.int64), axis=1)
@@ -482,6 +516,10 @@ def pack_rows(
         payload = {"comps_rows": np.where(live, comps, 0).astype(np.int32)}
     else:
         payload = {f"{k}_rows": v for k, v in lc.encode(gaps).items()}
+    vals_rows, vq_extras = value_codecs.encode_rows_values(
+        vals_rows, nnz_rows, vq, clip=vq_clip
+    )
+    payload.update(vq_extras)
     return PackedRows(
         codec=codec,
         n_docs=fwd.n_docs,
@@ -491,6 +529,7 @@ def pack_rows(
         vals_rows=vals_rows,
         nnz_rows=nnz_rows,
         payload=payload,
+        vq=vq,
     )
 
 

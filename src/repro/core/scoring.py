@@ -230,7 +230,9 @@ def block_slot_scores(prod: jnp.ndarray, start_pos: jnp.ndarray) -> jnp.ndarray:
     return scores * used.astype(scores.dtype)
 
 
-@partial(jax.jit, static_argnames=("codec", "block_size", "n_docs", "scale"))
+@partial(
+    jax.jit, static_argnames=("codec", "block_size", "n_docs", "scale", "vq")
+)
 def _score_packed(
     q,
     seg,
@@ -243,11 +245,15 @@ def _score_packed(
     words,
     widths,
     comps,
+    vq_lo,
+    vq_scale,
+    vq_codebook,
     *,
     codec: str,
     block_size: int,
     n_docs: int,
     scale: float,
+    vq: str = "f16",
 ):
     if codec == "uncompressed":  # decode-free layout
         c = comps
@@ -257,7 +263,15 @@ def _score_packed(
             block_size,
         )
         c = components_from_gaps(gaps, seg, start_pos, start_abs)
-    vals_f = dequantise_values(vals, scale)
+    if vq == "f16":
+        vals_f = dequantise_values(vals, scale)
+    else:  # quantized values: codes → storage-unit f32 → value scale
+        from . import values as value_codecs
+
+        cb = vq_codebook.reshape(-1) if vq == "pq" else None
+        vals_f = value_codecs.decode_codes(
+            vq, vals, vq_lo, vq_scale, cb
+        ) * jnp.float32(scale)
     prod = block_products(q, c, vals_f, seg)
     return combine_block_scores(prod, seg, doc_ids, n_docs)
 
@@ -267,6 +281,7 @@ def _packed_device_args(packed: PackedBlocks):
     zero_u8 = np.zeros((packed.n_blocks, 1), dtype=np.uint8)
     zero_u32 = np.zeros((packed.n_blocks, 1), dtype=np.uint32)
     zero_i32 = np.zeros((packed.n_blocks,), dtype=np.int32)
+    zero_f32 = np.zeros((packed.n_blocks, 1), dtype=np.float32)
     arrays = (
         jnp.asarray(packed.seg),
         jnp.asarray(packed.start_pos),
@@ -282,12 +297,22 @@ def _packed_device_args(packed: PackedBlocks):
             if packed.comps is not None
             else np.zeros(packed.seg.shape, dtype=np.int32)
         ),
+        jnp.asarray(packed.vq_lo if packed.vq_lo is not None else zero_f32),
+        jnp.asarray(
+            packed.vq_scale if packed.vq_scale is not None else zero_f32
+        ),
+        jnp.asarray(
+            packed.vq_codebook
+            if packed.vq_codebook is not None
+            else np.zeros((1,), dtype=np.float32)
+        ),
     )
     static = dict(
         codec=packed.codec,
         block_size=packed.block_size,
         n_docs=packed.n_docs,
         scale=float(packed.value_format.scale),
+        vq=getattr(packed, "vq", "f16"),
     )
     return arrays, static
 
@@ -442,18 +467,39 @@ def _gather_decode_rows(codec: str, arrays, docs: jnp.ndarray):
     """Gather + decode the packed rows of ``docs`` → (comps, vals,
     nnz) — the ONE row-materialisation both the single-query and the
     batched jnp rescoring paths share (so a codec/layout change lands
-    in exactly one place)."""
+    in exactly one place).
+
+    The VALUE codec is inferred from the payload keys
+    (``values.infer_rows_vq``, DESIGN.md §12): quantized rows gather
+    their u8 codes + per-row clip columns (or the shared codebook) and
+    dequantize through the same ``values.decode_codes`` helpers the
+    fused kernels run, so every execution mode computes identical
+    value bits.  Decoded values are storage-unit f32; the downstream
+    ``value_scale`` FMA applies unchanged."""
+    from . import values as value_codecs
     from .layout import get_layout
 
+    vq = value_codecs.infer_rows_vq(arrays)
     vals = jnp.take(arrays["vals_rows"], docs, axis=0)
     nnz = jnp.take(arrays["nnz_rows"], docs, axis=0)
+    if vq != "f16":
+        lo = step = cb = None
+        if vq == "pq":
+            cb = jnp.asarray(arrays["vq_codebook"], jnp.float32).reshape(-1)
+        else:
+            lo_key, sc_key = value_codecs.sq_keys(vq)
+            lo = jnp.take(arrays[lo_key], docs, axis=0)
+            step = jnp.take(arrays[sc_key], docs, axis=0)
+        vals = value_codecs.decode_codes(vq, vals, lo, step, cb)
     if get_layout(codec).decode_free:  # absolute components stored raw
         comps = jnp.take(arrays["comps_rows"], docs, axis=0)
     else:
         payload = {
             k: jnp.take(arrays[k], docs, axis=0)
             for k in arrays
-            if k.endswith("_rows") and k not in _ROW_COMMON_KEYS
+            if k.endswith("_rows")
+            and k not in _ROW_COMMON_KEYS
+            and not k.startswith("vq_")
         }
         comps = decode_doc_rows(codec, payload, l_max=vals.shape[-1])
     return comps, vals, nnz

@@ -101,10 +101,39 @@ def _lowering(interpret, mode) -> str:
     return resolve_lowering(mode if mode is not None else interpret)
 
 
+#: value codecs already warned about the block-scan jnp fallback
+_BLOCK_VQ_WARNED: set = set()
+
+
+def _block_lowering(interpret, mode, packed: PackedBlocks) -> str:
+    """Like ``_lowering``, but quantized-value blocks (``packed.vq`` ≠
+    f16, DESIGN.md §12) route to the jnp reference: the codec block
+    kernels stream raw-dtype value tiles, and only the rows-rescoring
+    kernels (the path every engine serves) carry the in-kernel dequant
+    stage.  One-time warning, same contract as the missing-rows-kernel
+    fallback in ``scoring``."""
+    low = _lowering(interpret, mode)
+    vq = getattr(packed, "vq", "f16")
+    if low != "jnp" and vq != "f16":
+        if (packed.codec, vq) not in _BLOCK_VQ_WARNED:
+            import warnings
+
+            _BLOCK_VQ_WARNED.add((packed.codec, vq))
+            warnings.warn(
+                f"codec {packed.codec!r} block scan has no fused "
+                f"vq={vq!r} kernel; scoring through the jnp reference "
+                f"(the rows-rescoring path decodes vq in-kernel)",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        return "jnp"
+    return low
+
+
 def score_dotvbyte(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
     """Full fused-kernel scoring path: [n_docs] f32."""
     assert packed.codec == "dotvbyte"
-    low = _lowering(interpret, mode)
+    low = _block_lowering(interpret, mode, packed)
     if low == "jnp":
         return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)
@@ -134,7 +163,7 @@ def _combine_batch(block, doc_ids, n_docs: int):
 def score_dotvbyte_batch(Q, packed: PackedBlocks, interpret=None, *, mode=None):
     """Decode-once/score-many fused path for a query batch: [nq, n_docs]."""
     assert packed.codec == "dotvbyte"
-    low = _lowering(interpret, mode)
+    low = _block_lowering(interpret, mode, packed)
     if low == "jnp":
         return score_packed_batch(Q, packed)
     Qp = _padded_queries(Q, packed.dim)
@@ -159,7 +188,7 @@ def score_dotvbyte_batch(Q, packed: PackedBlocks, interpret=None, *, mode=None):
 def score_streamvbyte(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
     """Full fused-kernel StreamVByte scoring path: [n_docs] f32."""
     assert packed.codec == "streamvbyte"
-    low = _lowering(interpret, mode)
+    low = _block_lowering(interpret, mode, packed)
     if low == "jnp":
         return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)
@@ -184,7 +213,7 @@ def score_streamvbyte(q_dense, packed: PackedBlocks, interpret=None, *, mode=Non
 def score_streamvbyte_batch(Q, packed: PackedBlocks, interpret=None, *, mode=None):
     """Decode-once/score-many fused StreamVByte path: [nq, n_docs]."""
     assert packed.codec == "streamvbyte"
-    low = _lowering(interpret, mode)
+    low = _block_lowering(interpret, mode, packed)
     if low == "jnp":
         return score_packed_batch(Q, packed)
     Qp = _padded_queries(Q, packed.dim)
@@ -209,7 +238,7 @@ def score_streamvbyte_batch(Q, packed: PackedBlocks, interpret=None, *, mode=Non
 def score_bitpack(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
     """Runtime-width bitpack kernel path: [n_docs] f32."""
     assert packed.codec == "bitpack"
-    low = _lowering(interpret, mode)
+    low = _block_lowering(interpret, mode, packed)
     if low == "jnp":
         return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)
@@ -234,7 +263,7 @@ def score_bitpack(q_dense, packed: PackedBlocks, interpret=None, *, mode=None):
 def score_bitpack_batch(Q, packed: PackedBlocks, interpret=None, *, mode=None):
     """Decode-once/score-many runtime-width bitpack path: [nq, n_docs]."""
     assert packed.codec == "bitpack"
-    low = _lowering(interpret, mode)
+    low = _block_lowering(interpret, mode, packed)
     if low == "jnp":
         return score_packed_batch(Q, packed)
     Qp = _padded_queries(Q, packed.dim)
@@ -264,7 +293,7 @@ def score_bitpack_bucketed(q_dense, packed: PackedBlocks, interpret=None, *, mod
     size — the §Perf layout.
     """
     assert packed.codec == "bitpack"
-    low = _lowering(interpret, mode)
+    low = _block_lowering(interpret, mode, packed)
     if low == "jnp":
         return score_packed(q_dense, packed)
     q = _padded_query(q_dense, packed.dim)

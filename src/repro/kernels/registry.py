@@ -132,16 +132,23 @@ def rows_batch_scorer(codec: str) -> Optional[Callable]:
 
 def _rows_arrays(arrays) -> dict:
     """The row-form fields of an engine array dict (drop engine extras
-    so the jit'd XLA rows graph keys on a stable pytree)."""
+    so the jit'd XLA rows graph keys on a stable pytree).  Value-codec
+    payload (``vq_*``, DESIGN.md §12) rides along — it includes the
+    non-``_rows`` ``vq_codebook``."""
     keep = ("vals_rows", "nnz_rows")
     return {
-        k: arrays[k] for k in arrays if k in keep or k.endswith("_rows")
+        k: arrays[k]
+        for k in arrays
+        if k in keep or k.endswith("_rows") or k.startswith("vq_")
     }
 
 
 def _make_rows(codec: str):
     def rows(arrays, docs, q, scale, mode=None):
+        from repro.core import values as value_codecs
+
         low = resolve_lowering(mode)
+        vq = value_codecs.infer_rows_vq(arrays)
         qp = pad_query_lanes(jnp.asarray(q, jnp.float32))
         if low == "jnp":
             from repro.core.scoring import _gather_decode_rows, score_doc_rows
@@ -158,8 +165,10 @@ def _make_rows(codec: str):
             docs,
             arrays["vals_rows"],
             arrays["nnz_rows"],
+            *value_codecs.rows_vq_streams(vq, arrays),
             *rows_dot._payload_streams(codec, arrays),
             scale=float(scale),
+            vq=vq,
             interpret=low == "interpret",
         )
 
@@ -168,7 +177,10 @@ def _make_rows(codec: str):
 
 def _make_rows_batch(codec: str):
     def rows_batch(arrays, docs, Q, scale, mode=None):
+        from repro.core import values as value_codecs
+
         low = resolve_lowering(mode)
+        vq = value_codecs.infer_rows_vq(arrays)
         Qp = pad_query_lanes(jnp.asarray(Q, jnp.float32))
         if low == "jnp":
             import jax
@@ -189,8 +201,10 @@ def _make_rows_batch(codec: str):
             docs,
             arrays["vals_rows"],
             arrays["nnz_rows"],
+            *value_codecs.rows_vq_streams(vq, arrays),
             *rows_dot._payload_streams(codec, arrays),
             scale=float(scale),
+            vq=vq,
             interpret=low == "interpret",
         )
 

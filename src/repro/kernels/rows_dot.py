@@ -100,11 +100,34 @@ _DECODERS = {
 }
 
 
-def _kernel(docs_ref, q_ref, vals_ref, nnz_ref, *rest, scale: float, codec: str):
-    *payload_refs, out_ref = rest
-    L = vals_ref.shape[1]
+def _dequant_row(vq: str, vals_ref, vq_refs):
+    """In-kernel dequant stage (DESIGN.md §12): the VMEM-resident code
+    row → f32 storage-unit values, through the SAME ``values.decode_
+    codes`` helpers the jnp reference runs — quantized bytes are what
+    crossed HBM; f32 value rows exist only in VMEM."""
+    from repro.core import values as value_codecs
+
+    codes = vals_ref[0, :]
+    if vq == "f16":
+        return codes.astype(jnp.float32)
+    if vq == "pq":
+        (cb_ref,) = vq_refs  # [1, K·M] flat codebook, grid-resident
+        return value_codecs.decode_codes(vq, codes, codebook_flat=cb_ref[0, :])
+    lo_ref, sc_ref = vq_refs  # per-row clip range, gathered with the row
+    return value_codecs.decode_codes(vq, codes, lo_ref[0, 0], sc_ref[0, 0])
+
+
+def _kernel(
+    docs_ref, q_ref, vals_ref, nnz_ref, *rest,
+    scale: float, codec: str, vq: str,
+):
+    from repro.core import values as value_codecs
+
+    n_vq = value_codecs.n_vq_streams(vq)
+    vq_refs, payload_refs, out_ref = rest[:n_vq], rest[n_vq:-1], rest[-1]
+    vals = _dequant_row(vq, vals_ref, vq_refs) * jnp.float32(scale)
+    L = vals.shape[0]  # LOGICAL row capacity (codes decode 1:factor)
     comps = _DECODERS[codec](payload_refs, L)
-    vals = vals_ref[0, :].astype(jnp.float32) * jnp.float32(scale)
     mask = jax.lax.iota(jnp.int32, L) < nnz_ref[0, 0]
     Q = q_ref[...]  # [nq, V] resident across the whole grid
     qv = jnp.take(Q, comps, axis=1)  # [nq, L]
@@ -121,33 +144,51 @@ def _payload_streams(codec: str, arrays) -> list[jnp.ndarray]:
     return [arrays["ctrl_rows"], arrays["data_rows"]]
 
 
-@functools.partial(jax.jit, static_argnames=("codec", "scale", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("codec", "scale", "vq", "interpret")
+)
 def rows_scores_batch(
     codec: str,
     Q: jnp.ndarray,  # [nq, vocab_pad] f32
     docs: jnp.ndarray,  # i32 [C] candidate doc ids (sentinel = row N)
-    vals_rows: jnp.ndarray,  # [N+1, L] storage dtype
+    vals_rows: jnp.ndarray,  # [N+1, W] storage dtype / u8 codes
     nnz_rows: jnp.ndarray,  # i32 [N+1]
-    *payload,  # codec streams, see _payload_streams
+    *streams,  # vq streams (values.rows_vq_streams) + codec payload
     scale: float = 1.0,
+    vq: str = "f16",
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Fused rescoring of C candidate rows against a query batch.
 
     Returns scores f32 [nq, C]. ``docs`` is consumed as scalar prefetch:
     the grid index_map gathers row ``docs[i]`` HBM→VMEM at step ``i``.
-    """
+
+    Under a quantized ``vq`` the value operand carries u8 codes (the
+    only value bytes that cross HBM); the scalar-quant clip columns are
+    gathered per row like any stream, the PQ codebook is grid-resident
+    like Q, and the in-kernel dequant stage rebuilds f32 values in VMEM
+    before the dot (DESIGN.md §12)."""
+    from repro.core import values as value_codecs
+
     C = docs.shape[0]
     nq, V = Q.shape
-    L = vals_rows.shape[1]
+    W = vals_rows.shape[1]  # stored width (logical // code_factor)
+    n_vq = value_codecs.n_vq_streams(vq)
+    vq_streams, payload = streams[:n_vq], streams[n_vq:]
     gathered = lambda width: pl.BlockSpec((1, width), lambda i, docs: (docs[i], 0))
+    if vq == "pq":  # flat codebook, resident across the whole grid
+        vq_specs = [
+            pl.BlockSpec(vq_streams[0].shape, lambda i, docs: (0, 0))
+        ]
+    else:  # per-row lo/scale columns gather with the row
+        vq_specs = [gathered(1) for _ in vq_streams]
     in_specs = [
         pl.BlockSpec((nq, V), lambda i, docs: (0, 0)),  # Q resident
-        gathered(L),  # vals
+        gathered(W),  # vals / codes
         gathered(1),  # nnz
-    ] + [gathered(p.shape[1]) for p in payload]
+    ] + vq_specs + [gathered(p.shape[1]) for p in payload]
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, codec=codec),
+        functools.partial(_kernel, scale=scale, codec=codec, vq=vq),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(C,),
@@ -156,7 +197,7 @@ def rows_scores_batch(
         ),
         out_shape=jax.ShapeDtypeStruct((C, nq), jnp.float32),
         interpret=interpret,
-    )(docs.astype(jnp.int32), Q, vals_rows, nnz_rows[:, None], *payload)
+    )(docs.astype(jnp.int32), Q, vals_rows, nnz_rows[:, None], *streams)
     return out.T
 
 
@@ -166,14 +207,15 @@ def rows_scores(
     docs: jnp.ndarray,
     vals_rows: jnp.ndarray,
     nnz_rows: jnp.ndarray,
-    *payload,
+    *streams,
     scale: float = 1.0,
+    vq: str = "f16",
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Single-query fused rescoring → scores f32 [C]."""
     return rows_scores_batch(
-        codec, q[None, :], docs, vals_rows, nnz_rows, *payload,
-        scale=scale, interpret=interpret,
+        codec, q[None, :], docs, vals_rows, nnz_rows, *streams,
+        scale=scale, vq=vq, interpret=interpret,
     )[0]
 
 

@@ -81,19 +81,41 @@ def pad_axis(x: jnp.ndarray, multiple: int, axis: int = 0, fill=0) -> jnp.ndarra
 # ---------------------------------------------------------------------------
 
 
-def tile_scores(q, gaps, seg, sp, sa, vals, scale: float) -> jnp.ndarray:
+def _tile_values(vals, scale: float, vq: str, vq_lo, vq_scale, vq_cb):
+    """The tile program's dequant stage (DESIGN.md §12): the value tile
+    — raw storage dtype under ``vq="f16"``, u8 codes otherwise — →
+    scaled f32, through the shared ``values.decode_codes`` helpers, so
+    quantized value bytes are what the tile DMA'd and f32 rows exist
+    only in the tile working set."""
+    if vq == "f16":
+        return vals.astype(jnp.float32) * jnp.float32(scale)
+    from repro.core import values as value_codecs
+
+    cb = vq_cb.reshape(-1) if vq == "pq" else None
+    return value_codecs.decode_codes(
+        vq, vals, vq_lo, vq_scale, cb
+    ) * jnp.float32(scale)
+
+
+def tile_scores(
+    q, gaps, seg, sp, sa, vals, scale: float,
+    vq: str = "f16", vq_lo=None, vq_scale=None, vq_cb=None,
+) -> jnp.ndarray:
     """One tile, one query: [R, T] streams → [R, D] slot scores."""
     comps = components_from_gaps(gaps, seg, sp, sa)
     qv = jnp.take(q, comps, axis=0)
-    prod = qv * (vals.astype(jnp.float32) * jnp.float32(scale))
+    prod = qv * _tile_values(vals, scale, vq, vq_lo, vq_scale, vq_cb)
     prod = prod * (seg >= 0).astype(jnp.float32)
     return block_slot_scores(prod, sp)
 
 
-def tile_scores_batch(Q, gaps, seg, sp, sa, vals, scale: float) -> jnp.ndarray:
+def tile_scores_batch(
+    Q, gaps, seg, sp, sa, vals, scale: float,
+    vq: str = "f16", vq_lo=None, vq_scale=None, vq_cb=None,
+) -> jnp.ndarray:
     """One tile, a query tile: decode once, score [nq, R, D]."""
     comps = components_from_gaps(gaps, seg, sp, sa)
-    w = vals.astype(jnp.float32) * jnp.float32(scale)
+    w = _tile_values(vals, scale, vq, vq_lo, vq_scale, vq_cb)
     w = w * (seg >= 0).astype(jnp.float32)
     qv = jnp.take(Q, comps, axis=1)  # [nq, R, T]
     return block_slot_scores(qv * w[None], sp)

@@ -25,7 +25,14 @@ import jax.numpy as jnp
 from .common import dense_init, embed_init, rms_norm
 from .transformer import attention
 
-__all__ = ["SparseEncoderConfig", "encoder_init", "encode", "contrastive_loss"]
+__all__ = [
+    "SparseEncoderConfig",
+    "encoder_init",
+    "encode",
+    "contrastive_loss",
+    "fake_quantize",
+    "export_quant_clip",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +47,13 @@ class SparseEncoderConfig:
     flops_lambda: float = 1e-3
     temperature: float = 0.05
     dtype: object = jnp.float32
+    #: quantization-aware training (DESIGN.md §12): fake-quantize the
+    #: pooled activations with a learnable PACT clip + straight-through
+    #: rounding, so the encoder trains against the same value grid the
+    #: u8_sq/u4_sq serving codecs store
+    quantize: bool = False
+    quant_bits: int = 8
+    quant_clip_init: float = 4.0  # log1p activations rarely exceed this
 
     @property
     def head_dim(self) -> int:
@@ -68,7 +82,44 @@ def encoder_init(key, cfg: SparseEncoderConfig):
         },
         "final_norm": jnp.ones((D,), cfg.dtype),
         "mlm_bias": jnp.zeros((V,), cfg.dtype),  # head tied to embed
+        **(
+            {"quant_hi": jnp.float32(cfg.quant_clip_init)}
+            if cfg.quantize
+            else {}
+        ),
     }
+
+
+def fake_quantize(acts, hi, bits: int):
+    """PACT fake-quant with a straight-through estimator.
+
+    Forward: clip to ``[0, hi]``, snap to the ``2**bits - 1``-level
+    grid (exactly the u8_sq/u4_sq serving grid with ``lo = 0``,
+    DESIGN.md §12). Backward: the rounding is identity (STE), so
+    gradients flow to the activations inside the clip and to ``hi``
+    through the clip boundary — PACT's learnable-range rule."""
+    hi = jnp.maximum(hi, 1e-6)  # keep the grid step finite
+    maxcode = (1 << bits) - 1
+    clipped = jnp.clip(acts, 0.0, hi)
+    step = hi / maxcode
+    q = jnp.round(clipped / step) * step
+    return clipped + jax.lax.stop_gradient(q - clipped)
+
+
+def export_quant_clip(params, cfg: SparseEncoderConfig, storage_scale: float = 1.0):
+    """Trained quantizer → the pack-time clip override (DESIGN.md §12).
+
+    Returns the ``(lo, hi)`` pair for ``layout.pack_rows(...,
+    vq_clip=...)`` in STORAGE units: the learned PACT range is in TRUE
+    activation units, and quantized rows store codes over storage-unit
+    values (``raw · storage_scale⁻¹``), so the range divides by the
+    collection's ``value_format.scale``."""
+    if "quant_hi" not in params:
+        raise ValueError(
+            "params carry no quantizer; train with cfg.quantize=True"
+        )
+    hi = float(params["quant_hi"]) / float(storage_scale)
+    return (0.0, hi)
 
 
 def encode(params, cfg: SparseEncoderConfig, tokens, mask):
@@ -93,7 +144,10 @@ def encode(params, cfg: SparseEncoderConfig, tokens, mask):
     logits = x @ params["embed"].T + params["mlm_bias"]  # [B, S, V]
     acts = jnp.log1p(jax.nn.relu(logits.astype(jnp.float32)))
     acts = jnp.where(mask[..., None], acts, 0.0)
-    return acts.max(axis=1)  # SPLADE-max pooling → [B, V]
+    pooled = acts.max(axis=1)  # SPLADE-max pooling → [B, V]
+    if cfg.quantize:
+        pooled = fake_quantize(pooled, params["quant_hi"], cfg.quant_bits)
+    return pooled
 
 
 def contrastive_loss(params, cfg: SparseEncoderConfig, batch):

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import layout
+from repro.core import values as value_codecs
 from repro.core.forward_index import VALUE_FORMATS, ForwardIndex
 from repro.kernels import modes as kernel_modes
 from repro.serve import pipeline as serve_pipeline
@@ -115,7 +116,15 @@ class RetrieverConfig:
     ``batch_size`` is the expected steady-state query-batch size: it
     joins the pipeline's padding-bucket set (DESIGN.md §8) so that
     batch shape gets an exact-fit compiled plan instead of rounding up
-    to the next power-of-two bucket."""
+    to the next power-of-two bucket.
+
+    ``vq`` is the VALUE codec (DESIGN.md §12), orthogonal to the id
+    ``codec``: ``"f16"`` stores raw storage-dtype values; ``"u8_sq"``
+    / ``"u4_sq"`` store per-row scalar-quant codes with learned clip
+    ranges; ``"pq"`` stores product-quantizer codes plus a shared
+    codebook. Quantized values are decoded in-kernel on the rescoring
+    path; top-k ids stay identical across backends at every ``vq``
+    (asserted by ``make value-parity``)."""
 
     engine: str = "seismic"
     codec: str = "uncompressed"
@@ -124,6 +133,7 @@ class RetrieverConfig:
     batch_size: int | None = None  # steady-state batch hint → bucket set
     n_shards: int = 1  # index shards for the sharded path
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    vq: str = "f16"  # value codec (core.values.VALUE_CODECS)
 
     def replace(self, **kw) -> "RetrieverConfig":
         return dataclasses.replace(self, **kw)
@@ -244,14 +254,33 @@ def row_array_specs(
     d_max: int,
     value_dtype=jnp.float16,
     bitpack_bits: int = 16,
+    vq: str = "f16",
 ) -> Dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStructs of the packed row form under ``codec`` — the
-    candidate-rescoring arrays every engine shares (dry-run sizing)."""
+    candidate-rescoring arrays every engine shares (dry-run sizing).
+    Under a quantized ``vq`` the value stream is u8 codes at
+    ``l_max // code_factor`` width plus the clip columns / codebook
+    (DESIGN.md §12); ``l_max`` must already be factor-aligned the way
+    ``layout.pack_rows`` rounds it."""
     sds = jax.ShapeDtypeStruct
+    value_codecs.check_vq(vq)
+    factor = value_codecs.code_factor(vq)
     arrays = {
-        "vals_rows": sds((n_docs + 1, l_max), value_dtype),
+        "vals_rows": (
+            sds((n_docs + 1, l_max), value_dtype)
+            if vq == "f16"
+            else sds((n_docs + 1, l_max // factor), jnp.uint8)
+        ),
         "nnz_rows": sds((n_docs + 1,), jnp.int32),
     }
+    if vq == "pq":
+        arrays["vq_codebook"] = sds(
+            (value_codecs.PQ_K, value_codecs.PQ_M), jnp.float32
+        )
+    elif vq != "f16":
+        lo_key, sc_key = value_codecs.sq_keys(vq)
+        arrays[lo_key] = sds((n_docs + 1, 1), jnp.float32)
+        arrays[sc_key] = sds((n_docs + 1, 1), jnp.float32)
     if codec == "uncompressed":
         arrays["comps_rows"] = sds((n_docs + 1, l_max), jnp.int32)
     elif codec == "bitpack":
@@ -293,6 +322,7 @@ class Retriever:
     ):
         self.impl = get_engine(cfg.engine)
         layout.get_layout(cfg.codec)  # raises listing the known codecs
+        value_codecs.check_vq(cfg.vq)  # raises listing VALUE_CODECS
         if cfg.backend not in kernel_modes.SCORING_BACKENDS:
             raise ValueError(
                 f"unknown backend {cfg.backend!r}; have "
@@ -463,6 +493,7 @@ def manifest_dict(
         "batch_size": cfg.batch_size,
         "n_shards": cfg.n_shards,
         "params": dict(cfg.params),
+        "vq": cfg.vq,
         "n_docs": int(n_docs),
         "dim": int(dim),
         "value_scale": float(value_scale),
@@ -537,6 +568,12 @@ def check_manifest_names(manifest: Mapping[str, Any], where) -> None:
             f"unknown value_format {manifest['value_format']!r}; have "
             f"{sorted(VALUE_FORMATS)}"
         )
+    vq = manifest.get("vq", "f16")  # pre-value-codec artifacts are f16
+    if vq not in value_codecs.VALUE_CODECS:
+        raise ArtifactError(
+            f"unknown value codec {vq!r} at {where}; have "
+            f"{list(value_codecs.VALUE_CODECS)}"
+        )
 
 
 def check_array_spec(
@@ -567,6 +604,7 @@ def cfg_from_manifest(manifest: Mapping[str, Any]) -> RetrieverConfig:
         batch_size=manifest.get("batch_size"),  # pre-pipeline artifacts
         n_shards=int(manifest.get("n_shards", 1)),
         params=manifest.get("params", {}),
+        vq=manifest.get("vq", "f16"),  # pre-value-codec artifacts
     )
 
 

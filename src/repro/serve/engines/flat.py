@@ -34,7 +34,7 @@ class FlatEngine(EngineImpl):
 
     # -- host-side build ------------------------------------------------
     def build_arrays(self, fwd: ForwardIndex, cfg: RetrieverConfig):
-        return layout.pack_rows(fwd, codec=cfg.codec).arrays()
+        return layout.pack_rows(fwd, codec=cfg.codec, vq=cfg.vq).arrays()
 
     # -- serving --------------------------------------------------------
     def search_one(self, cfg: RetrieverConfig, n_docs: int, value_scale: float, arrays, q):
@@ -75,7 +75,7 @@ class FlatEngine(EngineImpl):
     ):
         return row_array_specs(
             cfg.codec, n_docs=n_docs, l_max=l_max, d_max=d_max,
-            value_dtype=value_dtype,
+            value_dtype=value_dtype, vq=cfg.vq,
         )
 
     # -- sharded build --------------------------------------------------
@@ -85,7 +85,9 @@ class FlatEngine(EngineImpl):
         shard-local row ids) — no sub-index structure to rebuild, and
         row bytes identical to the same docs' rows in a monolithic
         pack at equal row capacity."""
-        return layout.pack_rows(fwd, codec=cfg.codec, doc_range=(lo, hi)).arrays()
+        return layout.pack_rows(
+            fwd, codec=cfg.codec, doc_range=(lo, hi), vq=cfg.vq
+        ).arrays()
 
     def shard_build(self, fwd: ForwardIndex, cfg: RetrieverConfig, n_shards: int):
         """Contiguous doc ranges, rows padded to a common local size."""
@@ -97,7 +99,7 @@ class FlatEngine(EngineImpl):
         for s in range(n_shards):
             lo, hi = s * docs_local, min((s + 1) * docs_local, n)
             sub = fwd.slice(lo, hi).padded(docs_local)
-            dicts.append(layout.pack_rows(sub, codec=cfg.codec).arrays())
+            dicts.append(layout.pack_rows(sub, codec=cfg.codec, vq=cfg.vq).arrays())
             idmap = np.full(docs_local + 1, n, dtype=np.int32)
             idmap[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
             idmaps.append(idmap)

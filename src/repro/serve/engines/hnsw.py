@@ -80,7 +80,9 @@ class HNSWEngine(EngineImpl):
             "adj": index.adjacency(0),
             "seeds": index.seed_nodes(p["n_seeds"]),
         }
-        arrays.update(layout.pack_rows(index.fwd, codec=cfg.codec).arrays())
+        arrays.update(
+            layout.pack_rows(index.fwd, codec=cfg.codec, vq=cfg.vq).arrays()
+        )
         return arrays
 
     # -- serving --------------------------------------------------------
@@ -156,7 +158,7 @@ class HNSWEngine(EngineImpl):
         arrays.update(
             row_array_specs(
                 cfg.codec, n_docs=n_docs, l_max=l_max, d_max=d_max,
-                value_dtype=value_dtype,
+                value_dtype=value_dtype, vq=cfg.vq,
             )
         )
         return arrays
@@ -187,7 +189,9 @@ class HNSWEngine(EngineImpl):
                 {
                     "adj": adj,
                     "seeds": index.seed_nodes(p["n_seeds"], sentinel=docs_local),
-                    **layout.pack_rows(padded, codec=cfg.codec).arrays(),
+                    **layout.pack_rows(
+                        padded, codec=cfg.codec, vq=cfg.vq
+                    ).arrays(),
                 }
             )
             idmap = np.full(docs_local + 1, n, dtype=np.int32)

@@ -118,7 +118,7 @@ class SeismicEngine(EngineImpl):
             "sum_vals": sum_vals,
             "block_docs": block_docs,
         }
-        arrays.update(layout.pack_rows(fwd, codec=cfg.codec).arrays())
+        arrays.update(layout.pack_rows(fwd, codec=cfg.codec, vq=cfg.vq).arrays())
         return arrays
 
     # -- serving --------------------------------------------------------
@@ -187,7 +187,7 @@ class SeismicEngine(EngineImpl):
         arrays.update(
             row_array_specs(
                 cfg.codec, n_docs=n_docs, l_max=l_max, d_max=d_max,
-                value_dtype=value_dtype,
+                value_dtype=value_dtype, vq=cfg.vq,
             )
         )
         return arrays
@@ -216,6 +216,12 @@ class SeismicEngine(EngineImpl):
 
         dicts, idmaps = [], []
         row_keys = [k for k in A if k.endswith("_rows")]
+        # shared (non-per-row) value-codec payload — the PQ codebook —
+        # is copied verbatim into every shard (DESIGN.md §12)
+        shared_vq = {
+            k: A[k] for k in A
+            if k.startswith("vq_") and not k.endswith("_rows")
+        }
         for s in range(n_shards):
             blocks = np.arange(s, n_blocks, n_shards)
             docs = shard_docs[s]
@@ -238,6 +244,7 @@ class SeismicEngine(EngineImpl):
             )
             for k in row_keys:
                 sub[k] = A[k][pad_rows]
+            sub.update(shared_vq)
             dicts.append(sub)
             idmap = np.full(docs_local_max + 1, n_docs, dtype=np.int32)
             idmap[: len(docs)] = docs

@@ -175,6 +175,9 @@ class PlanKey:
     bucket: int
     shard: str = ""
     gen: str = ""
+    #: value codec (DESIGN.md §12) — the traced dequant stage differs
+    #: per vq, so executables must not collide across value codecs
+    vq: str = "f16"
 
 
 class SearchPlan:
@@ -258,7 +261,7 @@ class PlanCache:
         mode = resolve_mode(backend_mode(cfg.backend))
         self._key = partial(
             PlanKey, cfg.engine, cfg.codec, cfg.backend, mode, cfg.k,
-            shard=getattr(retriever, "shard", ""),
+            shard=getattr(retriever, "shard", ""), vq=cfg.vq,
         )
         self._dispatch = jax.jit(
             partial(

@@ -266,7 +266,7 @@ class MutablePlanCache:
                 key = serve_pipeline.PlanKey(
                     cfg.engine, cfg.codec, cfg.backend,
                     resolve_mode(backend_mode(cfg.backend)), cfg.k, bucket,
-                    shard="mut", gen=gen,
+                    shard="mut", gen=gen, vq=cfg.vq,
                 )
                 plan = serve_pipeline.SearchPlan(key, self.retriever._dispatch)
                 self._plans[bucket] = plan

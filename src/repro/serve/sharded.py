@@ -268,7 +268,7 @@ class ShardedPlanCache:
                 key = serve_pipeline.PlanKey(
                     cfg.engine, cfg.codec, cfg.backend,
                     resolve_mode(backend_mode(cfg.backend)), cfg.k, bucket,
-                    shard=f"*/{cfg.n_shards}",
+                    shard=f"*/{cfg.n_shards}", vq=cfg.vq,
                 )
                 plan = serve_pipeline.SearchPlan(
                     key, self.retriever._dispatch_shards

@@ -1,0 +1,324 @@
+"""Value-codec tests (DESIGN.md §12) — the ISSUE-10 acceptance suite:
+
+* **clip-fit determinism** — scalar-quant clip ranges are fit per row
+  on that row's OWN live values, so a document's code bytes are
+  identical whether it is packed alone, inside a slice, or inside the
+  full collection (the invariant that makes shard/segment/monolithic
+  builds byte-compatible).
+* **nibble round-trip** — u4 packing is an exact inverse through
+  ragged rows (odd nnz) and empty docs, and decode error is bounded by
+  half a quantization step.
+* **PQ artifact round-trip** — the codebook survives save →
+  ``open_retriever`` (monolithic and sharded) with byte-identical
+  top-k.
+* **mutation parity at every vq** — a ``MutableRetriever`` with
+  tombstones + delta segments matches the oracle rebuild byte-for-byte
+  at f16/u8_sq/u4_sq pre- and post-merge; pq (whose codebook is
+  per-build, not per-doc) matches exactly post-merge and by top-k
+  overlap pre-merge.
+* **sub-byte shard stacking** — ragged shards of nibble-packed values
+  stack and serve byte-identically to the monolithic build.
+* **QAT hook** — the PACT fake-quant trains (loss decreases, the clip
+  is learnable) and exports the pack-time clip override.
+* **spec agreement** — ``row_array_specs`` matches a real pack at
+  every codec × vq.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout, values
+from repro.core.forward_index import ForwardIndex, pack_forward_index
+from repro.core.scoring import score_packed
+from repro.data.synthetic import SyntheticConfig, generate_collection
+from repro.serve.api import (
+    ArtifactError,
+    Retriever,
+    RetrieverConfig,
+    open_retriever,
+    row_array_specs,
+)
+from repro.serve.segments import MutableRetriever
+
+QUANT_VQS = ("u8_sq", "u4_sq", "pq")
+
+
+@pytest.fixture(scope="module")
+def collection():
+    cfg = SyntheticConfig(name="values-test", dim=256, n_docs=50, n_queries=4,
+                          doc_nnz_mean=24.0, query_nnz_mean=8.0, seed=3)
+    return generate_collection(cfg, value_format="f16")
+
+
+@pytest.fixture(scope="module")
+def queries(collection):
+    return np.stack(
+        [collection.query_dense(i) for i in range(collection.n_queries)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# encoder invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vq", ("u8_sq", "u4_sq"))
+def test_clip_fit_is_per_row_and_deterministic(collection, vq):
+    """Same doc → same code bytes, packed alone or with the whole
+    collection; repeated packs are byte-identical."""
+    fwd = collection.fwd
+    full = layout.pack_rows(fwd, codec="uncompressed", vq=vq)
+    again = layout.pack_rows(fwd, codec="uncompressed", vq=vq)
+    for k, v in full.arrays().items():
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(again.arrays()[k]))
+
+    part = layout.pack_rows(fwd.slice(10, 20), codec="uncompressed", vq=vq)
+    fa, pa = full.arrays(), part.arrays()
+    w = min(fa["vals_rows"].shape[1], pa["vals_rows"].shape[1])
+    np.testing.assert_array_equal(
+        np.asarray(fa["vals_rows"])[10:20, :w], np.asarray(pa["vals_rows"])[:10, :w]
+    )
+    lo_key, sc_key = values.sq_keys(vq)
+    np.testing.assert_array_equal(np.asarray(fa[lo_key])[10:20],
+                                  np.asarray(pa[lo_key])[:10])
+    np.testing.assert_array_equal(np.asarray(fa[sc_key])[10:20],
+                                  np.asarray(pa[sc_key])[:10])
+
+
+def test_u4_nibble_roundtrip_ragged_and_empty():
+    """pack→unpack is exact for 4-bit codes through odd-nnz rows and an
+    all-dead row; odd trailing dims are rejected."""
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 16, size=(5, 8)).astype(np.uint8)
+    codes[1, 3:] = 0  # odd live length (3) inside an even capacity
+    codes[4, :] = 0   # empty doc
+    packed = values.pack_nibbles(codes)
+    assert packed.shape == (5, 4) and packed.dtype == np.uint8
+    np.testing.assert_array_equal(np.asarray(values.unpack_nibbles(packed)), codes)
+    with pytest.raises(ValueError):
+        values.pack_nibbles(codes[:, :7])
+
+
+@pytest.mark.parametrize("vq", ("u8_sq", "u4_sq"))
+def test_sq_decode_error_bounded_by_half_step(collection, vq):
+    """Dequantized live values differ from the originals by ≤ step/2."""
+    fwd = collection.fwd
+    legacy = layout.pack_rows(fwd, codec="uncompressed")
+    quant = layout.pack_rows(fwd, codec="uncompressed", vq=vq)
+    la, qa = legacy.arrays(), quant.arrays()
+    lo_key, sc_key = values.sq_keys(vq)
+    dec = np.asarray(values.decode_codes(
+        vq, jnp.asarray(qa["vals_rows"]),
+        lo=jnp.asarray(qa[lo_key]), step=jnp.asarray(qa[sc_key]),
+    ))
+    ref = np.asarray(la["vals_rows"], np.float32)
+    nnz = np.asarray(la["nnz_rows"])
+    live = np.arange(ref.shape[1])[None, :] < nnz[:, None]
+    err = np.abs(dec[:, : ref.shape[1]] - ref)
+    tol = np.asarray(qa[sc_key]) * 0.5 + 1e-5
+    assert (err[live] <= np.broadcast_to(tol, err.shape)[live]).all()
+
+
+# ---------------------------------------------------------------------------
+# artifacts, shards, segments
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", (1, 2))
+def test_pq_codebook_artifact_roundtrip(collection, queries, tmp_path, n_shards):
+    """The PQ codebook rides the artifact: save → open_retriever is
+    byte-identical and the manifest round-trips cfg.vq."""
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", vq="pq", k=10,
+                          n_shards=n_shards)
+    r = Retriever.build(collection.fwd, cfg)
+    ids, scores = map(np.asarray, r.search(queries))
+    art = r.save(tmp_path / f"pq-{n_shards}")
+    r2 = open_retriever(art)
+    assert r2.cfg.vq == "pq"
+    i2, s2 = map(np.asarray, r2.search(queries))
+    np.testing.assert_array_equal(ids, i2)
+    np.testing.assert_array_equal(scores, s2)
+
+
+def test_unknown_vq_rejected(collection, tmp_path):
+    with pytest.raises(ValueError, match="value codec"):
+        Retriever.build(collection.fwd,
+                        RetrieverConfig(engine="flat", vq="int3"))
+    r = Retriever.build(collection.fwd,
+                        RetrieverConfig(engine="flat", vq="u8_sq", k=5))
+    art = r.save(tmp_path / "tamper-vq")
+    import json
+    man = art / "manifest.json"
+    meta = json.loads(man.read_text())
+    meta["vq"] = "int3"
+    man.write_text(json.dumps(meta))
+    with pytest.raises(ArtifactError, match="value codec"):
+        open_retriever(art)
+
+
+@pytest.mark.parametrize("vq", ("u8_sq", "u4_sq"))
+def test_sharded_matches_monolithic(collection, queries, vq):
+    """Ragged shards (50 docs over 3 shards) of quantized — u4:
+    nibble-packed, sub-byte — values serve byte-identically to the
+    monolithic build (pq is per-build, so excluded by design)."""
+    mono = Retriever.build(
+        collection.fwd, RetrieverConfig(engine="flat", codec="streamvbyte",
+                                        vq=vq, k=10))
+    shard = Retriever.build(
+        collection.fwd, RetrieverConfig(engine="flat", codec="streamvbyte",
+                                        vq=vq, k=10, n_shards=3))
+    mi, ms = map(np.asarray, mono.search(queries))
+    si, ss = map(np.asarray, shard.search(queries))
+    np.testing.assert_array_equal(mi, si)
+    np.testing.assert_array_equal(ms, ss)
+
+
+@pytest.mark.parametrize("vq", ("f16", "u8_sq", "u4_sq"))
+def test_mutation_parity_at_vq(collection, queries, vq):
+    """Tombstones + a delta segment at every per-doc-stable vq: the
+    mutable view matches the oracle rebuild byte-for-byte, before and
+    after merge."""
+    fwd = collection.fwd
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", vq=vq, k=5)
+    m = MutableRetriever.create(fwd.slice(0, 40), cfg)
+    m.delete([3, 17])
+    m.insert([fwd.doc(i) for i in range(40, 44)])
+
+    def oracle_parity(label):
+        live_fwd, live = m.live_corpus()
+        oracle = Retriever.build(live_fwd, cfg)
+        oi, osc = map(np.asarray, oracle.search(queries))
+        mi, ms = map(np.asarray, m.search(queries))
+        np.testing.assert_array_equal(mi, live[oi], err_msg=f"{label}: ids")
+        np.testing.assert_array_equal(ms, osc, err_msg=f"{label}: scores")
+
+    oracle_parity(f"{vq} 1 segment")
+    m.merge()
+    oracle_parity(f"{vq} post-merge")
+
+
+def test_mutation_pq_overlap_and_merge_parity(collection, queries):
+    """PQ codebooks are per-build (DESIGN.md §12): segments quantize
+    against their own codebook, so pre-merge parity is top-k overlap,
+    not bytes; post-merge (one build) parity is exact again."""
+    fwd = collection.fwd
+    cfg = RetrieverConfig(engine="flat", codec="streamvbyte", vq="pq", k=5)
+    m = MutableRetriever.create(fwd.slice(0, 40), cfg)
+    m.delete([3, 17])
+    m.insert([fwd.doc(i) for i in range(40, 44)])
+    live_fwd, live = m.live_corpus()
+    oracle = Retriever.build(live_fwd, cfg)
+    oi, _ = map(np.asarray, oracle.search(queries))
+    mi, _ = map(np.asarray, m.search(queries))
+    overlap = np.mean([
+        len(set(mi[i].tolist()) & set(live[oi[i]].tolist())) / mi.shape[1]
+        for i in range(mi.shape[0])
+    ])
+    assert overlap >= 0.8, overlap
+
+    m.merge()
+    live_fwd, live = m.live_corpus()
+    oracle = Retriever.build(live_fwd, cfg)
+    oi, osc = map(np.asarray, oracle.search(queries))
+    mi, ms = map(np.asarray, m.search(queries))
+    np.testing.assert_array_equal(mi, live[oi])
+    np.testing.assert_array_equal(ms, osc)
+
+
+# ---------------------------------------------------------------------------
+# block path, specs, QAT
+# ---------------------------------------------------------------------------
+
+
+def test_block_path_vq_scores_and_fused_fallback(collection):
+    """Quantized blocks score approximately like f16 blocks through the
+    jnp reference, and the fused entry point serves them identically to
+    the reference (block kernels fall back to jnp under vq, warning
+    once)."""
+    from repro.kernels.registry import get_kernels
+
+    fwd = collection.fwd
+    q = collection.query_dense(0)
+    ref = np.asarray(score_packed(q, pack_forward_index(fwd, codec="dotvbyte",
+                                                        block_size=128)))
+    pq8 = pack_forward_index(fwd, codec="dotvbyte", block_size=128, vq="u8_sq")
+    got = np.asarray(score_packed(q, pq8))
+    live = ref != 0
+    assert np.allclose(got[live], ref[live], rtol=0.05, atol=0.1)
+    with pytest.warns(RuntimeWarning, match="no fused vq"):
+        fused = np.asarray(
+            get_kernels("dotvbyte").block_scores(q, pq8, "pallas_compiled"))
+    np.testing.assert_array_equal(fused, got)
+
+
+@pytest.mark.parametrize("codec", layout.available_layouts())
+@pytest.mark.parametrize("vq", QUANT_VQS)
+def test_row_array_specs_match_real_pack(collection, codec, vq):
+    packed = layout.pack_rows(collection.fwd, codec=codec, vq=vq)
+    arrays = packed.arrays()
+    factor = values.code_factor(vq)
+    l_max = int(arrays["vals_rows"].shape[1]) * factor
+    d_max = int(arrays["data_rows"].shape[1]) if "data_rows" in arrays else 0
+    specs = row_array_specs(codec, n_docs=collection.fwd.n_docs, l_max=l_max,
+                            d_max=d_max, vq=vq)
+    assert set(specs) == set(arrays)
+    vq_exact = ("vals_rows", "nnz_rows") + tuple(values.VQ_ROW_KEYS)
+    for k, sds in specs.items():
+        a = np.asarray(arrays[k])
+        assert a.dtype == np.dtype(sds.dtype), (k, a.dtype, sds.dtype)
+        if k in vq_exact:
+            # the value streams size exactly — the quantized byte
+            # accounting (DESIGN.md §12) hangs off these widths
+            assert a.shape == sds.shape, (k, a.shape, sds.shape)
+        else:
+            # id-codec streams are nominal sizing: pack-time encoders
+            # lane-pad trailing dims, so real widths may exceed specs
+            assert len(a.shape) == len(sds.shape)
+            assert all(r >= s for r, s in zip(a.shape, sds.shape)), (
+                k, a.shape, sds.shape)
+
+
+def test_qat_trains_and_exports_clip():
+    """The PACT fake-quant hook: a training step runs under quantize=True,
+    the clip is learnable, and the trained range exports as the
+    pack-time clip override (in storage units)."""
+    from repro.models.sparse_encoder import (
+        SparseEncoderConfig, contrastive_loss, encoder_init,
+        export_quant_clip, fake_quantize,
+    )
+
+    cfg = SparseEncoderConfig(vocab=512, n_layers=2, d_model=32, n_heads=4,
+                              d_ff=64, max_len=16, quantize=True, quant_bits=8)
+    key = jax.random.PRNGKey(0)
+    p = encoder_init(key, cfg)
+    assert float(p["quant_hi"]) == cfg.quant_clip_init
+    ks = jax.random.split(key, 2)
+    batch = {
+        "q_tokens": jax.random.randint(ks[0], (4, 16), 0, cfg.vocab),
+        "q_mask": jnp.ones((4, 16), bool),
+        "d_tokens": jax.random.randint(ks[1], (4, 16), 0, cfg.vocab),
+        "d_mask": jnp.ones((4, 16), bool),
+    }
+    (loss, _), grads = jax.value_and_grad(
+        lambda pp: contrastive_loss(pp, cfg, batch), has_aux=True)(p)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(grads["quant_hi"]))  # PACT: hi is learnable
+
+    # forward semantics: outputs snap to the 255-level grid inside [0, hi]
+    acts = jnp.asarray([[0.0, 0.1, 2.0, 9.0]])
+    out = np.asarray(fake_quantize(acts, jnp.float32(4.0), 8))
+    assert out.max() <= 4.0 and out.min() >= 0.0
+    steps = out / (4.0 / 255.0)
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-4)
+
+    lo, hi = export_quant_clip(p, cfg, storage_scale=2.0)
+    assert lo == 0.0 and hi == pytest.approx(cfg.quant_clip_init / 2.0)
+    with pytest.raises(ValueError, match="quantizer"):
+        export_quant_clip(
+            encoder_init(key, SparseEncoderConfig(vocab=512, n_layers=2,
+                                                  d_model=32, n_heads=4,
+                                                  d_ff=64, max_len=16)),
+            cfg)

@@ -20,6 +20,15 @@ committed ``BENCH_overlap.json`` records a prefetch win (a non-NaN
 ``overlap/prefetch-gate`` row), the prefetch-on/off paced stream is
 re-measured fresh and the gate row NaN-fails if prefetch-on p95
 regresses past prefetch-off (EXPERIMENTS.md §Overlap).
+
+The values leg guards the value-codec win (DESIGN.md §12): for every
+codec whose committed snapshot carries a ``vq="u8_sq"`` compiled
+rescoring row, the fresh u8_sq row must stream strictly fewer
+``hbm_bytes_per_q`` than the committed f16 compiled row, and its
+``bits_per_posting`` must not regress past the committed u8_sq value —
+NaN-fail otherwise. Value-codec rows are identified by the structured
+``vq`` field and EXCLUDED from the wall-clock dictionaries, so the
+f16 rows keep their historical (family, codec, mode) identities.
 """
 
 from __future__ import annotations
@@ -89,6 +98,68 @@ def _overlap_gate() -> int:
     return failures
 
 
+def _values_gate(snap_rows: list[dict], fresh_rows) -> int:
+    """NaN-fail when the freshly measured ``u8_sq`` compiled rescoring
+    row stops beating the *committed* f16 compiled row on
+    ``hbm_bytes_per_q``, or its ``bits_per_posting`` regresses past the
+    committed u8_sq value — only for codecs whose committed snapshot
+    records the u8_sq win (same locked-in-wins philosophy as the
+    wall-clock leg). Rows are selected by the structured ``vq`` field."""
+    from benchmarks.common import _parse_derived
+
+    committed_f16_hbm: dict[str, float] = {}
+    committed_u8_bpp: dict[str, float] = {}
+    for row in snap_rows:
+        if (row.get("mode") != "pallas_compiled" or not row.get("codec")
+                or _family(row["name"]) != "rescoring"):
+            continue
+        d = row.get("derived") or {}
+        vq = row.get("vq")
+        if vq is None and d.get("hbm_bytes_per_q"):
+            committed_f16_hbm[row["codec"]] = float(d["hbm_bytes_per_q"])
+        elif vq == "u8_sq" and d.get("bits_per_posting") is not None:
+            committed_u8_bpp[row["codec"]] = float(d["bits_per_posting"])
+    gated = sorted(set(committed_u8_bpp) & set(committed_f16_hbm))
+    if not gated:
+        print("perf-gate: committed snapshot records no u8_sq rescoring "
+              "rows — values leg skipped")
+        return 0
+
+    fresh_u8 = {
+        r.codec: r
+        for r in fresh_rows
+        if r.vq == "u8_sq" and r.mode == "pallas_compiled"
+        and _family(r.name) == "rescoring"
+    }
+    failures = 0
+    for codec in gated:
+        f16_hbm = committed_f16_hbm[codec]
+        snap_bpp = committed_u8_bpp[codec]
+        r = fresh_u8.get(codec)
+        if r is None:
+            failures += 1
+            print(f"FAIL values/{codec}: fresh u8_sq rescoring row missing")
+            continue
+        d = _parse_derived(r.derived)
+        hbm, bpp = d.get("hbm_bytes_per_q"), d.get("bits_per_posting")
+        if hbm is None or not hbm < f16_hbm:
+            failures += 1
+            r.us = math.nan  # NaN-fail: the regression row carries no number
+            print(f"FAIL values/{codec}: fresh u8_sq us=nan — "
+                  f"hbm_bytes_per_q={hbm} no longer beats committed f16 "
+                  f"{f16_hbm:.0f}")
+        elif bpp is None or bpp > snap_bpp + 1e-6:
+            failures += 1
+            r.us = math.nan
+            print(f"FAIL values/{codec}: fresh u8_sq us=nan — "
+                  f"bits_per_posting={bpp} regressed past committed "
+                  f"{snap_bpp:.1f}")
+        else:
+            print(f"ok   values/{codec}: u8_sq streams {hbm:.0f} B/q "
+                  f"< f16 {f16_hbm:.0f} B/q at {bpp:.1f} bits/posting")
+    return failures
+
+
 def main() -> int:
     bench_path = os.path.join(_ROOT, "BENCH_kernels.json")
     if not os.path.isfile(bench_path):
@@ -102,6 +173,8 @@ def main() -> int:
     for row in snap.get("rows", []):
         mode, codec = row.get("mode"), row.get("codec")
         if not mode or not codec or row.get("us") is None:
+            continue
+        if row.get("vq"):  # value-codec rows gate via _values_gate
             continue
         committed[(_family(row["name"]), codec, mode)] = float(row["us"])
 
@@ -124,7 +197,11 @@ def main() -> int:
     print(f"# perf-gate: re-measuring pallas_compiled rows at n_docs={n_docs}…",
           file=sys.stderr, flush=True)
     fresh_rows = bench_run(n_docs=n_docs, modes=("pallas_compiled",), sweep=False)
-    fresh = {(_family(r.name), r.codec): r for r in fresh_rows if r.codec}
+    fresh = {
+        (_family(r.name), r.codec): r
+        for r in fresh_rows
+        if r.codec and not r.vq
+    }
 
     failures = 0
     for fam, codec in gated:
@@ -145,6 +222,7 @@ def main() -> int:
         else:
             print(f"ok   {fam}/{codec}: fresh compiled {r.us:.1f}µs "
                   f"≤ committed jnp {jnp_us:.1f}µs")
+    failures += _values_gate(snap.get("rows", []), fresh_rows)
     failures += _overlap_gate()
     if failures:
         print(f"perf-gate: {failures} regression(s)")

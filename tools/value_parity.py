@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""Value-codec parity gate (``make value-parity``, part of ``make
+check``).
+
+Asserts, on a tiny synthetic collection with an empty-document edge
+case, for every value codec on the vq axis (DESIGN.md §12):
+
+1. **losslessness of the default** — ``vq="f16"`` is a pure tag:
+   packing with it yields byte-identical arrays to a legacy pack that
+   never heard of the vq axis, rows AND blocks, for every id codec;
+2. **rows-kernel 3-mode parity** — for every id codec × quantized vq,
+   the fused rows kernel (``pallas_interpret`` and ``pallas_compiled``)
+   matches the jnp gather→dequant→dot reference to the repo's parity
+   contract (scores allclose rtol=1e-5/atol=1e-6 — quantized decode is
+   exact per slot; only reduction order may differ);
+3. **end-to-end 3-mode parity** — ``Retriever`` top-k ids are
+   byte-identical across ``jnp`` / ``pallas_interpret`` /
+   ``pallas_compiled`` for every engine × id codec × quantized vq,
+   with allclose scores;
+4. **quality floor** — exhaustive (flat) top-k overlap of each
+   quantized vq against the full-precision oracle stays above the
+   per-codec floor: ≥0.95 for u8_sq, ≥0.85 for u4_sq and pq.
+
+Exit status = number of failures (0 = pass).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import layout  # noqa: E402
+from repro.core.forward_index import ForwardIndex, pack_forward_index  # noqa: E402
+from repro.core.scoring import score_candidate_rows  # noqa: E402
+from repro.data.synthetic import SyntheticConfig, generate_collection  # noqa: E402
+from repro.kernels.registry import get_kernels  # noqa: E402
+from repro.serve.api import Retriever, RetrieverConfig, available_engines, get_engine  # noqa: E402
+
+from tools.kernel_parity import ENGINE_PARAMS, FUSED_MODES  # noqa: E402
+
+#: quantized value codecs on the vq axis (``f16`` is the lossless tag)
+QUANT_VQS = ("u8_sq", "u4_sq", "pq")
+
+#: minimum mean top-k overlap vs the full-precision oracle
+OVERLAP_FLOOR = {"u8_sq": 0.95, "u4_sq": 0.85, "pq": 0.85}
+
+
+def _fail(errors: list, msg: str) -> None:
+    errors.append(msg)
+    print(f"FAIL {msg}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    cfg = SyntheticConfig(name="value-parity", dim=1024, n_docs=150,
+                          n_queries=8, doc_nnz_mean=40.0,
+                          query_nnz_mean=12.0, seed=0)
+    col = generate_collection(cfg, value_format="f16")
+    docs = [col.fwd.doc(d) for d in range(col.fwd.n_docs)]
+    docs.append((np.zeros(0, np.uint32), np.zeros(0, np.float32)))
+    fwd = ForwardIndex.from_docs(docs, col.fwd.dim, value_format="f16")
+    n = fwd.n_docs
+    q = col.query_dense(0)
+    Q = np.stack([col.query_dense(i) for i in range(col.n_queries)])
+    scale = float(fwd.value_format.scale)
+    rng = np.random.default_rng(0)
+    cand = np.concatenate(
+        [rng.choice(n, 48, replace=False), [n, n - 1, 7, 7]]
+    ).astype(np.int32)  # sentinel + duplicate ids included
+
+    for codec in layout.available_layouts():
+        # 1. vq="f16" is byte-identical to a pack that predates the axis
+        legacy = layout.pack_rows(fwd, codec=codec).arrays()
+        tagged = layout.pack_rows(fwd, codec=codec, vq="f16")
+        if tagged.vq != "f16":
+            _fail(errors, f"f16 tag: pack_rows({codec}).vq == {tagged.vq!r}")
+        for k, v in tagged.arrays().items():
+            if k not in legacy or not np.array_equal(legacy[k], np.asarray(v)):
+                _fail(errors, f"f16 losslessness: {codec} rows array {k!r} "
+                              f"differs from legacy pack")
+                break
+        else:
+            print(f"ok f16-rows    {codec}: byte-identical to legacy pack")
+        pb_legacy = pack_forward_index(fwd, codec=codec, block_size=128)
+        pb_tagged = pack_forward_index(fwd, codec=codec, block_size=128,
+                                       vq="f16")
+        for k, v in pb_legacy.as_dict().items():
+            w = pb_tagged.as_dict().get(k)
+            same = (v is None and w is None) or (
+                v is not None and w is not None
+                and np.array_equal(np.asarray(v), np.asarray(w))
+            )
+            if not same:
+                _fail(errors, f"f16 losslessness: {codec} block field {k!r} "
+                              f"differs from legacy pack")
+                break
+        else:
+            print(f"ok f16-blocks  {codec}: byte-identical to legacy pack")
+
+        # 2. rows-kernel 3-mode parity at every quantized vq
+        for vq in QUANT_VQS:
+            arrays = {
+                k: jnp.asarray(v)
+                for k, v in layout.pack_rows(fwd, codec=codec, vq=vq).arrays().items()
+            }
+            want = np.asarray(
+                score_candidate_rows(codec, arrays, jnp.asarray(cand),
+                                     jnp.asarray(q), scale, backend="jnp")
+            )
+            ks = get_kernels(codec)
+            for mode in FUSED_MODES:
+                got = np.asarray(
+                    ks.rows_scores(arrays, jnp.asarray(cand), jnp.asarray(q),
+                                   scale, mode)
+                )
+                if not np.allclose(got, want, rtol=1e-5, atol=1e-6):
+                    _fail(errors, f"rows parity: {codec}+{vq} [{mode}]")
+                else:
+                    print(f"ok rows-kernel {codec}+{vq} [{mode}]")
+
+    # 3. end-to-end parity across all three modes, engine × codec × vq
+    hosts = {}
+    for e in available_engines():
+        impl = get_engine(e)
+        if hasattr(impl, "host_index"):
+            hosts[e] = impl.host_index(
+                fwd, RetrieverConfig(engine=e, params=ENGINE_PARAMS[e]))
+    for engine in available_engines():
+        for codec in layout.available_layouts():
+            for vq in QUANT_VQS:
+                def build(backend):
+                    c = RetrieverConfig(engine=engine, codec=codec, vq=vq,
+                                        backend=backend, k=10,
+                                        params=ENGINE_PARAMS[engine])
+                    if engine in hosts:
+                        return Retriever.from_host_index(hosts[engine], c)
+                    return Retriever.build(fwd, c)
+                ij, sj = build("jnp").search(Q)
+                ij, sj = np.asarray(ij), np.asarray(sj)
+                for backend in FUSED_MODES:
+                    ib, sb = build(backend).search(Q)
+                    if not np.array_equal(ij, np.asarray(ib)):
+                        _fail(errors, f"top-k id parity: {engine}×{codec}+{vq} "
+                                      f"[{backend}]")
+                    elif not np.allclose(sj, np.asarray(sb), rtol=1e-5,
+                                         atol=1e-6):
+                        _fail(errors, f"top-k score parity: "
+                                      f"{engine}×{codec}+{vq} [{backend}]")
+                    else:
+                        print(f"ok backend     {engine}×{codec}+{vq} "
+                              f"[{backend}]")
+
+    # 4. quality floor: exhaustive top-k overlap vs the f16 oracle
+    def flat(vq):
+        return Retriever.build(fwd, RetrieverConfig(engine="flat", vq=vq, k=10))
+    oracle_ids, _ = flat("f16").search(Q)
+    oracle_ids = np.asarray(oracle_ids)
+    for vq in QUANT_VQS:
+        ids, _ = flat(vq).search(Q)
+        ids = np.asarray(ids)
+        overlap = float(np.mean([
+            len(set(oracle_ids[i].tolist()) & set(ids[i].tolist())) / oracle_ids.shape[1]
+            for i in range(oracle_ids.shape[0])
+        ]))
+        floor = OVERLAP_FLOOR[vq]
+        if overlap < floor:
+            _fail(errors, f"quality floor: {vq} top-k overlap "
+                          f"{overlap:.3f} < {floor}")
+        else:
+            print(f"ok quality     {vq}: top-k overlap {overlap:.3f} "
+                  f"≥ {floor}")
+
+    if errors:
+        print(f"value-parity: {len(errors)} failure(s)")
+    else:
+        print("value-parity OK")
+    return len(errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
